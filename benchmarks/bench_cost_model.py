@@ -1,0 +1,80 @@
+"""Cost-model fidelity (paper §4): predicted cost vs measured runtime.
+
+The cost model only has to *rank* plans correctly for the operator to
+pick well (its constants are calibrated order-of-magnitude, not
+per-host). We report predicted vs measured seconds per plan and the
+Spearman rank correlation per distribution.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import (
+    ALGO_INDEX, ALGO_SSJOIN, OBJ_JOB, CostParams, cost_side, objective_value,
+)
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.plan import PlanSide
+from repro.data.synth import MENTION_DISTS, make_corpus
+
+from benchmarks.common import emit, execute_time, forced_plan
+
+GAMMA = 0.8
+PLANS = [
+    (ALGO_INDEX, "word"), (ALGO_INDEX, "prefix"), (ALGO_INDEX, "variant"),
+    (ALGO_SSJOIN, "word"), (ALGO_SSJOIN, "prefix"), (ALGO_SSJOIN, "lsh"),
+    (ALGO_SSJOIN, "variant"),
+]
+
+
+def _spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ca = ra - ra.mean()
+    cb = rb - rb.mean()
+    d = np.sqrt((ca * ca).sum() * (cb * cb).sum())
+    return float((ca * cb).sum() / d) if d else 0.0
+
+
+def run(iters: int = 3) -> list[dict]:
+    rows = []
+    for dist in MENTION_DISTS:
+        c = make_corpus(
+            num_docs=48, doc_len=192, vocab_size=4096, num_entities=96,
+            mention_dist=dist, mentions_per_doc=4.0, seed=23,
+        )
+        docs = np.asarray(c.doc_tokens)
+        op = EEJoinOperator(
+            c.dictionary,
+            EEJoinConfig(gamma=GAMMA, max_candidates=8192, result_capacity=16384),
+        )
+        cp = CostParams(num_devices=1, hbm_budget_bytes=2e5)
+        stats = op.gather_statistics(docs[:24], total_docs=len(docs))
+        E = c.dictionary.num_entities
+
+        preds, meas = [], []
+        for algo, scheme in PLANS:
+            sc = cost_side(stats, cp, 0, E, algo, scheme, head=True)
+            pred = objective_value(sc, OBJ_JOB)
+            plan = forced_plan(E, PlanSide(algo, scheme), PlanSide(ALGO_SSJOIN, "prefix"))
+            prepared = op.prepare(plan, cp)
+            t = execute_time(op, prepared, docs, iters=iters)
+            preds.append(pred)
+            meas.append(t)
+            rows.append({
+                "dist": dist, "plan": f"{algo}:{scheme}",
+                "predicted_s": pred, "measured_s": t,
+            })
+        rows.append({
+            "dist": dist, "plan": "SPEARMAN",
+            "predicted_s": _spearman(np.array(preds), np.array(meas)),
+            "measured_s": float("nan"),
+        })
+    return rows
+
+
+def main() -> None:
+    emit("cost_model", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Pallas-kernel microbench: interpret-mode correctness vs the pure-jnp
+oracle plus wall-time of the jnp path (the kernels target TPU; interpret
+mode timing is meaningless, so we report oracle timing + max|Δ|).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import emit, timeit
+
+
+def run() -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # ---- jaccard_verify: [N, K] pair verification
+    for N, K, L in ((256, 8, 8), (1024, 16, 8)):
+        V = 4096
+        win = jnp.asarray(rng.integers(0, V, size=(N, L)), jnp.int32)
+        ent = jnp.asarray(rng.integers(0, V, size=(N, K, L)), jnp.int32)
+        w = jnp.asarray(rng.random(V), jnp.float32)
+        win_w = w[win]
+        ent_w = w[ent] * (ent != 0)
+        for mode in ("extra", "missing"):
+            got = np.asarray(
+                __import__("repro.kernels.jaccard_verify", fromlist=["x"])
+                .jaccard_verify_pallas(win, win_w, ent, ent_w, mode=mode,
+                                       interpret=True)
+            )
+            want = np.asarray(ref.jaccard_verify_ref(win, win_w, ent, ent_w, mode))
+            t = timeit(jax.jit(
+                lambda a, b, c, d: ref.jaccard_verify_ref(a, b, c, d, mode)
+            ), win, win_w, ent, ent_w)
+            rows.append({
+                "kernel": "jaccard_verify", "shape": f"N{N}xK{K}xL{L}/{mode}",
+                "max_abs_err": float(np.abs(got - want).max()),
+                "oracle_jit_s": t,
+            })
+
+    # ---- minhash: banded signatures
+    for N, L in ((512, 8), (2048, 16)):
+        toks = jnp.asarray(rng.integers(1, 1 << 20, size=(N, L)), jnp.int32)
+        valid = jnp.asarray(rng.random((N, L)) < 0.8)
+        got = np.asarray(ops.minhash(toks, valid, bands=4, rows=2))
+        want = np.asarray(ref.minhash_ref(toks, valid, bands=4, rows=2))
+        t = timeit(jax.jit(lambda a, b: ref.minhash_ref(a, b, 4, 2)), toks, valid)
+        rows.append({
+            "kernel": "minhash", "shape": f"N{N}xL{L}",
+            "max_abs_err": float((got != want).sum()),  # exact-match count
+            "oracle_jit_s": t,
+        })
+
+    # ---- window_filter: fused Bloom probe over all windows
+    for D, T in ((4, 128), (8, 256)):
+        docs = jnp.asarray(rng.integers(1, 4096, size=(D, T)), jnp.int32)
+        bits = jnp.asarray(rng.integers(0, 2, size=(1 << 14,)), jnp.uint8)
+        got = np.asarray(ops.window_filter(docs, bits, 1 << 14, 3, 6))
+        want = np.asarray(ref.window_filter_ref(docs, bits, 1 << 14, 3, 6))
+        t = timeit(jax.jit(
+            lambda a, b: ref.window_filter_ref(a, b, 1 << 14, 3, 6)), docs, bits)
+        rows.append({
+            "kernel": "window_filter", "shape": f"D{D}xT{T}",
+            "max_abs_err": float((got != want).sum()),
+            "oracle_jit_s": t,
+        })
+    return rows
+
+
+def main() -> None:
+    emit("kernels", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline-table reader: aggregates results/dryrun/*.json (deliverable g)
+into the per-(arch × shape × mesh) table EXPERIMENTS.md §Roofline embeds.
+Run the dry-run first: ``python -m repro.launch.dryrun --all [--both-meshes]``.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import emit
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_rows(tuned: bool | None = None) -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(p.read_text())
+        is_tuned = bool(r.get("tuned"))
+        if tuned is not None and is_tuned != tuned:
+            continue
+        base = {
+            "arch": r["arch"], "shape": r["shape"], "mesh": r.get("mesh", "?"),
+            "tuned": is_tuned, "status": r["status"],
+        }
+        if r["status"] == "ok":
+            rf = r["roofline"]
+            base.update({
+                "compute_s": rf["compute_s"],
+                "memory_s": rf["memory_s"],
+                "collective_s": rf["collective_s"],
+                "bottleneck": rf["bottleneck"],
+                "step_s": rf["step_time_s"],
+                "model_gflops": rf["model_flops"] / 1e9,
+                "useful_frac": rf["useful_frac"],
+                "roofline_frac": rf["roofline_fraction"],
+                "live_gb": r.get("device_live_bytes", 0) / 1e9,
+                "fits_16g": r.get("fits_16g"),
+            })
+        else:
+            base["bottleneck"] = r.get("reason", r.get("trace", ""))[:60]
+        rows.append(base)
+    return rows
+
+
+def main() -> None:
+    rows = load_rows()
+    emit("roofline", rows)
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r.get("roofline_frac", 1.0))
+        coll = max(ok, key=lambda r: r.get("collective_s", 0.0))
+        print(f"# worst roofline fraction: {worst['arch']} {worst['shape']} "
+              f"{worst['mesh']} ({worst['roofline_frac']:.4f})")
+        print(f"# most collective-bound:  {coll['arch']} {coll['shape']} "
+              f"{coll['mesh']} ({coll['collective_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Scaling study: how the chosen plan and its runtime move as the
+dictionary and corpus grow (paper §6 scaling figures). The interesting
+output is the *crossover*: small dictionaries favour pure index plans,
+large/hot dictionaries shift the split toward ssjoin.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import CostParams
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.data.synth import make_corpus
+
+from benchmarks.common import emit, execute_time
+
+GAMMA = 0.8
+
+
+def run(iters: int = 2) -> list[dict]:
+    rows = []
+    for E in (32, 128, 512):
+        for D in (16, 64):
+            c = make_corpus(
+                num_docs=D, doc_len=192, vocab_size=8192, num_entities=E,
+                mention_dist="zipf", mentions_per_doc=4.0, seed=53,
+            )
+            docs = np.asarray(c.doc_tokens)
+            op = EEJoinOperator(
+                c.dictionary,
+                EEJoinConfig(gamma=GAMMA, max_candidates=16384,
+                             result_capacity=32768),
+            )
+            cp = CostParams(num_devices=1, hbm_budget_bytes=2e5)
+            stats = op.gather_statistics(docs[: max(8, D // 4)], total_docs=D)
+            plan = op.choose_plan(stats, cp)
+            prepared = op.prepare(plan, cp)
+            t = execute_time(op, prepared, docs, iters=iters)
+            rows.append({
+                "E": E, "docs": D,
+                "plan": f"{plan.head.algo}:{plan.head.scheme}|"
+                        f"{plan.tail.algo}:{plan.tail.scheme}",
+                "split": plan.split,
+                "predicted_s": plan.predicted_cost,
+                "measured_s": t,
+                "search_evals": plan.evaluations,
+            })
+    return rows
+
+
+def main() -> None:
+    emit("scaling", run())
+
+
+if __name__ == "__main__":
+    main()

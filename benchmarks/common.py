@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: timing, forced plans, CSV/JSON output."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.cost_model import OBJ_JOB, CostParams, SideCost
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.plan import Plan, PlanSide
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` (blocks on jax outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def forced_plan(split: int, head: PlanSide, tail: PlanSide,
+                objective: str = OBJ_JOB) -> Plan:
+    z = SideCost(0, 0, 0, 0, 0, 0, 0, 0, 0)
+    return Plan(split, head, tail, objective, 0.0, z, z, 0)
+
+
+def execute_time(op: EEJoinOperator, prepared, docs, iters: int = 3) -> float:
+    return timeit(lambda: op.execute(prepared, docs), iters=iters)
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Print a CSV block and persist JSON under results/bench/."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+    if not rows:
+        print(f"# {name}: (no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(f"# ---- {name} ----")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

@@ -1,0 +1,110 @@
+"""Render EXPERIMENTS.md tables from results/dryrun* JSON records.
+
+    PYTHONPATH=src:. python -m benchmarks.report [--section dryrun|roofline|perf]
+
+Markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OPT = ROOT / "results" / "dryrun"
+BASE = ROOT / "results" / "dryrun_baseline"
+
+
+def _load(d: pathlib.Path) -> dict:
+    out = {}
+    for p in sorted(d.glob("*.json")):
+        r = json.loads(p.read_text())
+        out[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return out
+
+
+def _f(x, n=3):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    if abs(x) >= 1000 or abs(x) < 0.001:
+        return f"{x:.2e}"
+    return f"{x:.{n}f}"
+
+
+def section_dryrun(opt: dict) -> None:
+    print("| arch | shape | mesh | status | lower+compile s | live GB/dev "
+          "| fits 16G | collectives (count) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(opt.items()):
+        if r["status"] == "ok":
+            cc = r["roofline"]["hlo"]["collective_counts"]
+            cstr = " ".join(f"{k.replace('all-','a')}:{v}" for k, v in
+                            sorted(cc.items()))
+            print(f"| {a} | {s} | {m} | ok | "
+                  f"{r.get('lower_s',0)}+{r.get('compile_s',0)} | "
+                  f"{_f(r['device_live_bytes']/1e9,2)} | "
+                  f"{'Y' if r['fits_16g'] else 'N'} | {cstr} |")
+        elif r["status"] == "skipped":
+            print(f"| {a} | {s} | {m} | skip | — | — | — | "
+                  f"{r.get('reason','')[:48]} |")
+        else:
+            print(f"| {a} | {s} | {m} | **{r['status']}** | — | — | — | |")
+
+
+def section_roofline(opt: dict, mesh: str = "16x16") -> None:
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | MODEL TFLOPs | useful frac | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (a, s, m), r in sorted(opt.items()):
+        if m != mesh or r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        print(f"| {a} | {s} | {_f(rf['compute_s'])} | {_f(rf['memory_s'])} "
+              f"| {_f(rf['collective_s'])} | {rf['bottleneck']} | "
+              f"{_f(rf['model_flops']/1e12,1)} | {_f(rf['useful_frac'])} | "
+              f"{_f(rf['roofline_fraction'],4)} |")
+
+
+def section_perf(opt: dict, base: dict) -> None:
+    print("| arch | shape | mesh | term | baseline s | optimized s | Δ |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(opt):
+        ro, rb = opt.get(key), base.get(key)
+        if not ro or not rb or ro["status"] != "ok" or rb["status"] != "ok":
+            continue
+        a, s, m = key
+        fo, fb = ro["roofline"], rb["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s", "step_time_s"):
+            b, o = fb[term], fo[term]
+            if b <= 0:
+                continue
+            delta = (b - o) / b * 100.0
+            if abs(delta) < 1.0 and term != "step_time_s":
+                continue
+            print(f"| {a} | {s} | {m} | {term[:-2]} | {_f(b)} | {_f(o)} | "
+                  f"{delta:+.0f}% |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=("all", "dryrun", "roofline", "perf"))
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    opt = _load(OPT)
+    if args.section in ("all", "dryrun"):
+        print("\n### Dry-run (optimized build)\n")
+        section_dryrun(opt)
+    if args.section in ("all", "roofline"):
+        print(f"\n### Roofline ({args.mesh})\n")
+        section_roofline(opt, args.mesh)
+    if args.section in ("all", "perf"):
+        base = _load(BASE)
+        print("\n### Perf deltas (baseline -> optimized)\n")
+        section_perf(opt, base)
+
+
+if __name__ == "__main__":
+    main()

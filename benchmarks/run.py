@@ -1,0 +1,63 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Sections:
+    algorithms   §6 main table (plans × mention distributions)
+    cost_model   §4 fidelity (predicted vs measured + rank corr.)
+    search       §5.2 plan search vs exhaustive oracle
+    signatures   §3.3 signature study (shuffle bytes / skew / recall)
+    scaling      §6 dictionary/corpus scaling + plan crossover
+    kernels      Pallas kernels vs jnp oracle (interpret mode)
+    roofline     deliverable (g) reader over results/dryrun/
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    bench_algorithms,
+    bench_cost_model,
+    bench_hybrid,
+    bench_kernels,
+    bench_roofline,
+    bench_scaling,
+    bench_search,
+    bench_signatures,
+)
+
+SECTIONS = [
+    ("algorithms", bench_algorithms.main),
+    ("hybrid", bench_hybrid.main),
+    ("cost_model", bench_cost_model.main),
+    ("search", bench_search.main),
+    ("signatures", bench_signatures.main),
+    ("scaling", bench_scaling.main),
+    ("kernels", bench_kernels.main),
+    ("roofline", bench_roofline.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = []
+    for name, fn in SECTIONS:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# [{name}] done in {time.time() - t0:.1f}s\n", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# [{name}] FAILED\n{traceback.format_exc()}\n", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Plan-space explorer: how the chosen plan moves with the inputs.
+
+    PYTHONPATH=src python examples/plan_explorer.py
+
+Sweeps the knobs the paper identifies as decision drivers — mention
+distribution, similarity threshold γ, device count, and HBM budget —
+and prints which plan the cost model picks for each setting, plus the
+predicted cost curve across split points for one illustrative pair
+(the curve the §5.2 search descends).
+"""
+import numpy as np
+
+from repro.core.cost_model import (
+    ALGO_INDEX, ALGO_SSJOIN, OBJ_JOB, CostParams, cost_side, objective_value,
+)
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.plan import PlanSide
+from repro.data.synth import MENTION_DISTS, make_corpus
+
+E = 256
+print(f"{'dist':8s} {'gamma':5s} {'devs':4s} {'budget':8s}  chosen plan")
+for dist in MENTION_DISTS:
+    corpus = make_corpus(
+        num_docs=32, doc_len=160, vocab_size=8192, num_entities=E,
+        mention_dist=dist, mentions_per_doc=4.0, seed=5,
+    )
+    for gamma in (0.6, 0.9):
+        op = EEJoinOperator(corpus.dictionary, EEJoinConfig(gamma=gamma))
+        stats = op.gather_statistics(corpus.doc_tokens[:16], total_docs=32)
+        for devs, budget in ((1, 2e5), (256, 2e4), (256, 5e4)):
+            plan = op.choose_plan(
+                stats, CostParams(num_devices=devs, hbm_budget_bytes=budget)
+            )
+            print(f"{dist:8s} {gamma:5.2f} {devs:4d} {budget:8.0e}  "
+                  f"{plan.head.algo}:{plan.head.scheme} | "
+                  f"{plan.tail.algo}:{plan.tail.scheme} @ {plan.split:4d} "
+                  f"cost={plan.predicted_cost:.2e}s")
+
+# the split-cost curve for one pair (what the binary search walks)
+corpus = make_corpus(num_docs=32, doc_len=160, vocab_size=8192,
+                     num_entities=E, mention_dist="zipf", seed=5)
+op = EEJoinOperator(corpus.dictionary, EEJoinConfig(gamma=0.8))
+stats = op.gather_statistics(corpus.doc_tokens[:16], total_docs=32)
+cp = CostParams(num_devices=256, hbm_budget_bytes=2e4)
+head, tail = PlanSide(ALGO_INDEX, "variant"), PlanSide(ALGO_SSJOIN, "prefix")
+print(f"\nsplit-cost curve for {head.algo}:{head.scheme} | "
+      f"{tail.algo}:{tail.scheme} (E={E}):")
+for p in range(0, E + 1, E // 8):
+    hc = cost_side(stats, cp, 0, p, head.algo, head.scheme, head=True)
+    tc = cost_side(stats, cp, p, E, tail.algo, tail.scheme, head=False)
+    c = objective_value(hc, OBJ_JOB) + objective_value(tc, OBJ_JOB)
+    bar = "#" * int(min(c, 2e-2) / 2e-2 * 50)
+    print(f"  p={p:4d}  {c:.3e}s  {bar}")

@@ -1,0 +1,78 @@
+"""End-to-end LM training driver with the EE-Join annotation stage.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--wide]
+
+Trains a decoder-only LM (reduced olmo-family config; --wide uses a
+~100M-parameter d=768/12L config — the assignment's end-to-end scale,
+a few hundred steps of which are CPU-feasible but slow) on the synthetic
+corpus. The data pipeline runs the paper's operator first: every batch
+carries an ``entity_mask`` tagging dictionary-entity mentions, and the
+loss up-weights entity tokens (entity-aware training, one of the
+operator's production uses). Checkpoints + deterministic resume come
+from the shared trainer (kill + relaunch with --resume to test).
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.registry import get_smoke_config
+from repro.core.cost_model import CostParams
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.data.pipeline import PipelineConfig, batches
+from repro.data.synth import make_corpus
+from repro.launch.mesh import make_cpu_mesh
+from repro.models.model import build_model
+from repro.models.sharding import ShardingRules
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import TrainerConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--wide", action="store_true", help="~100M-param config")
+ap.add_argument("--resume", action="store_true")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+args = ap.parse_args()
+
+cfg = get_smoke_config("olmo-1b")
+if args.wide:
+    cfg = dataclasses.replace(
+        cfg, num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+        d_ff=3072, vocab_size=32768,
+    )
+mesh = make_cpu_mesh(1, 1)
+model = build_model(cfg, ShardingRules(mesh))
+n_params = sum(
+    int(x.size) for x in jax.tree.leaves(
+        jax.eval_shape(lambda k: model.init(k)[0], jax.random.PRNGKey(0))
+    )
+)
+print(f"model: {cfg.num_layers}L d={cfg.d_model} -> {n_params/1e6:.1f}M params")
+
+corpus = make_corpus(
+    num_docs=128, doc_len=256, vocab_size=cfg.vocab_size, num_entities=96,
+    mention_dist="zipf", mentions_per_doc=3.0, seed=0,
+)
+op = EEJoinOperator(corpus.dictionary, EEJoinConfig(gamma=0.8))
+stats = op.gather_statistics(corpus.doc_tokens[:16], total_docs=128)
+plan = op.choose_plan(stats, CostParams(num_devices=1))
+prepared = op.prepare(plan)
+print(f"EE-Join plan: {plan.head.algo}:{plan.head.scheme}|"
+      f"{plan.tail.algo}:{plan.tail.scheme}@{plan.split}")
+
+data = batches(
+    corpus, PipelineConfig(seq_len=128, global_batch=8, annotate=True),
+    op, prepared,
+)
+out = train(
+    model, data,
+    AdamWConfig(lr=3e-4, total_steps=args.steps, warmup_steps=20),
+    TrainerConfig(total_steps=args.steps, log_every=max(args.steps // 10, 1),
+                  checkpoint_every=100, checkpoint_dir=args.ckpt_dir),
+    mesh, resume=args.resume,
+)
+first, last = out["history"][0], out["history"][-1]
+print(f"loss: {first['loss']:.3f} (step {first['step']}) -> "
+      f"{last['loss']:.3f} (step {last['step']})")
+assert last["loss"] < first["loss"], "training must reduce loss"
+print("ok")

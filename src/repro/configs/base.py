@@ -1,0 +1,115 @@
+"""Model / run configuration schema shared by all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+# block kinds usable in a layer-group pattern
+BLK_ATTN = "attn"  # global causal self-attention
+BLK_LOCAL = "local_attn"  # sliding-window causal self-attention
+BLK_RGLRU = "rglru"  # Griffin RG-LRU recurrent block
+BLK_MLSTM = "mlstm"  # xLSTM matrix-memory block
+BLK_SLSTM = "slstm"  # xLSTM scalar-memory block
+BLK_XATTN = "cross_attn"  # cross-attention (VLM / enc-dec decoder)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    # --- norm / activation / embedding
+    norm: str = "rmsnorm"  # rmsnorm | layernorm | layernorm_nonparam
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # --- layer-group pattern: scan runs over groups of these blocks.
+    # Default single-block group ("attn",) x num_layers.
+    block_pattern: tuple[str, ...] = (BLK_ATTN,)
+    extra_tail_blocks: tuple[str, ...] = ()  # unrolled remainder layers
+    # how many of num_layers one group accounts for (0 -> len(pattern));
+    # whisper's (self, cross) pair counts as ONE layer.
+    layers_per_group: int = 0
+    local_window: int = 2048
+    # --- MoE
+    num_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # --- cross-attention context (VLM image tokens / encoder frames)
+    context_len: int = 0  # 0 -> no cross-attn context input
+    context_dim: int = 0  # raw context embedding dim (projected to d_model)
+    # --- encoder-decoder (whisper): encoder is bidirectional attn stack
+    encoder_layers: int = 0
+    encoder_len: int = 0
+    # --- numerics / memory levers
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_chunk: int = 1024  # kv-block size of the blockwise attention
+    # flash-attention custom-VJP backward (§Perf hillclimb #1): identical
+    # math, saves (out, lse) instead of the per-chunk-pair P matrices.
+    # False reproduces the pre-hillclimb baseline backward.
+    use_flash: bool = True
+    # chunkwise-parallel mLSTM (§Perf hillclimb, xlstm cell): 0 = exact
+    # sequential scan baseline; >0 = chunk length of the parallel form.
+    mlstm_chunk: int = 128
+    # sLSTM scan unroll factor (sequential by nature; this amortises
+    # while-loop overhead and weight re-reads).
+    slstm_unroll: int = 8
+    # long_500k applicability (sub-quadratic archs only)
+    supports_long_context: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def num_groups(self) -> int:
+        lpg = self.layers_per_group or len(self.block_pattern)
+        n = self.num_layers - len(self.extra_tail_blocks)
+        assert n % lpg == 0, (
+            f"{self.name}: {n} layers not divisible by group span {lpg}"
+        )
+        return n // lpg
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 128 for clean TP sharding."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell from the assignment."""
+
+    name: str  # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.mode == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs resolved per (arch x shape x mesh)."""
+
+    microbatch_per_device: int = 0  # 0 -> whole per-device batch at once
+    use_remat: bool = True
+    logits_fp32: bool = True

@@ -1,0 +1,33 @@
+"""DBRX-132B [hf:databricks/dbrx-base]: 40L d6144 48H (kv=8) v100352,
+MoE 16 experts top-4, d_ff=10752 per expert.
+
+16 experts on a 16-way model axis -> exactly one expert per device in the
+shard_map MoE (zero masked-compute waste). train_4k needs per-device
+microbatching (see configs/runtime table in EXPERIMENTS.md).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=10752,
+    vocab_size=100352,
+    norm="layernorm",
+    act="swiglu",
+    num_experts=16,
+    top_k=4,
+    rope_theta=500_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=96, vocab_size=256, num_experts=4, top_k=2, attn_chunk=32,
+    )

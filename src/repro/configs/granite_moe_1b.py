@@ -1,0 +1,30 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite]: 24L d1024 16H (kv=8) v49155,
+MoE 32 experts top-8, d_ff=512 per expert (fine-grained).
+
+Vocab padded 49155 -> 49280 for clean 128-aligned TP sharding.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    norm="rmsnorm",
+    act="swiglu",
+    num_experts=32,
+    top_k=8,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=64, vocab_size=256, num_experts=4, top_k=2, attn_chunk=32,
+    )

@@ -1,0 +1,35 @@
+"""Llama-3.2-11B-Vision [hf:meta-llama]: 40L d4096 32H (kv=8) ff14336
+v128256 — every 5th layer is a tanh-gated cross-attention layer over
+image-patch embeddings (8 cross layers in 40).
+
+The vision frontend is a STUB per the assignment: input_specs() provides
+1601 precomputed patch embeddings of width 4096.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    norm="rmsnorm",
+    act="swiglu",
+    rope_theta=500_000.0,
+    block_pattern=("attn", "attn", "attn", "attn", "cross_attn_gated"),
+    context_len=1601,
+    context_dim=4096,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=5, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=256, context_len=17, context_dim=64,
+        attn_chunk=32,
+    )

@@ -1,0 +1,28 @@
+"""OLMo-1B [arXiv:2402.00838; hf]: 16L d2048 16H (kv=16) ff8192 v50304.
+
+Distinguishing trait: non-parametric LayerNorm (no learnable affine).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmo-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=50304,
+    norm="layernorm_nonparam",
+    act="swiglu",
+    rope_theta=10_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, attn_chunk=32,
+    )

@@ -1,0 +1,34 @@
+"""RecurrentGemma-9B [arXiv:2402.19427]: 38L d4096 16H (kv=1, MQA)
+ff12288 v256000 — Griffin: repeating (RG-LRU, RG-LRU, local-attn) with a
+2048 sliding window; 38 = 12*3 + 2 trailing recurrent blocks.
+
+RG-LRU state is O(1) and attention is windowed -> runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    norm="rmsnorm",
+    act="geglu",
+    block_pattern=("rglru", "rglru", "local_attn"),
+    extra_tail_blocks=("rglru", "rglru"),
+    local_window=2048,
+    supports_long_context=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=8, d_model=64, num_heads=2, num_kv_heads=1,
+        d_ff=128, vocab_size=256, local_window=16, attn_chunk=16,
+        extra_tail_blocks=("rglru", "rglru"),
+    )

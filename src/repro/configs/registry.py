@@ -1,0 +1,57 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from __future__ import annotations
+
+from repro.configs import (
+    dbrx_132b,
+    glm4_9b,
+    granite_moe_1b,
+    llama32_vision_11b,
+    olmo_1b,
+    recurrentgemma_9b,
+    starcoder2_7b,
+    whisper_large_v3,
+    xlstm_125m,
+    yi_9b,
+)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+_MODULES = {
+    "olmo-1b": olmo_1b,
+    "starcoder2-7b": starcoder2_7b,
+    "yi-9b": yi_9b,
+    "glm4-9b": glm4_9b,
+    "xlstm-125m": xlstm_125m,
+    "granite-moe-1b-a400m": granite_moe_1b,
+    "dbrx-132b": dbrx_132b,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "whisper-large-v3": whisper_large_v3,
+}
+
+ARCH_IDS = tuple(_MODULES.keys())
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether a shape cell applies to an arch (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full attention is O(S^2)/O(S) per token at 512k; skipped per assignment (sub-quadratic archs only)"
+    return True, ""
+
+
+def all_cells():
+    """All 40 (arch, shape) cells with applicability flags."""
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(cfg, shape)
+            out.append((arch, shape.name, ok, why))
+    return out

@@ -1,0 +1,30 @@
+"""StarCoder2-7B [arXiv:2402.19173; hf]: 32L d4608 36H (kv=4) ff18432 v49152.
+
+36 q-heads do not divide a 16-way model axis: the baseline replicates the
+head dim (params still FSDP-sharded); §Perf logs the head-padding
+hillclimb.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4608,
+    num_heads=36,
+    num_kv_heads=4,
+    d_ff=18432,
+    vocab_size=49152,
+    norm="layernorm",
+    act="gelu",
+    rope_theta=100_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=72, num_heads=6, num_kv_heads=2,
+        d_ff=160, vocab_size=256, attn_chunk=32,
+    )

@@ -1,0 +1,35 @@
+"""Whisper-large-v3 [arXiv:2212.04356]: enc-dec, 32+32L d1280 20H ff5120
+v51866 (padded -> 51968). Conv frontend is a STUB: input_specs() provides
+1500 precomputed frame embeddings; the encoder is the bidirectional
+attention stack, each decoder layer is (self-attn, cross-attn + MLP).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,  # decoder layers; encoder_layers below
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    norm="layernorm",
+    act="gelu",
+    block_pattern=("attn_nomlp", "cross_attn"),
+    layers_per_group=1,
+    context_len=1500,
+    context_dim=1280,
+    encoder_layers=32,
+    encoder_len=1500,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=256, context_len=12, context_dim=64,
+        encoder_layers=2, encoder_len=12, attn_chunk=32,
+    )

@@ -1,0 +1,30 @@
+"""xLSTM-125M [arXiv:2405.04517]: 12L d768 4H v50304, alternating
+mLSTM/sLSTM blocks (d_ff=0: the blocks carry their own projections).
+
+Recurrent state is O(1) in sequence length -> runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    norm="layernorm",
+    act="gelu",
+    block_pattern=("mlstm", "slstm"),
+    supports_long_context=True,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+        vocab_size=256, attn_chunk=32,
+    )

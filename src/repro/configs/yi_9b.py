@@ -1,0 +1,27 @@
+"""Yi-9B [arXiv:2403.04652; hf]: 48L d4096 32H (kv=4) ff11008 v64000.
+
+Llama-architecture GQA decoder."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    num_layers=48,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    norm="rmsnorm",
+    act="swiglu",
+    rope_theta=10_000.0,
+)
+
+
+def smoke_config() -> ModelConfig:
+    import dataclasses
+
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=256, attn_chunk=32,
+    )

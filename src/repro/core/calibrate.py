@@ -1,0 +1,87 @@
+"""Cost-constant calibration (the paper's "means to gather data
+statistics leveraged by the cost model", applied to the constants).
+
+Def. 3/4 are linear in per-record constants (probe, verify, signature
+costs). Their defaults are order-of-magnitude hardware estimates; on a
+concrete host the right values differ enough to misrank plans in
+crossover regimes (bench_hybrid exposed this: a multi-pass index plan
+predicted cheaper than a pure ssjoin plan measured 14x faster).
+
+``calibrate`` executes ONE small pure plan per core algorithm on a
+document sample, compares measured seconds with predicted seconds, and
+rescales each side's record-work constants by the measured/predicted
+ratio. Side-level scaling preserves the monotonicity that Lemma 1 needs
+(every term is multiplied by a positive scalar), so the §5.2 search
+remains correct; only the relative weighting between algorithm families
+changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.cost_model import (
+    ALGO_INDEX, ALGO_SSJOIN, OBJ_JOB, CostParams, cost_side, objective_value,
+)
+from repro.core.plan import Plan, PlanSide
+from repro.core.cost_model import SideCost
+
+
+def _forced(split: int, head: PlanSide, tail: PlanSide) -> Plan:
+    z = SideCost(0, 0, 0, 0, 0, 0, 0, 0, 0)
+    return Plan(split, head, tail, OBJ_JOB, 0.0, z, z, 0)
+
+
+def _time(fn, iters: int = 2) -> float:
+    jax.block_until_ready(fn())  # compile + warm
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def calibrate(op, sample_docs, params: CostParams,
+              scheme: str = "variant") -> CostParams:
+    """Returns CostParams with per-family constants rescaled to this host.
+
+    ``op`` is an EEJoinOperator; ``sample_docs`` a small [D, T] array.
+    """
+    stats = op.gather_statistics(sample_docs, total_docs=len(sample_docs))
+    E = op.dictionary.num_entities
+
+    # measured seconds per family on the sample
+    plan_idx = _forced(E, PlanSide(ALGO_INDEX, scheme),
+                       PlanSide(ALGO_SSJOIN, scheme))
+    prep_idx = op.prepare(plan_idx, params)
+    t_idx = _time(lambda: op.execute(prep_idx, sample_docs))
+
+    plan_ssj = _forced(0, PlanSide(ALGO_INDEX, scheme),
+                       PlanSide(ALGO_SSJOIN, scheme))
+    prep_ssj = op.prepare(plan_ssj, params)
+    t_ssj = _time(lambda: op.execute(prep_ssj, sample_docs))
+
+    # predicted seconds on the same sample (num_devices=1)
+    p1 = dataclasses.replace(params, num_devices=1)
+    pred_idx = objective_value(
+        cost_side(stats, p1, 0, E, ALGO_INDEX, scheme, head=True), OBJ_JOB)
+    pred_ssj = objective_value(
+        cost_side(stats, p1, 0, E, ALGO_SSJOIN, scheme, head=False), OBJ_JOB)
+
+    k_idx = t_idx / max(pred_idx, 1e-12)
+    k_ssj = t_ssj / max(pred_ssj, 1e-12)
+    sig = {s: params.sig_cost(s) * k_ssj
+           for s in ("word", "prefix", "lsh", "variant")}
+    return dataclasses.replace(
+        params,
+        c_probe_index=params.c_probe_index * k_idx,
+        c_verify_index=params.c_verify_index * k_idx,
+        c_probe=params.c_probe * k_ssj,
+        c_verify_pair=params.c_verify_pair * k_ssj,
+        c_sig_per_window=sig,
+    )

@@ -1,0 +1,226 @@
+"""EE-Join cost model (paper §4, Definitions 3 & 4) re-derived for a TPU mesh.
+
+Definition 3 (Index-on-Entities), job completion time:
+
+    Cost^index = (|C| / |M|) * C_lookup * ceil(|E| / M_e)
+
+Definition 4 (ISHFilter & SSJoin):
+
+    Cost^ssj = (|C| / |M|) * C_sig + |Sig| * (C_shuffle + C_verify)
+
+We keep the exact structure, re-binding each constant to the TPU memory /
+interconnect hierarchy:
+
+* ``|M|``        -> number of devices in the mesh (mappers == shards).
+* ``M_e``        -> per-device HBM budget for the replicated index; the
+                    index is partitioned and candidates are re-scanned
+                    once per partition (the paper's multi-pass).
+* ``C_lookup``   -> HBM gather of the postings rows + the verify
+                    arithmetic for the candidates they produce.
+* ``C_shuffle``  -> all_to_all bytes over ICI. *Work-done* counts
+                    aggregate bytes over aggregate bandwidth;
+                    *job-completion* divides per-device bytes by a single
+                    device's link bandwidth and multiplies by the
+                    measured signature skew (the synchronous-mesh
+                    analogue of MapReduce stragglers).
+* ``C_sig`` / ``C_verify`` -> per-record VPU work, calibrated constants.
+
+Both objectives from the paper are implemented:
+
+* ``work_done``       — aggregate chip-seconds across the mesh,
+* ``job_completion``  — critical-path seconds (max over devices), i.e.
+                        the work-done divided by |M| with skew
+                        multipliers on the shuffle + the per-pass
+                        barrier.
+
+All inputs come from ``EEStats`` so any entity range evaluates in O(1);
+monotonicity over the frequency-sorted entity order (Lemma 1) follows
+from every term being a nonneg. prefix-sum or survivor curve — tested
+property-based in ``tests/test_cost_model.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.stats import EEStats
+
+OBJ_WORK = "work_done"
+OBJ_JOB = "job_completion"
+OBJECTIVES = (OBJ_WORK, OBJ_JOB)
+
+ALGO_INDEX = "index"
+ALGO_SSJOIN = "ssjoin"
+
+# (algorithm, scheme) options the operator searches over (§3.5: the two
+# kept algorithms; index kinds / signature schemes are the parameters).
+INDEX_KINDS = ("word", "prefix", "variant")
+SSJ_SCHEMES = ("word", "prefix", "lsh", "variant")
+ALL_OPTIONS: tuple[tuple[str, str], ...] = tuple(
+    [(ALGO_INDEX, k) for k in INDEX_KINDS] + [(ALGO_SSJOIN, s) for s in SSJ_SCHEMES]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Hardware + calibrated per-record constants (seconds / bytes)."""
+
+    num_devices: int = 256
+    hbm_budget_bytes: float = 4e9  # M_e: index budget per device
+    ici_bytes_per_s: float = 50e9  # per-device all_to_all throughput
+    # calibrated per-record costs (seconds); defaults are TPU-scale
+    # estimates, benchmarks re-calibrate on the host (see calibrate()).
+    c_enum_per_window: float = 2e-10
+    c_filter_per_window: float = 5e-10
+    c_sig_per_window: dict | None = None  # scheme -> s/window
+    c_probe: float = 2e-9  # ssjoin: per table/bucket probe
+    c_verify_pair: float = 6e-9  # ssjoin: per (cand, entity) verification
+    # index-family constants, calibrated separately (core/calibrate.py) —
+    # a postings probe touches padded index rows and repeats per pass, so
+    # its real cost differs from a hash-table probe by large factors.
+    c_probe_index: float = 2e-9
+    c_verify_index: float = 6e-9
+    shuffle_bytes_per_record: float = 4.0 * 8 + 16.0  # window tokens + meta
+    dict_prep_per_entity: float = 2e-7  # host-side build, amortised
+
+    def sig_cost(self, scheme: str) -> float:
+        d = self.c_sig_per_window or {}
+        default = {"word": 2e-9, "prefix": 2e-9, "lsh": 1.2e-8, "variant": 4e-9}
+        return d.get(scheme, default[scheme])
+
+
+@dataclasses.dataclass(frozen=True)
+class SideCost:
+    """Cost breakdown of one plan side (seconds, job-completion basis)."""
+
+    enum: float
+    filter: float
+    sig: float
+    shuffle: float
+    lookup: float
+    verify: float
+    passes: int
+    work_done: float  # chip-seconds
+    job_completion: float  # wall seconds
+
+    @property
+    def total(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _zero_side() -> SideCost:
+    return SideCost(0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0, 0.0, 0.0)
+
+
+def cost_index(
+    stats: EEStats, params: CostParams, a: int, b: int, kind: str, head: bool
+) -> SideCost:
+    """Def. 3 for entity range [a, b) processed by Index-on-Entities."""
+    if a >= b:
+        return _zero_side()
+    M = params.num_devices
+    p = b if head else a
+    surv = stats.head_survivors(p) if head else stats.tail_survivors(p)
+    idx_bytes = (
+        stats.head_index_bytes(kind, p) if head else stats.tail_index_bytes(kind, p)
+    )
+    passes = max(1, math.ceil(idx_bytes / params.hbm_budget_bytes))
+
+    enum = stats.num_windows * params.c_enum_per_window
+    filt = stats.num_windows * params.c_filter_per_window
+    # per pass: every surviving candidate probes its tokens' postings rows
+    probes = surv * stats.avg_sigs_per_window
+    verify_pairs = stats.range_sum(f"verify_{kind}", a, b)
+    lookup = passes * probes * params.c_probe_index
+    verify = verify_pairs * params.c_verify_index
+
+    work = enum + filt + lookup + verify  # aggregate record-work
+    per_dev = work / M
+    return SideCost(
+        enum=enum / M,
+        filter=filt / M,
+        sig=0.0,
+        shuffle=0.0,
+        lookup=lookup / M,
+        verify=verify / M,
+        passes=passes,
+        work_done=work,
+        job_completion=per_dev,
+    )
+
+
+def cost_ssjoin(
+    stats: EEStats, params: CostParams, a: int, b: int, scheme: str, head: bool
+) -> SideCost:
+    """Def. 4 for entity range [a, b) processed by ISHFilter & SSJoin."""
+    if a >= b:
+        return _zero_side()
+    M = params.num_devices
+    p = b if head else a
+    surv = stats.head_survivors(p) if head else stats.tail_survivors(p)
+
+    if scheme in ("word", "prefix"):
+        sigs_per_window = stats.avg_sigs_per_window
+    elif scheme == "lsh":
+        sigs_per_window = 4.0  # LshParams.bands default; stats carry skew
+    else:  # variant
+        sigs_per_window = 1.0
+    emissions = surv * sigs_per_window  # |Sig|
+
+    enum = stats.num_windows * params.c_enum_per_window
+    filt = stats.num_windows * params.c_filter_per_window
+    sig = surv * params.sig_cost(scheme)
+    shuffle_bytes = emissions * params.shuffle_bytes_per_record
+    verify_pairs = stats.range_sum(f"verify_{scheme}", a, b)
+    probes = emissions
+    verify = probes * params.c_probe + verify_pairs * params.c_verify_pair
+
+    work = enum + filt + sig + verify
+    shuffle_work_s = shuffle_bytes / params.ici_bytes_per_s  # aggregate
+    skew = stats.sig_skew.get(scheme, 1.0)
+    shuffle_job_s = (shuffle_bytes / M) / params.ici_bytes_per_s * skew
+
+    return SideCost(
+        enum=enum / M,
+        filter=filt / M,
+        sig=sig / M,
+        shuffle=shuffle_job_s,
+        lookup=probes * params.c_probe / M,
+        verify=verify_pairs * params.c_verify_pair / M,
+        passes=1,
+        work_done=work + shuffle_work_s,
+        job_completion=(work / M) * skew_mix(skew) + shuffle_job_s,
+    )
+
+
+def skew_mix(skew: float, alpha: float = 0.5) -> float:
+    """Verification work lands on signature owners: partially skewed.
+
+    A bucket-skew of ``s`` inflates the critical path of the reducer-side
+    work; map-side work stays balanced. ``alpha`` mixes the two.
+    """
+    return 1.0 + alpha * (skew - 1.0)
+
+
+def cost_side(
+    stats: EEStats,
+    params: CostParams,
+    a: int,
+    b: int,
+    algo: str,
+    scheme: str,
+    head: bool,
+) -> SideCost:
+    if algo == ALGO_INDEX:
+        return cost_index(stats, params, a, b, scheme, head)
+    if algo == ALGO_SSJOIN:
+        return cost_ssjoin(stats, params, a, b, scheme, head)
+    raise ValueError(f"unknown algorithm {algo!r}")
+
+
+def objective_value(side: SideCost, objective: str) -> float:
+    if objective == OBJ_WORK:
+        return side.work_done
+    if objective == OBJ_JOB:
+        return side.job_completion
+    raise ValueError(f"unknown objective {objective!r}")

@@ -1,0 +1,215 @@
+"""The EE-Join operator: statistics → cost-based plan choice → execution.
+
+This is the paper's contribution as a composable module. Usage::
+
+    op = EEJoinOperator(dictionary, EEJoinConfig(gamma=0.8))
+    stats = op.gather_statistics(sample_docs, total_docs=len(corpus))
+    plan = op.choose_plan(stats)
+    prepared = op.prepare(plan)
+    matches = op.execute(prepared, doc_tokens)          # single shard
+    matches = op.execute_distributed(prepared, sharded) # shard_map (launch/)
+
+The operator is deliberately split into prepare (host-side structure
+builds, done once) and execute (pure jitted device function) so the same
+prepared plan runs on a laptop shard or a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import (
+    ALGO_INDEX,
+    ALGO_SSJOIN,
+    ALL_OPTIONS,
+    OBJ_JOB,
+    CostParams,
+)
+from repro.core.dictionary import Dictionary
+from repro.core.filter import build_ish_filter
+from repro.core.plan import Plan, PlanSide
+from repro.core.search import search_plan
+from repro.core.signatures import LshParams, entity_signatures
+from repro.core.stats import EEStats, gather_stats
+from repro.extraction import engine
+from repro.extraction.results import Matches, merge_matches
+
+
+@dataclasses.dataclass(frozen=True)
+class EEJoinConfig:
+    gamma: float = 0.8
+    sim_name: str = "extra"
+    objective: str = OBJ_JOB
+    use_filter: bool = True
+    max_candidates: int = 8192
+    result_capacity: int = 16384
+    lsh: LshParams = LshParams()
+    options: Sequence[tuple[str, str]] = ALL_OPTIONS
+    use_kernel: bool = False
+    filter_bits: int = 1 << 18
+
+
+@dataclasses.dataclass
+class PreparedSide:
+    """One executable side of a plan (device-resident structures)."""
+
+    side: PlanSide
+    params: engine.ExtractParams
+    ddict: engine.DeviceDictionary
+    flt: tuple | None  # (bits, num_bits, num_hashes)
+    index_parts: list[engine.BuiltIndex] | None = None
+    sig_table: engine.SigTable | None = None
+
+
+@dataclasses.dataclass
+class PreparedPlan:
+    plan: Plan
+    sides: list[PreparedSide]
+    max_entity_len: int
+
+
+class EEJoinOperator:
+    def __init__(self, dictionary: Dictionary, config: EEJoinConfig = EEJoinConfig()):
+        self.dictionary = dictionary
+        self.config = config
+
+    # -- §"a means to gather data statistics" --------------------------------
+    def gather_statistics(
+        self, sample_docs: np.ndarray, total_docs: int, num_shuffle_buckets: int = 256
+    ) -> EEStats:
+        return gather_stats(
+            self.dictionary,
+            sample_docs,
+            total_docs,
+            self.config.gamma,
+            lsh=self.config.lsh,
+            num_shuffle_buckets=num_shuffle_buckets,
+        )
+
+    # -- §5 optimisation ------------------------------------------------------
+    def choose_plan(self, stats: EEStats, cost_params: CostParams | None = None) -> Plan:
+        return search_plan(
+            stats,
+            cost_params or CostParams(num_devices=1),
+            self.config.objective,
+            options=self.config.options,
+        )
+
+    # -- plan -> device structures -------------------------------------------
+    def _prepare_side(
+        self, side: PlanSide, a: int, b: int, hbm_budget: float
+    ) -> PreparedSide | None:
+        if a >= b:
+            return None
+        cfg = self.config
+        sl = self.dictionary.slice(a, b)
+        ddict = engine.DeviceDictionary.from_host(sl, entity_offset=a)
+        flt = None
+        if cfg.use_filter:
+            f = build_ish_filter(sl, cfg.gamma, num_bits=cfg.filter_bits)
+            flt = (jnp.asarray(f.bits), f.num_bits, f.num_hashes)
+        params = engine.ExtractParams(
+            gamma=cfg.gamma,
+            scheme=side.scheme,
+            sim_name=cfg.sim_name,
+            use_filter=cfg.use_filter,
+            max_candidates=cfg.max_candidates,
+            result_capacity=cfg.result_capacity,
+            lsh=cfg.lsh,
+            use_kernel=cfg.use_kernel,
+        )
+        prepared = PreparedSide(side=side, params=params, ddict=ddict, flt=flt)
+        if side.algo == ALGO_INDEX:
+            prepared.index_parts = engine.build_index_partitions(
+                sl, side.scheme, cfg.gamma, int(hbm_budget), entity_offset=a
+            )
+        elif side.algo == ALGO_SSJOIN:
+            esig = entity_signatures(side.scheme, sl, cfg.gamma, cfg.lsh)
+            prepared.sig_table = engine.build_sig_table(esig, entity_offset=a)
+        else:
+            raise ValueError(side.algo)
+        return prepared
+
+    def prepare(
+        self, plan: Plan, cost_params: CostParams | None = None
+    ) -> PreparedPlan:
+        cp = cost_params or CostParams(num_devices=1)
+        E = self.dictionary.num_entities
+        sides = []
+        head = self._prepare_side(plan.head, 0, plan.split, cp.hbm_budget_bytes)
+        tail = self._prepare_side(plan.tail, plan.split, E, cp.hbm_budget_bytes)
+        for s in (head, tail):
+            if s is not None:
+                sides.append(s)
+        return PreparedPlan(plan=plan, sides=sides, max_entity_len=self.dictionary.max_len)
+
+    # -- distributed preparation / execution ----------------------------------
+    def prepare_distributed(
+        self, plan: Plan, n_workers: int, cost_params: CostParams | None = None
+    ) -> PreparedPlan:
+        """Like prepare(), but SSJoin sides get owner-sharded signature
+        tables (stacked [n_workers, ...]) for the all_to_all shuffle."""
+        from repro.extraction.distributed import build_sharded_sig_tables
+
+        prepared = self.prepare(plan, cost_params)
+        for side in prepared.sides:
+            if side.side.algo == ALGO_SSJOIN:
+                a = side.ddict.entity_offset
+                b = a + side.ddict.tokens.shape[0]
+                esig = entity_signatures(
+                    side.side.scheme,
+                    self.dictionary.slice(a, b),
+                    self.config.gamma,
+                    self.config.lsh,
+                )
+                side.sig_table, _ = build_sharded_sig_tables(
+                    esig, n_workers, entity_offset=a
+                )
+        return prepared
+
+    def execute_distributed(
+        self, prepared: PreparedPlan, doc_tokens, mesh, axis_names: tuple[str, ...]
+    ):
+        """Run every plan side on the mesh; returns (list[Matches], diags)."""
+        from repro.extraction import distributed as D
+
+        out, diags = [], []
+        for side in prepared.sides:
+            if side.side.algo == ALGO_INDEX:
+                m = D.distributed_extract_index(
+                    mesh, axis_names, doc_tokens, side, prepared.max_entity_len
+                )
+                diags.append(None)
+            else:
+                m, diag = D.distributed_extract_ssjoin(
+                    mesh, axis_names, doc_tokens, side, prepared.max_entity_len
+                )
+                diags.append(diag)
+            out.append(m)
+        return out, diags
+
+    # -- execution (single shard; distributed wrapper in extraction/) --------
+    def execute(self, prepared: PreparedPlan, doc_tokens) -> Matches:
+        cfg = self.config
+        out: Matches | None = None
+        for side in prepared.sides:
+            base, surv = engine.survival_mask(
+                doc_tokens, prepared.max_entity_len, side.flt, cfg.use_kernel
+            )
+            cands = engine.compact_candidates(base, surv, side.params.max_candidates)
+            if side.side.algo == ALGO_INDEX:
+                m: Matches | None = None
+                for part in side.index_parts:
+                    pm = engine.extract_index_part(cands, part, side.ddict, side.params)
+                    m = pm if m is None else merge_matches(m, pm, cfg.result_capacity)
+            else:
+                m = engine.extract_ssjoin_local(
+                    cands, side.sig_table, side.ddict, side.params
+                )
+            out = m if out is None else merge_matches(out, m, cfg.result_capacity)
+        assert out is not None, "empty plan"
+        return out

@@ -1,0 +1,74 @@
+"""Vectorised integer hashing shared by numpy (host build) and jnp (device).
+
+All hashes are uint32. We stay in 32-bit because jax runs with x64
+disabled; where more entropy is needed we combine two independent
+32-bit hashes (``hash2``).
+
+The same bit-exact function is exposed for numpy and jax so that
+host-built structures (indexes, filters, variant tables) agree with
+device-computed probes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# splitmix32 constants (Stafford mix / murmur3-finaliser family).
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+
+
+def _mix(x, *, xp):
+    """murmur3 finaliser; ``xp`` is numpy or jax.numpy."""
+    with np.errstate(over="ignore"):
+        x = x.astype(xp.uint32)
+        x = x ^ (x >> xp.uint32(16))
+        x = x * xp.uint32(_C1)
+        x = x ^ (x >> xp.uint32(13))
+        x = x * xp.uint32(_C2)
+        x = x ^ (x >> xp.uint32(16))
+        return x
+
+
+def hash_u32(x, seed: int = 0, *, xp=jnp):
+    """Hash int array -> uint32, parameterised by ``seed``."""
+    off = (_GOLDEN * (int(seed) + 1)) & 0xFFFFFFFF  # python-int, pre-wrapped
+    with np.errstate(over="ignore"):
+        x = x.astype(xp.uint32) + xp.uint32(off)
+    return _mix(x, xp=xp)
+
+
+def hash2(x, seed: int = 0, *, xp=jnp):
+    """Two decorrelated uint32 hashes, returned as a tuple."""
+    return hash_u32(x, seed=2 * seed, xp=xp), hash_u32(x, seed=2 * seed + 1, xp=xp)
+
+
+def combine(h, g, *, xp=jnp):
+    """Order-dependent combine of two uint32 hash arrays."""
+    h = h.astype(xp.uint32)
+    g = g.astype(xp.uint32)
+    return _mix(h ^ (g + xp.uint32(_GOLDEN) + (h << xp.uint32(6)) + (h >> xp.uint32(2))), xp=xp)
+
+
+def set_hash(tokens, valid, seed: int = 0, *, xp=jnp, axis: int = -1):
+    """Order-insensitive hash of a padded token-id set.
+
+    ``tokens``: integer array, padded entries arbitrary.
+    ``valid``: boolean mask of the same shape.
+
+    Commutative combine of per-token hashes: (sum, xor, count) folded
+    through the finaliser. Identical in numpy and jnp.
+    """
+    per = hash_u32(tokens, seed=seed, xp=xp)
+    per = xp.where(valid, per, xp.uint32(0))
+    with np.errstate(over="ignore"):
+        s = per.sum(axis=axis, dtype=xp.uint32)
+        if xp is np:
+            x = np.bitwise_xor.reduce(per, axis=axis)
+            cnt = valid.sum(axis=axis).astype(np.uint32)
+        else:
+            x = jnp.bitwise_xor.reduce(per, axis=axis)
+            cnt = valid.sum(axis=axis).astype(jnp.uint32)
+        return _mix(s ^ (x * xp.uint32(_C1)) ^ (cnt * xp.uint32(_GOLDEN)), xp=xp)

@@ -1,0 +1,179 @@
+"""Entity indexes for the Index-on-Entities algorithm (§3.2).
+
+Three index types, built host-side (numpy) and queried device-side
+(jnp) with static shapes:
+
+* ``word``    — inverted list per token over *all* entity tokens. Fast to
+  build; lists for frequent tokens grow long (the paper's noted
+  weakness), which shows up as a large ``max_postings`` gather.
+* ``prefix``  — inverted list per token over *prefix tokens* only (see
+  ``signatures.prefix_token_sets``). Complete for the containment
+  predicate with far shorter lists; requires verification.
+* ``variant`` — hash table over all Jaccard variants of all entities
+  (Def. 2). Lookups need **no verification** (64-bit keys); costliest to
+  build.
+
+Static-shape querying: inverted lists are CSR (offsets/postings) padded
+to ``max_postings`` per probed token; hash-table buckets have a fixed
+``bucket_cap``. Overflows are impossible by construction (arrays are
+sized from the data at build time) — the *memory budget* ``M_e``
+(Def. 3) instead partitions entities into ranges, each with its own
+index, and the algorithm loops passes over candidates (see
+``extraction/index_extract.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.dictionary import Dictionary
+from repro.core.signatures import prefix_token_sets
+from repro.core.variants import variant_keys
+
+INDEX_WORD = "word"
+INDEX_PREFIX = "prefix"
+INDEX_VARIANT = "variant"
+INDEX_NAMES = (INDEX_WORD, INDEX_PREFIX, INDEX_VARIANT)
+
+NEEDS_VERIFY = {INDEX_WORD: True, INDEX_PREFIX: True, INDEX_VARIANT: False}
+
+
+@dataclasses.dataclass
+class InvertedIndex:
+    """CSR token -> entity-id postings, padded for static gathers.
+
+    ``postings_padded``: [V, max_postings] int32, -1 padded — a dense
+    view used for device gathers. ``offsets``/``postings`` keep the exact
+    CSR for host-side cost statistics.
+    """
+
+    offsets: np.ndarray  # [V+1] int32
+    postings: np.ndarray  # [nnz] int32
+    postings_padded: np.ndarray  # [V, P] int32 (-1 pad)
+    max_postings: int
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.postings_padded.nbytes)
+
+    def list_lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+
+@dataclasses.dataclass
+class VariantIndex:
+    """Static open-bucket hash table: variant key -> entity id.
+
+    ``keys1/keys2``: [n_buckets, bucket_cap] uint32 (two independent
+    32-bit hashes = 64-bit effective key), 0-key slots invalid via mask.
+    """
+
+    keys1: np.ndarray
+    keys2: np.ndarray
+    entity_id: np.ndarray  # [n_buckets, cap] int32, -1 pad
+    n_buckets: int
+    bucket_cap: int
+    dropped: int  # variants dropped to bucket overflow (0 unless capped)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.keys1.nbytes + self.keys2.nbytes + self.entity_id.nbytes)
+
+
+def build_inverted_index(
+    dictionary: Dictionary, kind: str, gamma: float
+) -> InvertedIndex:
+    """Build a word- or prefix- inverted index."""
+    V = dictionary.vocab_size
+    pairs: list[tuple[int, int]] = []  # (token, entity)
+    if kind == INDEX_WORD:
+        for i in range(dictionary.num_entities):
+            n = int(dictionary.lengths[i])
+            for t in dictionary.tokens[i, :n]:
+                pairs.append((int(t), i))
+    elif kind == INDEX_PREFIX:
+        for i, toks in enumerate(prefix_token_sets(dictionary, gamma)):
+            for t in toks:
+                pairs.append((int(t), i))
+    else:
+        raise ValueError(f"not an inverted index kind: {kind!r}")
+
+    pairs.sort()
+    toks = np.array([p[0] for p in pairs], dtype=np.int32)
+    ents = np.array([p[1] for p in pairs], dtype=np.int32)
+    counts = np.bincount(toks, minlength=V)
+    offsets = np.zeros((V + 1,), dtype=np.int32)
+    np.cumsum(counts, out=offsets[1:])
+    P = max(1, int(counts.max()) if counts.size else 1)
+    padded = np.full((V, P), -1, dtype=np.int32)
+    for t in np.unique(toks):
+        lo, hi = offsets[t], offsets[t + 1]
+        padded[t, : hi - lo] = ents[lo:hi]
+    return InvertedIndex(offsets, ents, padded, P)
+
+
+def build_variant_index(
+    dictionary: Dictionary,
+    gamma: float,
+    max_variants: int = 256,
+    load_factor: float = 0.5,
+    bucket_cap: int | None = None,
+) -> VariantIndex:
+    """Hash all Jaccard variants into a static bucketed table."""
+    k1, k2, eid = variant_keys(dictionary, gamma, max_variants)
+    n = max(len(k1), 1)
+    n_buckets = 1 << max(3, int(np.ceil(np.log2(n / load_factor + 1))))
+    bucket = (k1 % np.uint32(n_buckets)).astype(np.int64)
+    counts = np.bincount(bucket, minlength=n_buckets)
+    cap = bucket_cap or max(4, int(counts.max()) if counts.size else 4)
+    keys1 = np.zeros((n_buckets, cap), dtype=np.uint32)
+    keys2 = np.zeros((n_buckets, cap), dtype=np.uint32)
+    ents = np.full((n_buckets, cap), -1, dtype=np.int32)
+    fill = np.zeros((n_buckets,), dtype=np.int64)
+    dropped = 0
+    for i in range(len(k1)):
+        b = int(bucket[i])
+        j = int(fill[b])
+        if j >= cap:
+            dropped += 1
+            continue
+        keys1[b, j] = k1[i]
+        keys2[b, j] = k2[i]
+        ents[b, j] = eid[i]
+        fill[b] = j + 1
+    return VariantIndex(keys1, keys2, ents, n_buckets, cap, dropped)
+
+
+# --------------------------------------------------------------------------
+# Device-side queries (jnp, static shapes)
+# --------------------------------------------------------------------------
+
+
+def query_inverted(postings_padded, win_tokens, win_valid):
+    """Gather candidate entity ids for each window.
+
+    ``postings_padded``: [V, P] int32 (-1 pad), ``win_tokens``: [..., L].
+    Returns candidates [..., L*P] int32 with -1 for invalid (duplicates
+    across tokens possible; verification dedups by similarity emit).
+    """
+    cands = postings_padded[win_tokens]  # [..., L, P]
+    cands = jnp.where(win_valid[..., None], cands, -1)
+    return cands.reshape(*cands.shape[:-2], -1)
+
+
+def query_variant(index_keys1, index_keys2, entity_id, n_buckets: int, key1, key2):
+    """Probe the variant table with window set-hash pairs.
+
+    ``key1/key2``: [...] uint32. Returns matched entity ids [..., cap]
+    (-1 where no match).
+    """
+    b = (key1 % jnp.uint32(n_buckets)).astype(jnp.int32)
+    k1 = index_keys1[b]  # [..., cap]
+    k2 = index_keys2[b]
+    ent = entity_id[b]
+    hit = (k1 == key1[..., None]) & (k2 == key2[..., None]) & (ent >= 0)
+    return jnp.where(hit, ent, -1)

@@ -1,0 +1,162 @@
+"""Plan search (paper §5.2).
+
+For every ordered (head, tail) option pair the split cost is
+
+    f(p) = Cost_head([0, p)) + Cost_tail([p, E))
+
+where ``Cost_head`` is non-decreasing and ``Cost_tail`` non-increasing in
+``p`` (Lemma 1 — both are prefix sums / survivor curves over the
+frequency-sorted entities). The paper narrows an iterated binary search
+over this structure; we implement it as a discrete ternary search over
+the bracketed minimum (each iteration shrinks the range by 1/3 — the
+same O(log N) evaluation count) plus a tiny local sweep to absorb
+plateaus from the ceil() pass term, and verify optimality against
+exhaustive enumeration in tests.
+
+The pair loop is a small constant (7 options -> 49 pairs; the paper's
+"nine pairs" for three schemes), so total cost-model evaluations are
+O(pairs * log N) vs the naive O(pairs * N).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.core.cost_model import (
+    ALL_OPTIONS,
+    CostParams,
+    cost_side,
+    objective_value,
+)
+from repro.core.plan import Plan, PlanSide
+from repro.core.stats import EEStats
+
+
+def _linspace(a: int, b: int, n: int):
+    if b <= a:
+        return [a]
+    step = (b - a) / (n - 1)
+    return [a + step * i for i in range(n)]
+
+
+def _plan_cost(
+    stats: EEStats,
+    params: CostParams,
+    p: int,
+    head: PlanSide,
+    tail: PlanSide,
+    objective: str,
+) -> tuple[float, object, object]:
+    hc = cost_side(stats, params, 0, p, head.algo, head.scheme, head=True)
+    tc = cost_side(stats, params, p, stats.num_entities, tail.algo, tail.scheme, head=False)
+    return objective_value(hc, objective) + objective_value(tc, objective), hc, tc
+
+
+def search_pair(
+    stats: EEStats,
+    params: CostParams,
+    head: PlanSide,
+    tail: PlanSide,
+    objective: str,
+    refine_radius: int = 2,
+) -> Plan:
+    """Ternary-search the split for one (head, tail) option pair."""
+    E = stats.num_entities
+    evals = 0
+    cache: dict[int, tuple[float, object, object]] = {}
+
+    def f(p: int):
+        nonlocal evals
+        if p not in cache:
+            cache[p] = _plan_cost(stats, params, p, head, tail, objective)
+            evals += 1
+        return cache[p]
+
+    # coarse bracket (always includes the pure plans p=0 and p=E), then
+    # ternary-narrow inside the best bracket — O(grid + log N) evals.
+    grid = sorted({int(round(x)) for x in _linspace(0, E, 17)})
+    gbest = min(grid, key=lambda p: f(p)[0])
+    gi = grid.index(gbest)
+    lo = grid[max(gi - 1, 0)]
+    hi = grid[min(gi + 1, len(grid) - 1)]
+    while hi - lo > 3:
+        m1 = lo + (hi - lo) // 3
+        m2 = hi - (hi - lo) // 3
+        if f(m1)[0] <= f(m2)[0]:
+            hi = m2
+        else:
+            lo = m1
+    best_p = min(range(lo, hi + 1), key=lambda p: f(p)[0])
+    # local refinement absorbs small non-unimodal plateaus (ceil passes)
+    for p in range(max(0, best_p - refine_radius), min(E, best_p + refine_radius) + 1):
+        if f(p)[0] < f(best_p)[0]:
+            best_p = p
+    c, hc, tc = f(best_p)
+    return Plan(
+        split=best_p,
+        head=head,
+        tail=tail,
+        objective=objective,
+        predicted_cost=c,
+        head_cost=hc,
+        tail_cost=tc,
+        evaluations=evals,
+    )
+
+
+def search_plan(
+    stats: EEStats,
+    params: CostParams,
+    objective: str,
+    options: Sequence[tuple[str, str]] = ALL_OPTIONS,
+) -> Plan:
+    """Full §5.2 search: all option pairs × split search; returns argmin."""
+    best: Plan | None = None
+    total_evals = 0
+    for ha, hs in options:
+        for ta, ts in options:
+            plan = search_pair(
+                stats, params, PlanSide(ha, hs), PlanSide(ta, ts), objective
+            )
+            total_evals += plan.evaluations
+            if best is None or plan.predicted_cost < best.predicted_cost:
+                best = plan
+    assert best is not None
+    return Plan(
+        split=best.split,
+        head=best.head,
+        tail=best.tail,
+        objective=best.objective,
+        predicted_cost=best.predicted_cost,
+        head_cost=best.head_cost,
+        tail_cost=best.tail_cost,
+        evaluations=total_evals,
+    )
+
+
+def exhaustive_plan(
+    stats: EEStats,
+    params: CostParams,
+    objective: str,
+    options: Sequence[tuple[str, str]] = ALL_OPTIONS,
+    stride: int = 1,
+) -> Plan:
+    """O(pairs * N) oracle search used to validate ``search_plan``."""
+    E = stats.num_entities
+    best: Plan | None = None
+    evals = 0
+    for ha, hs in options:
+        for ta, ts in options:
+            head, tail = PlanSide(ha, hs), PlanSide(ta, ts)
+            for p in range(0, E + 1, stride):
+                c, hc, tc = _plan_cost(stats, params, p, head, tail, objective)
+                evals += 1
+                if best is None or c < best.predicted_cost:
+                    best = Plan(p, head, tail, objective, c, hc, tc, evals)
+    assert best is not None
+    return dataclasses_replace_evals(best, evals)
+
+
+def dataclasses_replace_evals(plan: Plan, evals: int) -> Plan:
+    import dataclasses
+
+    return dataclasses.replace(plan, evaluations=evals)

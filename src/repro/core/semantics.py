@@ -1,0 +1,117 @@
+"""Similarity semantics for approximate dictionary entity extraction.
+
+Implements the paper's Definition 1 (weighted Jaccard containment, the
+``missing`` and ``extra`` variations) plus symmetric weighted Jaccard,
+in two bit-compatible forms:
+
+* a numpy oracle used by tests and host-side planning, and
+* a jnp batched form used inside the distributed algorithms.
+
+Inputs are PAD(=0)-padded token-id arrays; token sets are assumed
+duplicate-free per row (the window generator and dictionary builder
+enforce this; duplicated window tokens are deduplicated here via a
+first-occurrence mask so semantics stay set-based).
+
+Conventions for a candidate window ``s`` and an entity ``e`` with token
+weight function ``w``:
+
+  JaccCont_missing(e, s) = w(e ∩ s) / w(s)   (tolerates words of e
+                                              missing from s)
+  JaccCont_extra(e, s)   = w(e ∩ s) / w(e)   (tolerates extra words in s)
+  Jaccard(e, s)          = w(e ∩ s) / w(e ∪ s)
+
+The extraction predicate is ``sim(e, s) >= gamma``; ``sim`` is selected
+by name. The default used throughout the framework is ``extra``: a
+mention must cover a γ-fraction of the entity's weight — this is the
+variation the Jaccard-variant machinery (Def. 2) computes exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.dictionary import PAD
+
+SIM_MISSING = "missing"
+SIM_EXTRA = "extra"
+SIM_JACCARD = "jaccard"
+# The predicate the Jaccard-variant machinery computes *exactly*:
+# set(s) ⊆ set(e) and w(s) >= gamma * w(e). It under-approximates
+# SIM_EXTRA (any variant_exact match is an extra match); the paper treats
+# the two interchangeably, we keep them distinct and testable.
+SIM_VARIANT_EXACT = "variant_exact"
+SIM_NAMES = (SIM_MISSING, SIM_EXTRA, SIM_JACCARD, SIM_VARIANT_EXACT)
+
+
+def first_occurrence_mask(tokens, *, xp=jnp):
+    """Mask of first occurrences (dedup within each row's padded set)."""
+    t = tokens[..., :, None] == tokens[..., None, :]  # [.., L, L]
+    L = tokens.shape[-1]
+    if xp is np:
+        earlier = np.tril(np.ones((L, L), dtype=bool), k=-1)
+        dup = (t & earlier).any(axis=-1)
+    else:
+        earlier = jnp.tril(jnp.ones((L, L), dtype=bool), k=-1)
+        dup = (t & earlier).any(axis=-1)
+    return (tokens != PAD) & ~dup
+
+
+def _intersection_weight(ent_tokens, ent_valid, win_tokens, win_valid, token_weight, *, xp):
+    """w(e ∩ s) for batched padded rows.
+
+    ent_tokens: [..., Le], win_tokens: [..., Lw] — broadcastable leading
+    dims. Returns [...] float32.
+    """
+    eq = ent_tokens[..., :, None] == win_tokens[..., None, :]  # [..., Le, Lw]
+    both = eq & ent_valid[..., :, None] & win_valid[..., None, :]
+    hit = both.any(axis=-1)  # entity token present in window
+    w = token_weight[ent_tokens] * hit
+    return w.sum(axis=-1).astype(xp.float32)
+
+
+def similarity(
+    sim_name: str,
+    ent_tokens,
+    win_tokens,
+    token_weight,
+    *,
+    xp=jnp,
+    ent_valid=None,
+    win_valid=None,
+):
+    """Batched weighted similarity between entities and windows.
+
+    Shapes: ``ent_tokens [..., Le]``, ``win_tokens [..., Lw]`` with
+    broadcastable leading dims. PAD entries are ignored; duplicate window
+    tokens are counted once. Empty windows get similarity 0.
+    """
+    if ent_valid is None:
+        ent_valid = ent_tokens != PAD
+    if win_valid is None:
+        win_valid = first_occurrence_mask(win_tokens, xp=xp)
+    else:
+        win_valid = win_valid & first_occurrence_mask(win_tokens, xp=xp)
+
+    inter = _intersection_weight(ent_tokens, ent_valid, win_tokens, win_valid, token_weight, xp=xp)
+    w_e = (token_weight[ent_tokens] * ent_valid).sum(axis=-1).astype(xp.float32)
+    w_s = (token_weight[win_tokens] * win_valid).sum(axis=-1).astype(xp.float32)
+
+    eps = xp.float32(1e-30)
+    if sim_name == SIM_MISSING:
+        denom = w_s
+    elif sim_name == SIM_EXTRA:
+        denom = w_e
+    elif sim_name == SIM_JACCARD:
+        denom = w_e + w_s - inter
+    elif sim_name == SIM_VARIANT_EXACT:
+        # subset check: every valid window token occurs in the entity
+        eq = win_tokens[..., :, None] == ent_tokens[..., None, :]
+        in_e = (eq & ent_valid[..., None, :]).any(axis=-1)
+        subset = (~win_valid | in_e).all(axis=-1)
+        out = inter / xp.maximum(w_e, eps)
+        return xp.where(subset & (w_s > 0), out, xp.float32(0.0))
+    else:
+        raise ValueError(f"unknown similarity {sim_name!r}")
+    out = inter / xp.maximum(denom, eps)
+    return xp.where(w_s > 0, out, xp.float32(0.0))

@@ -1,0 +1,200 @@
+"""Signature schemes for the SSJoin shuffle and the entity indexes (§3.3).
+
+A scheme produces, for every item (dictionary entity or document
+window), a fixed-width array of uint32 signatures plus a validity mask.
+Completeness contract: if ``sim(e, s) >= gamma`` (for the configured
+similarity) then ``sigs(e) ∩ sigs(s) != ∅`` — exactly for word/prefix/
+variant (contiguous mentions), with high probability for LSH.
+
+Schemes
+-------
+word     every token is a signature. Complete; heavily skewed.
+prefix   entity side emits only its *prefix tokens* — the minimal set of
+         rarest tokens whose weight exceeds (1-gamma)*w(e); any window
+         covering a gamma-fraction of the entity weight must contain at
+         least one of them. Window side emits all tokens. Complete, far
+         less entity-side skew, requires verification.
+lsh      MinHash banding (B bands × R rows). Probabilistic, requires
+         verification; tunable via (B, R).
+variant  entity side emits one signature per Jaccard variant (set-hash);
+         window side emits its set-hash. Exact for JaccCont_extra on
+         contiguous mentions — *no verification needed* (64-bit keys).
+
+Entity-side generation is host-side numpy (dictionary prep); window-side
+is jnp (it runs inside the distributed job), with bit-identical hashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.dictionary import PAD, Dictionary
+from repro.core.semantics import first_occurrence_mask
+from repro.core.variants import VARIANT_SEEDS, variant_keys
+
+SIG_WORD = "word"
+SIG_PREFIX = "prefix"
+SIG_LSH = "lsh"
+SIG_VARIANT = "variant"
+SIG_NAMES = (SIG_WORD, SIG_PREFIX, SIG_LSH, SIG_VARIANT)
+
+# Schemes whose reducer-side matches need verification (paper §3.3).
+NEEDS_VERIFY = {SIG_WORD: True, SIG_PREFIX: True, SIG_LSH: True, SIG_VARIANT: False}
+
+_LSH_SEED_BASE = 7000
+_TOKEN_SIG_SEED = 11
+
+
+@dataclasses.dataclass(frozen=True)
+class LshParams:
+    bands: int = 4
+    rows: int = 2
+
+
+@dataclasses.dataclass
+class EntitySignatures:
+    """Host-side entity signatures: ragged as (sig, entity_id) pairs."""
+
+    sig: np.ndarray  # [M] uint32
+    entity_id: np.ndarray  # [M] int32
+
+    @property
+    def count(self) -> int:
+        return int(self.sig.shape[0])
+
+
+def prefix_token_sets(dictionary: Dictionary, gamma: float) -> list[np.ndarray]:
+    """Per-entity prefix tokens: minimal rarest-first set with
+    cumulative weight > (1-gamma) * w(e) (plus epsilon)."""
+    out = []
+    # Global order: ascending document frequency == ascending freq rank.
+    # We use the token weight table as the rarity proxy (IDF-style weights
+    # make rare tokens heavy): order by descending weight, tie-break id.
+    for i in range(dictionary.num_entities):
+        n = int(dictionary.lengths[i])
+        toks = dictionary.tokens[i, :n]
+        ws = dictionary.token_weight[toks]
+        order = np.lexsort((toks, -ws))  # heaviest (rarest) first
+        total = float(ws.sum())
+        need = (1.0 - gamma) * total + 1e-6
+        acc, chosen = 0.0, []
+        for j in order:
+            chosen.append(int(toks[j]))
+            acc += float(ws[j])
+            if acc > need:
+                break
+        out.append(np.array(chosen, dtype=np.int32))
+    return out
+
+
+def _minhash_np(tokens: np.ndarray, valid: np.ndarray, params: LshParams) -> np.ndarray:
+    """[.., B] banded minhash signatures (numpy)."""
+    B, R = params.bands, params.rows
+    outs = []
+    for b in range(B):
+        row_mins = []
+        for r in range(R):
+            h = hashing.hash_u32(tokens, seed=_LSH_SEED_BASE + b * R + r, xp=np)
+            h = np.where(valid, h, np.uint32(0xFFFFFFFF))
+            row_mins.append(h.min(axis=-1))
+        band = row_mins[0]
+        for m in row_mins[1:]:
+            band = hashing.combine(band, m, xp=np)
+        # Tag with band id so bands occupy distinct signature spaces.
+        band = hashing.combine(band, np.full_like(band, np.uint32(b + 1)), xp=np)
+        outs.append(band)
+    return np.stack(outs, axis=-1)
+
+
+def _minhash_jnp(tokens, valid, params: LshParams):
+    B, R = params.bands, params.rows
+    outs = []
+    for b in range(B):
+        row_mins = []
+        for r in range(R):
+            h = hashing.hash_u32(tokens, seed=_LSH_SEED_BASE + b * R + r, xp=jnp)
+            h = jnp.where(valid, h, jnp.uint32(0xFFFFFFFF))
+            row_mins.append(h.min(axis=-1))
+        band = row_mins[0]
+        for m in row_mins[1:]:
+            band = hashing.combine(band, m, xp=jnp)
+        band = hashing.combine(band, jnp.full_like(band, jnp.uint32(b + 1)), xp=jnp)
+        outs.append(band)
+    return jnp.stack(outs, axis=-1)
+
+
+def entity_signatures(
+    scheme: str,
+    dictionary: Dictionary,
+    gamma: float,
+    lsh: LshParams = LshParams(),
+    max_variants: int = 256,
+) -> EntitySignatures:
+    """Host-side signature generation for all dictionary entities."""
+    E, L = dictionary.tokens.shape
+    valid = dictionary.valid_mask()
+    if scheme == SIG_WORD:
+        sig = hashing.hash_u32(dictionary.tokens, seed=_TOKEN_SIG_SEED, xp=np)
+        eid = np.broadcast_to(np.arange(E, dtype=np.int32)[:, None], (E, L))
+        keep = valid.ravel()
+        return EntitySignatures(sig.ravel()[keep], eid.ravel()[keep].astype(np.int32))
+    if scheme == SIG_PREFIX:
+        sigs, eids = [], []
+        for i, toks in enumerate(prefix_token_sets(dictionary, gamma)):
+            h = hashing.hash_u32(toks, seed=_TOKEN_SIG_SEED, xp=np)
+            sigs.append(h)
+            eids.append(np.full((len(toks),), i, dtype=np.int32))
+        return EntitySignatures(np.concatenate(sigs), np.concatenate(eids))
+    if scheme == SIG_LSH:
+        sig = _minhash_np(dictionary.tokens, valid, lsh)  # [E, B]
+        eid = np.broadcast_to(np.arange(E, dtype=np.int32)[:, None], sig.shape)
+        return EntitySignatures(
+            sig.ravel().astype(np.uint32), eid.ravel().astype(np.int32).copy()
+        )
+    if scheme == SIG_VARIANT:
+        k1, _k2, eid = variant_keys(dictionary, gamma, max_variants)
+        return EntitySignatures(k1, eid)
+    raise ValueError(f"unknown signature scheme {scheme!r}")
+
+
+def window_signatures(
+    scheme: str,
+    win_tokens,
+    win_valid,
+    gamma: float,
+    lsh: LshParams = LshParams(),
+):
+    """Device-side signatures for padded windows ``[..., L]``.
+
+    Returns (sig uint32 [..., S], mask bool [..., S]).
+    """
+    del gamma  # window side emits all tokens for word/prefix
+    first = win_valid & first_occurrence_mask(win_tokens, xp=jnp)
+    if scheme in (SIG_WORD, SIG_PREFIX):
+        sig = hashing.hash_u32(win_tokens, seed=_TOKEN_SIG_SEED, xp=jnp)
+        return sig, first
+    if scheme == SIG_LSH:
+        sig = _minhash_jnp(win_tokens, first, lsh)
+        has_any = first.any(axis=-1, keepdims=True)
+        return sig, jnp.broadcast_to(has_any, sig.shape)
+    if scheme == SIG_VARIANT:
+        k1 = hashing.set_hash(win_tokens, first, seed=VARIANT_SEEDS[0], xp=jnp)
+        sig = k1[..., None]
+        has_any = first.any(axis=-1, keepdims=True)
+        return sig, has_any
+    raise ValueError(f"unknown signature scheme {scheme!r}")
+
+
+def num_window_signatures(scheme: str, max_len: int, lsh: LshParams = LshParams()) -> int:
+    """Static window-side signature width S for a scheme."""
+    if scheme in (SIG_WORD, SIG_PREFIX):
+        return max_len
+    if scheme == SIG_LSH:
+        return lsh.bands
+    if scheme == SIG_VARIANT:
+        return 1
+    raise ValueError(f"unknown signature scheme {scheme!r}")

@@ -1,0 +1,278 @@
+"""Data-statistics gathering for the EE-Join cost model (paper §4/§5).
+
+The cost model must evaluate plan costs for *any* dictionary split point
+``p`` in O(1). The key observation (which also proves Lemma 1) is that
+every cost term is either
+
+* **additive per entity** — postings lengths, verify loads, variant
+  counts — so a prefix-sum over the frequency-sorted entities gives any
+  range ``[a, b)`` by subtraction; or
+* a **cumulative survivor curve** — the number of windows passing the
+  ISH filter of entity range ``[0, p)`` equals ``#{w : minrank(w) < p}``
+  where ``minrank(w)`` is the smallest entity rank whose prefix tokens
+  intersect ``w`` (dually ``maxrank`` for tails) — again O(1) per query
+  after one pass over the sample; or
+* a **grid-interpolated curve** for the one genuinely non-additive term,
+  the padded index footprint (its max-postings padding is range-max, not
+  range-sum).
+
+Statistics are gathered from a document *sample* and scaled; in
+production the same counters run as a distributed shard_map job (see
+``extraction/distributed.py::distributed_stats``) — this module is the
+host-side reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dictionary import PAD, Dictionary
+from repro.core.signatures import LshParams, prefix_token_sets
+from repro.core.variants import variant_keys
+from repro.core import hashing
+from repro.extraction.substrings import window_base_np
+
+_LSH_WINDOW_CAP = 4096
+
+
+@dataclasses.dataclass
+class EEStats:
+    """Everything the cost model needs, queryable in O(1) per range."""
+
+    num_entities: int
+    max_len: int
+    scale: float  # full-corpus windows / sample windows
+    num_windows: float  # total candidates |C| = L * |d| (scaled)
+    avg_sigs_per_window: float  # deduped tokens per surviving window
+    survivors_head: np.ndarray  # [E+1] windows passing filter of [0, p)
+    survivors_tail: np.ndarray  # [E+1] windows passing filter of [p, E)
+    cum: dict[str, np.ndarray]  # name -> [E+1] prefix sums (scaled)
+    index_bytes: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray]]
+    # kind -> (grid_p, bytes_head_at_grid, bytes_tail_at_grid)
+    sig_skew: dict[str, float]  # scheme -> max/mean shuffle-bucket load
+    table_bytes_per_entity: dict[str, float]  # ssjoin table footprint
+
+    def range_sum(self, name: str, a: int, b: int) -> float:
+        c = self.cum[name]
+        return float(c[b] - c[a])
+
+    def head_survivors(self, p: int) -> float:
+        return float(self.survivors_head[p])
+
+    def tail_survivors(self, p: int) -> float:
+        return float(self.survivors_tail[p])
+
+    def head_index_bytes(self, kind: str, p: int) -> float:
+        grid, head, _ = self.index_bytes[kind]
+        return float(np.interp(p, grid, head))
+
+    def tail_index_bytes(self, kind: str, p: int) -> float:
+        grid, _, tail = self.index_bytes[kind]
+        return float(np.interp(p, grid, tail))
+
+
+def _padded_index_bytes(
+    dictionary: Dictionary, kind: str, gamma: float, grid: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Padded [V, Pmax] footprint of head/tail range indexes at grid points."""
+    V = dictionary.vocab_size
+    E = dictionary.num_entities
+    if kind == "variant":
+        # hash-table bytes ≈ 12B per variant / load_factor; additive.
+        per_e = np.zeros((E,), dtype=np.float64)
+        _k1, _k2, eid = variant_keys(dictionary, gamma)
+        np.add.at(per_e, eid, 12.0 / 0.5)
+        c = np.concatenate([[0.0], np.cumsum(per_e)])
+        return c[grid], c[E] - c[grid]
+    if kind == "word":
+        tok_lists = [
+            dictionary.tokens[i, : dictionary.lengths[i]] for i in range(E)
+        ]
+    else:  # prefix
+        tok_lists = prefix_token_sets(dictionary, gamma)
+    # counts[t, k] via incremental bincount over grid prefixes
+    head = np.zeros(len(grid))
+    tail = np.zeros(len(grid))
+    for gi, p in enumerate(grid):
+        if p > 0:
+            toks = np.concatenate(tok_lists[:p])
+            cnt = np.bincount(toks, minlength=V)
+            head[gi] = 4.0 * V * max(int(cnt.max()), 1)
+        if p < E:
+            toks = np.concatenate(tok_lists[p:])
+            cnt = np.bincount(toks, minlength=V)
+            tail[gi] = 4.0 * V * max(int(cnt.max()), 1)
+    return head, tail
+
+
+def gather_stats(
+    dictionary: Dictionary,
+    sample_docs: np.ndarray,
+    total_docs: int,
+    gamma: float,
+    lsh: LshParams = LshParams(),
+    num_shuffle_buckets: int = 256,
+    index_grid_points: int = 17,
+    seed: int = 0,
+) -> EEStats:
+    """One pass over a document sample -> EEStats."""
+    rng = np.random.default_rng(seed)
+    E = dictionary.num_entities
+    L = dictionary.max_len
+    V = dictionary.vocab_size
+    Ds, T = sample_docs.shape
+    scale = float(total_docs) / max(Ds, 1)
+
+    base = window_base_np(sample_docs, L)  # [Ds, T, L]
+    valid = np.cumprod(base != PAD, axis=-1).astype(bool)
+    n_windows = float(valid.sum()) * scale
+
+    # --- per-token min/max prefix-owner rank
+    prefix_lists = prefix_token_sets(dictionary, gamma)
+    minrank = np.full((V,), E, dtype=np.int64)
+    maxrank = np.full((V,), -1, dtype=np.int64)
+    for rank, toks in enumerate(prefix_lists):
+        np.minimum.at(minrank, toks, rank)
+        np.maximum.at(maxrank, toks, rank)
+
+    # window-level min/max rank (min over token mins / max over token maxs)
+    w_min = np.where(valid, minrank[base], E).min(axis=-1)  # [Ds, T] per pos
+    w_max = np.where(valid, maxrank[base], -1).max(axis=-1)
+    # expand back per (pos, len) candidate: candidate (p, l) sees tokens
+    # 0..l -> running min/max along the length axis
+    run_min = np.minimum.accumulate(np.where(valid, minrank[base], E), axis=-1)
+    run_max = np.maximum.accumulate(np.where(valid, maxrank[base], -1), axis=-1)
+    cand_min = np.where(valid, run_min, E).reshape(-1)
+    cand_max = np.where(valid, run_max, -1).reshape(-1)
+    cand_ok = valid.reshape(-1)
+    cand_min = cand_min[cand_ok]
+    cand_max = cand_max[cand_ok]
+
+    # survivor curves: head [0,p): minrank < p ; tail [p,E): maxrank >= p
+    hist_min = np.bincount(np.clip(cand_min, 0, E), minlength=E + 1)
+    survivors_head = np.concatenate([[0], np.cumsum(hist_min[:E])]) * scale
+    hist_max = np.bincount(np.clip(cand_max + 1, 0, E), minlength=E + 1)
+    # #{maxrank >= p} = total_hit - #{maxrank < p}; maxrank=-1 => never hits
+    cum_lt = np.cumsum(hist_max)[:E + 1] - hist_max[0]  # exclude the -1 bin
+    total_hit = float(len(cand_max)) - hist_max[0]
+    survivors_tail = (total_hit - cum_lt) * scale
+    survivors_tail = np.maximum(survivors_tail, 0.0)
+
+    # --- surviving windows under the full filter, for load counting
+    surviving = valid & (run_min < E)
+    from repro.core.semantics import first_occurrence_mask
+
+    # candidate (pos, len) token views: [Ds*T*L, L]
+    keep = np.tril(np.ones((L, L), dtype=bool))
+    cand_flat = np.where(keep[None, None], base[:, :, None, :], PAD).reshape(-1, L)
+    valid_flat = valid.reshape(-1)
+    surviving_flat = surviving.reshape(-1)
+    first_flat = first_occurrence_mask(cand_flat, xp=np)
+
+    # deduped token occurrences among surviving candidates
+    emit = first_flat & surviving_flat[:, None]
+    occ = np.bincount(cand_flat[emit].ravel(), minlength=V).astype(np.float64)
+    n_surv = max(float(surviving_flat.sum()), 1.0)
+    avg_sigs = float(emit.sum()) / n_surv
+
+    # --- additive per-entity loads
+    cum: dict[str, np.ndarray] = {}
+
+    def _cumsum(per_e: np.ndarray) -> np.ndarray:
+        return np.concatenate([[0.0], np.cumsum(per_e * scale)])
+
+    word_load = np.array(
+        [occ[dictionary.tokens[i, : dictionary.lengths[i]]].sum() for i in range(E)]
+    )
+    prefix_load = np.array([occ[toks].sum() for toks in prefix_lists])
+    cum["verify_word"] = _cumsum(word_load)
+    cum["verify_prefix"] = _cumsum(prefix_load)
+
+    # postings lengths (CSR work per lookup)
+    cum["postings_word"] = _cumsum(
+        np.array([float(dictionary.lengths[i]) for i in range(E)])
+    )
+    cum["postings_prefix"] = _cumsum(np.array([float(len(t)) for t in prefix_lists]))
+
+    # variant machinery: per-entity variant counts + window hit loads
+    k1, _k2, eid = variant_keys(dictionary, gamma)
+    var_count = np.bincount(eid, minlength=E).astype(np.float64)
+    cum["variants"] = _cumsum(var_count)
+    win_tokens_f = cand_flat[surviving_flat]
+    win_valid_f = first_flat[surviving_flat]
+    wkeys = hashing.set_hash(win_tokens_f, win_valid_f, seed=101, xp=np)
+    key_to_ents: dict[int, list[int]] = {}
+    for k, e in zip(k1.tolist(), eid.tolist()):
+        key_to_ents.setdefault(k, []).append(e)
+    var_hits = np.zeros((E,), dtype=np.float64)
+    uniq, counts = np.unique(wkeys, return_counts=True)
+    for k, c in zip(uniq.tolist(), counts.tolist()):
+        for e in key_to_ents.get(k, ()):
+            var_hits[e] += c
+    cum["verify_variant"] = _cumsum(var_hits)
+
+    # LSH collision loads (subsampled windows, chunked entities)
+    from repro.core.signatures import _minhash_np
+
+    n_rows = win_tokens_f.shape[0]
+    if n_rows > _LSH_WINDOW_CAP:
+        surv_idx = rng.choice(n_rows, size=_LSH_WINDOW_CAP, replace=False)
+    else:
+        surv_idx = np.arange(n_rows)
+    sub_scale = n_surv / max(len(surv_idx), 1)
+    wsig = _minhash_np(win_tokens_f[surv_idx], win_valid_f[surv_idx], lsh)  # [W,B]
+    esig = _minhash_np(dictionary.tokens, dictionary.valid_mask(), lsh)  # [E,B]
+    lsh_load = np.zeros((E,), dtype=np.float64)
+    for e0 in range(0, E, 1024):
+        m = wsig[:, None, :] == esig[None, e0 : e0 + 1024, :]
+        lsh_load[e0 : e0 + 1024] = m.any(axis=-1).sum(axis=0) * sub_scale
+    cum["verify_lsh"] = _cumsum(lsh_load)
+
+    # --- shuffle skew per scheme (bucket = sig % num_shuffle_buckets)
+    sig_skew: dict[str, float] = {}
+    tok_sigs = hashing.hash_u32(cand_flat[emit].ravel(), seed=11, xp=np)
+    for scheme, sigs in (
+        ("word", tok_sigs),
+        ("prefix", tok_sigs),
+        ("lsh", wsig.ravel()),
+        ("variant", wkeys),
+    ):
+        if len(sigs) == 0:
+            sig_skew[scheme] = 1.0
+            continue
+        b = np.bincount(
+            (sigs % np.uint32(num_shuffle_buckets)).astype(np.int64),
+            minlength=num_shuffle_buckets,
+        )
+        sig_skew[scheme] = float(b.max() / max(b.mean(), 1e-9))
+
+    # --- index footprints at grid points
+    grid = np.unique(
+        np.round(np.linspace(0, E, index_grid_points)).astype(np.int64)
+    )
+    index_bytes = {}
+    for kind in ("word", "prefix", "variant"):
+        h, t = _padded_index_bytes(dictionary, kind, gamma, grid)
+        index_bytes[kind] = (grid.astype(np.float64), h, t)
+
+    table_bytes = {
+        "word": 24.0,  # 12B/slot / 0.5 load factor per signature instance
+        "prefix": 24.0,
+        "lsh": 24.0 * lsh.bands,
+        "variant": 24.0,
+    }
+
+    return EEStats(
+        num_entities=E,
+        max_len=L,
+        scale=scale,
+        num_windows=n_windows,
+        avg_sigs_per_window=avg_sigs,
+        survivors_head=survivors_head.astype(np.float64),
+        survivors_tail=survivors_tail.astype(np.float64),
+        cum=cum,
+        index_bytes=index_bytes,
+        sig_skew=sig_skew,
+        table_bytes_per_entity=table_bytes,
+    )

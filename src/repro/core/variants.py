@@ -1,0 +1,104 @@
+"""Jaccard variants (paper Definition 2).
+
+A *Jaccard variant* of an entity ``e`` with weight ``w(e)`` is any token
+subset ``v ⊆ e`` with ``w(v) >= gamma * w(e)``. A document window whose
+token *set* equals a variant of ``e`` is an approximate mention of ``e``
+under ``JaccCont_extra >= gamma`` — exactly, with no verification step.
+
+Dictionary-side enumeration happens on the host (numpy) at index /
+signature build time with branch-and-bound pruning; the number of
+variants is output-bounded and capped per entity. Document-side, windows
+are hashed as sets (``hashing.set_hash``) and matched against the
+dictionary variants — we never enumerate document-side subsets (the
+explosion the paper §2 warns about): every *contiguous* sub-window is
+already an extraction candidate, so document-side enumeration is
+redundant for contiguous mentions.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.dictionary import Dictionary
+
+# Two independent 32-bit set hashes give an effective 64-bit variant key.
+VARIANT_SEEDS = (101, 202)
+
+
+def enumerate_entity_variants(
+    tokens: np.ndarray,
+    weights: np.ndarray,
+    gamma: float,
+    max_variants: int = 256,
+) -> list[np.ndarray]:
+    """All subsets of ``tokens`` with weight >= gamma * total, heaviest first.
+
+    ``tokens``: [n] valid (non-PAD) token ids. Returns a list of index
+    subsets (as token-id arrays). Branch-and-bound over tokens sorted by
+    descending weight; capped at ``max_variants`` (heaviest kept).
+    """
+    n = len(tokens)
+    order = np.argsort(-weights, kind="stable")
+    toks = tokens[order]
+    ws = weights[order]
+    total = float(ws.sum())
+    thresh = gamma * total - 1e-6
+    suffix = np.concatenate([np.cumsum(ws[::-1])[::-1], [0.0]])
+
+    out: list[tuple[float, np.ndarray]] = []
+
+    def rec(i: int, cur: list[int], cur_w: float) -> None:
+        if len(out) >= 4 * max_variants:
+            return
+        if cur_w + suffix[i] < thresh:  # cannot reach threshold
+            return
+        if i == n:
+            if cur_w >= thresh and cur:
+                out.append((cur_w, np.array(cur, dtype=np.int32)))
+            return
+        if cur_w >= thresh and cur:
+            # Early emit: remaining tokens optional; still recurse to get
+            # all supersets/others.
+            pass
+        rec(i + 1, cur + [int(toks[i])], cur_w + float(ws[i]))
+        rec(i + 1, cur, cur_w)
+
+    rec(0, [], 0.0)
+    out.sort(key=lambda t: -t[0])
+    return [v for _, v in out[:max_variants]]
+
+
+def variant_keys(
+    dictionary: Dictionary, gamma: float, max_variants: int = 256
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Enumerate variant hash keys for every entity.
+
+    Returns (keys1 uint32 [M], keys2 uint32 [M], entity_id int32 [M]),
+    where M is the total variant count across entities.
+    """
+    k1, k2, eid = [], [], []
+    for i in range(dictionary.num_entities):
+        n = int(dictionary.lengths[i])
+        toks = dictionary.tokens[i, :n]
+        ws = dictionary.token_weight[toks]
+        for v in enumerate_entity_variants(toks, ws, gamma, max_variants):
+            valid = np.ones(v.shape, dtype=bool)
+            k1.append(int(hashing.set_hash(v, valid, seed=VARIANT_SEEDS[0], xp=np)))
+            k2.append(int(hashing.set_hash(v, valid, seed=VARIANT_SEEDS[1], xp=np)))
+            eid.append(i)
+    return (
+        np.array(k1, dtype=np.uint32),
+        np.array(k2, dtype=np.uint32),
+        np.array(eid, dtype=np.int32),
+    )
+
+
+def window_variant_key(win_tokens, win_valid, *, xp):
+    """Set-hash pair of a padded window, matching ``variant_keys``."""
+    from repro.core.semantics import first_occurrence_mask
+
+    v = win_valid & first_occurrence_mask(win_tokens, xp=xp)
+    return (
+        hashing.set_hash(win_tokens, v, seed=VARIANT_SEEDS[0], xp=xp),
+        hashing.set_hash(win_tokens, v, seed=VARIANT_SEEDS[1], xp=xp),
+    )

@@ -1,0 +1,63 @@
+"""Word tokenizers: a hash tokenizer for open-vocabulary streams and a
+small fitted vocabulary for demos (detokenizable)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.dictionary import PAD
+
+
+@dataclasses.dataclass(frozen=True)
+class HashTokenizer:
+    """word -> 1 + hash(word) % (V-1); PAD=0 reserved. Stateless."""
+
+    vocab_size: int
+
+    def encode_word(self, word: str) -> int:
+        h = hashing.hash_u32(
+            np.frombuffer(word.encode(), dtype=np.uint8).astype(np.int64).sum()
+            + np.int64(len(word)) * 1315423911,
+            seed=5,
+            xp=np,
+        )
+        return 1 + int(h) % (self.vocab_size - 1)
+
+    def encode(self, text: str) -> list[int]:
+        return [self.encode_word(w) for w in text.lower().split()]
+
+    def encode_docs(self, docs: list[str], doc_len: int) -> np.ndarray:
+        out = np.full((len(docs), doc_len), PAD, dtype=np.int32)
+        for i, d in enumerate(docs):
+            ids = self.encode(d)[:doc_len]
+            out[i, : len(ids)] = ids
+        return out
+
+
+@dataclasses.dataclass
+class Vocab:
+    """Fitted word vocabulary (id 0 = PAD, id 1 = <unk>)."""
+
+    word_to_id: dict
+    id_to_word: list
+
+    @classmethod
+    def fit(cls, texts: list[str], max_size: int = 50_000) -> "Vocab":
+        from collections import Counter
+
+        cnt = Counter(w for t in texts for w in t.lower().split())
+        words = [w for w, _ in cnt.most_common(max_size - 2)]
+        w2i = {w: i + 2 for i, w in enumerate(words)}
+        return cls(w2i, ["<pad>", "<unk>"] + words)
+
+    @property
+    def size(self) -> int:
+        return len(self.id_to_word)
+
+    def encode(self, text: str) -> list[int]:
+        return [self.word_to_id.get(w, 1) for w in text.lower().split()]
+
+    def decode(self, ids) -> str:
+        return " ".join(self.id_to_word[int(i)] for i in ids if int(i) > 1)

@@ -1,0 +1,368 @@
+"""Single-shard extraction cores.
+
+These pure functions are the per-device bodies that the distributed
+(shard_map) algorithms in ``extraction/distributed.py`` wrap. Both the
+Index-on-Entities and the (ISHFilter &) SSJoin paths share the candidate
+machinery: enumerate → (filter) → compact → probe → verify → emit.
+
+Everything is static-shape: candidate and result buffers have fixed
+capacities with surfaced overflow counts (never silent truncation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.dictionary import PAD, Dictionary
+from repro.core.filter import BloomFilter, token_in_filter
+from repro.core.index import (
+    INDEX_VARIANT,
+    InvertedIndex,
+    VariantIndex,
+    build_inverted_index,
+    build_variant_index,
+    query_inverted,
+    query_variant,
+)
+from repro.core.signatures import (
+    SIG_VARIANT,
+    EntitySignatures,
+    LshParams,
+    entity_signatures,
+    num_window_signatures,
+    window_signatures,
+)
+from repro.core.variants import VARIANT_SEEDS, window_variant_key
+from repro.extraction.results import Matches, compact_matches
+from repro.extraction.substrings import window_base
+from repro.extraction.verify import dedup_hits, verify_pairs
+
+_SIGKEY_SEED = 33
+# Bucket choice uses an independent hash of the signature so that bucket
+# bits do not correlate with the owner-routing bits (sig % ndev) in the
+# distributed shuffle — both are powers of two.
+_BUCKET_SEED = 47
+
+
+def _bucket_of(sig, n_buckets: int, *, xp):
+    return (hashing.hash_u32(sig, seed=_BUCKET_SEED, xp=xp) % xp.uint32(n_buckets))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtractParams:
+    """Static knobs of one extraction sub-job (one side of a plan)."""
+
+    gamma: float
+    scheme: str  # index kind or signature scheme: word|prefix|lsh|variant
+    sim_name: str = "extra"
+    use_filter: bool = True
+    max_candidates: int = 4096
+    result_capacity: int = 4096
+    lsh: LshParams = LshParams()
+    use_kernel: bool = False
+
+
+@dataclasses.dataclass
+class DeviceDictionary:
+    """Device-resident dictionary slice (tokens + weights)."""
+
+    tokens: jnp.ndarray  # [E, L] int32
+    token_weight: jnp.ndarray  # [V] f32
+    entity_offset: int  # global id of entity 0 in this slice
+
+    @classmethod
+    def from_host(cls, d: Dictionary, entity_offset: int = 0) -> "DeviceDictionary":
+        return cls(
+            tokens=jnp.asarray(d.tokens),
+            token_weight=jnp.asarray(d.token_weight),
+            entity_offset=entity_offset,
+        )
+
+
+# --------------------------------------------------------------------------
+# Candidate gathering (shared front end; fused-filter Pallas kernel target)
+# --------------------------------------------------------------------------
+
+
+def survival_mask(doc_tokens, max_len: int, flt: tuple | None, use_kernel: bool = False):
+    """[D,T] docs -> (base [D,T,L], survive [D,T,L]).
+
+    ``flt`` is (bits, num_bits, num_hashes) or None. Candidate (p, l)
+    survives iff valid (no PAD inside) and — when filtering — at least
+    one of its tokens probes into the Bloom filter.
+    """
+    base = window_base(doc_tokens, max_len)
+    real = base != PAD
+    valid = jnp.cumprod(real.astype(jnp.int32), axis=-1).astype(bool)
+    if flt is None:
+        return base, valid
+    bits, num_bits, num_hashes = flt
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        surv = kops.window_filter(doc_tokens, bits, num_bits, num_hashes, max_len)
+    else:
+        tok_hit = token_in_filter(bits, num_bits, num_hashes, base)
+        surv = jnp.cumsum(tok_hit.astype(jnp.int32), axis=-1) > 0
+    return base, valid & surv
+
+
+def compact_candidates(base, survive, max_candidates: int):
+    """Flatten surviving candidates into fixed-capacity buffers.
+
+    Returns dict with win_tokens [N, L], doc/pos/length [N] (-1 pad),
+    n_survive [] and overflow [] counters.
+    """
+    D, T, L = base.shape
+    flat = survive.reshape(-1)
+    (idx,) = jnp.nonzero(flat, size=max_candidates, fill_value=-1)
+    ok = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    d = safe // (T * L)
+    rem = safe % (T * L)
+    p = rem // L
+    l = rem % L  # length-1
+    toks = base[d, p]  # [N, L]
+    lens_mask = jnp.arange(L)[None, :] <= l[:, None]
+    toks = jnp.where(lens_mask & ok[:, None], toks, PAD)
+    n = flat.sum().astype(jnp.int32)
+    return dict(
+        win_tokens=toks.astype(jnp.int32),
+        win_valid=ok,
+        doc=jnp.where(ok, d, -1).astype(jnp.int32),
+        pos=jnp.where(ok, p, -1).astype(jnp.int32),
+        length=jnp.where(ok, l + 1, -1).astype(jnp.int32),
+        n_survive=n,
+        overflow=jnp.maximum(n - max_candidates, 0).astype(jnp.int32),
+    )
+
+
+def _emit(cands, hits, scores, ent_global, params: ExtractParams) -> Matches:
+    """Flatten per-candidate [N,K] hits into a Matches buffer."""
+    N, K = hits.shape
+    rep = lambda a: jnp.repeat(a, K)
+    return compact_matches(
+        hits.reshape(-1),
+        rep(cands["doc"]),
+        rep(cands["pos"]),
+        rep(cands["length"]),
+        ent_global.reshape(-1),
+        scores.reshape(-1),
+        params.result_capacity,
+    )
+
+
+# --------------------------------------------------------------------------
+# Index-on-Entities (§3.2): broadcast index, local lookups, multi-pass
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BuiltIndex:
+    """One memory-budget partition of an entity index (device arrays)."""
+
+    kind: str
+    entity_offset: int
+    # inverted kinds
+    postings: jnp.ndarray | None = None  # [V, P]
+    # variant kind
+    keys1: jnp.ndarray | None = None
+    keys2: jnp.ndarray | None = None
+    ents: jnp.ndarray | None = None
+    n_buckets: int = 0
+    nbytes: int = 0
+
+
+def build_index_partitions(
+    dictionary: Dictionary,
+    kind: str,
+    gamma: float,
+    memory_budget_bytes: int,
+    entity_offset: int = 0,
+) -> list[BuiltIndex]:
+    """Split entities into ranges whose index each fits the budget
+    (Def. 3's |E| / M_e multi-pass structure)."""
+    E = dictionary.num_entities
+    if E == 0:
+        return []
+    parts: list[BuiltIndex] = []
+    start = 0
+    # Estimate bytes/entity from a probe build on a small slice, then
+    # partition; rebuild per part (host-side, cheap vs corpus work).
+    probe = dictionary.slice(0, min(E, 256))
+    if kind == INDEX_VARIANT:
+        probe_idx = build_variant_index(probe, gamma)
+    else:
+        probe_idx = build_inverted_index(probe, kind, gamma)
+    per_entity = max(probe_idx.nbytes / probe.num_entities, 1.0)
+    chunk = max(int(memory_budget_bytes / per_entity), 1)
+    while start < E:
+        stop = min(start + chunk, E)
+        sl = dictionary.slice(start, stop)
+        if kind == INDEX_VARIANT:
+            vi = build_variant_index(sl, gamma)
+            parts.append(
+                BuiltIndex(
+                    kind=kind,
+                    entity_offset=entity_offset + start,
+                    keys1=jnp.asarray(vi.keys1),
+                    keys2=jnp.asarray(vi.keys2),
+                    ents=jnp.asarray(vi.entity_id),
+                    n_buckets=vi.n_buckets,
+                    nbytes=vi.nbytes,
+                )
+            )
+        else:
+            ii = build_inverted_index(sl, kind, gamma)
+            parts.append(
+                BuiltIndex(
+                    kind=kind,
+                    entity_offset=entity_offset + start,
+                    postings=jnp.asarray(ii.postings_padded),
+                    nbytes=ii.nbytes,
+                )
+            )
+        start = stop
+    return parts
+
+
+def extract_index_part(
+    cands: dict,
+    part: BuiltIndex,
+    ddict: DeviceDictionary,
+    params: ExtractParams,
+) -> Matches:
+    """One pass of index lookups + verification over compacted candidates."""
+    toks, ok = cands["win_tokens"], cands["win_valid"]
+    if part.kind == INDEX_VARIANT:
+        k1, k2 = window_variant_key(toks, toks != PAD, xp=jnp)
+        ents = query_variant(part.keys1, part.keys2, part.ents, part.n_buckets, k1, k2)
+        ents = jnp.where(ok[:, None], ents, -1)
+        hits, scores = verify_pairs(
+            toks,
+            ents + jnp.int32(part.entity_offset - ddict.entity_offset) * (ents >= 0),
+            ddict.tokens,
+            ddict.token_weight,
+            gamma=0.0,  # variant lookups are exact: no threshold re-check
+            sim_name=params.sim_name,
+            use_kernel=params.use_kernel,
+        )
+    else:
+        local = query_inverted(part.postings, toks, toks != PAD)  # [N, L*P]
+        local = jnp.where(ok[:, None], local, -1)
+        hits, scores = verify_pairs(
+            toks,
+            local + jnp.int32(part.entity_offset - ddict.entity_offset) * (local >= 0),
+            ddict.tokens,
+            ddict.token_weight,
+            gamma=params.gamma,
+            sim_name=params.sim_name,
+            use_kernel=params.use_kernel,
+        )
+        ents = local
+    hits = dedup_hits(hits, ents)
+    ent_global = jnp.where(ents >= 0, ents + part.entity_offset, -1)
+    return _emit(cands, hits, scores, ent_global, params)
+
+
+# --------------------------------------------------------------------------
+# (ISHFilter &) SSJoin (§3.1/3.3): signature probe against a sig table
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SigTable:
+    """Static bucketed hash table: signature -> entity ids."""
+
+    keys1: jnp.ndarray  # [B, cap] uint32
+    keys2: jnp.ndarray
+    ents: jnp.ndarray  # [B, cap] int32, -1 pad
+    n_buckets: int
+    bucket_cap: int
+    entity_offset: int
+    nbytes: int = 0
+    skew: float = 1.0  # max/mean bucket load (feeds the cost model)
+
+
+def build_sig_table(
+    esigs: EntitySignatures,
+    entity_offset: int = 0,
+    load_factor: float = 0.5,
+) -> SigTable:
+    sig = esigs.sig.astype(np.uint32)
+    n = max(len(sig), 1)
+    n_buckets = 1 << max(3, int(np.ceil(np.log2(n / load_factor + 1))))
+    k2 = hashing.hash_u32(sig, seed=_SIGKEY_SEED, xp=np)
+    bucket = _bucket_of(sig, n_buckets, xp=np).astype(np.int64)
+    counts = np.bincount(bucket, minlength=n_buckets)
+    cap = max(4, int(counts.max()) if counts.size else 4)
+    keys1 = np.zeros((n_buckets, cap), dtype=np.uint32)
+    keys2 = np.zeros((n_buckets, cap), dtype=np.uint32)
+    ents = np.full((n_buckets, cap), -1, dtype=np.int32)
+    fill = np.zeros((n_buckets,), dtype=np.int64)
+    for i in range(len(sig)):
+        b = int(bucket[i])
+        j = int(fill[b])
+        keys1[b, j] = sig[i]
+        keys2[b, j] = k2[i]
+        ents[b, j] = esigs.entity_id[i]
+        fill[b] = j + 1
+    mean = max(counts.mean(), 1e-9)
+    return SigTable(
+        keys1=jnp.asarray(keys1),
+        keys2=jnp.asarray(keys2),
+        ents=jnp.asarray(ents),
+        n_buckets=n_buckets,
+        bucket_cap=cap,
+        entity_offset=entity_offset,
+        nbytes=int(keys1.nbytes + keys2.nbytes + ents.nbytes),
+        skew=float(counts.max() / mean) if counts.size else 1.0,
+    )
+
+
+def probe_sig_table(table: SigTable, sigs, sig_mask):
+    """sigs [N, S] uint32 -> candidate entities [N, S*cap] (-1 invalid)."""
+    k2 = hashing.hash_u32(sigs, seed=_SIGKEY_SEED, xp=jnp)
+    b = _bucket_of(sigs, table.n_buckets, xp=jnp).astype(jnp.int32)
+    tk1, tk2, te = table.keys1[b], table.keys2[b], table.ents[b]  # [N,S,cap]
+    hit = (tk1 == sigs[..., None]) & (tk2 == k2[..., None]) & (te >= 0)
+    hit = hit & sig_mask[..., None]
+    ents = jnp.where(hit, te, -1)
+    return ents.reshape(ents.shape[0], -1)
+
+
+def extract_ssjoin_local(
+    cands: dict,
+    table: SigTable,
+    ddict: DeviceDictionary,
+    params: ExtractParams,
+) -> Matches:
+    """SSJoin probe+verify with the signature table fully local.
+
+    The distributed version routes candidates to the table's owner
+    device between ``window_signatures`` and ``probe_sig_table``.
+    """
+    toks, ok = cands["win_tokens"], cands["win_valid"]
+    sigs, mask = window_signatures(
+        params.scheme, toks, toks != PAD, params.gamma, params.lsh
+    )
+    ents = probe_sig_table(table, sigs, mask & ok[:, None])
+    gamma = 0.0 if params.scheme == SIG_VARIANT else params.gamma
+    hits, scores = verify_pairs(
+        toks,
+        ents + jnp.int32(table.entity_offset - ddict.entity_offset) * (ents >= 0),
+        ddict.tokens,
+        ddict.token_weight,
+        gamma=gamma,
+        sim_name=params.sim_name,
+        use_kernel=params.use_kernel,
+    )
+    hits = dedup_hits(hits, ents)
+    ent_global = jnp.where(ents >= 0, ents + table.entity_offset, -1)
+    return _emit(cands, hits, scores, ent_global, params)

@@ -1,0 +1,50 @@
+"""Brute-force numpy oracle: the ground-truth extraction every algorithm
+must reproduce (up to each scheme's documented recall caveats)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dictionary import Dictionary
+from repro.core.semantics import similarity
+from repro.extraction.substrings import window_base_np
+
+
+def oracle_extract(
+    doc_tokens: np.ndarray,
+    dictionary: Dictionary,
+    gamma: float,
+    sim_name: str = "extra",
+    entity_chunk: int = 64,
+) -> set[tuple[int, int, int, int]]:
+    """All (doc, pos, len, entity) with sim >= gamma, by brute force."""
+    D, T = doc_tokens.shape
+    L = dictionary.max_len
+    base = window_base_np(doc_tokens, L)  # [D, T, L]
+    real = base != 0
+    valid_len = np.cumprod(real, axis=-1).astype(bool)  # [D, T, L] cand validity
+
+    # candidate tokens [D, T, L(len), L(tok)]
+    keep = np.tril(np.ones((L, L), dtype=bool))
+    cand = np.where(keep[None, None], base[:, :, None, :], 0).astype(np.int32)
+    flat = cand.reshape(-1, L)
+    flat_valid = valid_len.reshape(-1)
+
+    out: set[tuple[int, int, int, int]] = set()
+    tw = dictionary.token_weight
+    E = dictionary.num_entities
+    for e0 in range(0, E, entity_chunk):
+        ents = dictionary.tokens[e0 : e0 + entity_chunk]  # [C, L]
+        sim = similarity(
+            sim_name,
+            ents[None, :, :],
+            flat[:, None, :],
+            tw,
+            xp=np,
+        )  # [N, C]
+        hits = (sim >= gamma - 1e-6) & flat_valid[:, None]
+        ns, cs = np.nonzero(hits)
+        for n, c in zip(ns.tolist(), cs.tolist()):
+            d, rem = divmod(n, T * L)
+            p, l = divmod(rem, L)
+            out.add((d, p, l + 1, e0 + c))
+    return out

@@ -1,0 +1,74 @@
+"""Fixed-capacity extraction result buffers (static shapes under jit)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Matches:
+    """A batch of extraction matches, -1-padded to static capacity.
+
+    doc/pos/length/entity: [R] int32 (-1 where empty); score: [R] f32;
+    count: [] int32 true matches (may exceed R if the buffer overflowed —
+    overflow is surfaced, never silent).
+    """
+
+    doc: jnp.ndarray
+    pos: jnp.ndarray
+    length: jnp.ndarray
+    entity: jnp.ndarray
+    score: jnp.ndarray
+    count: jnp.ndarray
+
+    def to_set(self) -> set[tuple[int, int, int, int]]:
+        """Host-side dedup'd set of (doc, pos, len, entity)."""
+        d = np.asarray(self.doc)
+        keep = d >= 0
+        return set(
+            zip(
+                np.asarray(self.doc)[keep].tolist(),
+                np.asarray(self.pos)[keep].tolist(),
+                np.asarray(self.length)[keep].tolist(),
+                np.asarray(self.entity)[keep].tolist(),
+            )
+        )
+
+
+def compact_matches(hit_mask, doc, pos, length, entity, score, capacity: int) -> Matches:
+    """Compact flat hit arrays into a fixed-capacity Matches buffer.
+
+    All inputs are flat [N]; ``hit_mask`` selects real matches. Uses
+    ``jnp.nonzero(..., size=capacity)`` for a static-shape compaction.
+    """
+    (idx,) = jnp.nonzero(hit_mask, size=capacity, fill_value=-1)
+    ok = idx >= 0
+    take = jnp.maximum(idx, 0)
+    return Matches(
+        doc=jnp.where(ok, doc[take], -1).astype(jnp.int32),
+        pos=jnp.where(ok, pos[take], -1).astype(jnp.int32),
+        length=jnp.where(ok, length[take], -1).astype(jnp.int32),
+        entity=jnp.where(ok, entity[take], -1).astype(jnp.int32),
+        score=jnp.where(ok, score[take], 0.0).astype(jnp.float32),
+        count=hit_mask.sum().astype(jnp.int32),
+    )
+
+
+def merge_matches(a: Matches, b: Matches, capacity: int) -> Matches:
+    """Merge two buffers into one of ``capacity`` (dedup NOT performed)."""
+    doc = jnp.concatenate([a.doc, b.doc])
+    hit = doc >= 0
+    return compact_matches(
+        hit,
+        doc,
+        jnp.concatenate([a.pos, b.pos]),
+        jnp.concatenate([a.length, b.length]),
+        jnp.concatenate([a.entity, b.entity]),
+        jnp.concatenate([a.score, b.score]),
+        capacity,
+    )

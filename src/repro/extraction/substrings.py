@@ -1,0 +1,60 @@
+"""Candidate substring (window) enumeration.
+
+A candidate is a contiguous token window ``(doc, pos, len)`` with
+``1 <= len <= L`` (L = longest dictionary entity), the paper's
+``L × |d|`` candidate set. Enumeration is fully vectorised and produces
+static shapes: for a document shard ``[D, T]`` we build
+
+  ``win_tokens`` [D, T, L]  tokens starting at each position (PAD-padded
+                            past the document end), and per-candidate
+                            views ``[D, T, L, L]`` where candidate
+                            ``(d, p, l)`` is the first ``l+1`` tokens.
+
+The [D,T,L,L] tensor is only materialised by the *baseline* SSJoin (the
+paper's strawman); the optimized paths keep the compact [D,T,L] base and
+evaluate lengths in place (the ISH filter prunes before any gather).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.dictionary import PAD
+
+
+def window_base(doc_tokens, max_len: int):
+    """[D, T] -> [D, T, L] tokens starting at each position."""
+    D, T = doc_tokens.shape
+    cols = jnp.arange(T)[:, None] + jnp.arange(max_len)[None, :]  # [T, L]
+    gathered = jnp.where(
+        cols[None] < T,
+        doc_tokens[:, jnp.minimum(cols, T - 1)],
+        PAD,
+    )
+    return gathered
+
+
+def candidate_tokens(win_base):
+    """[D, T, L] -> [D, T, L, L]: candidate (p, l) = first l+1 tokens."""
+    L = win_base.shape[-1]
+    keep = jnp.tril(jnp.ones((L, L), dtype=bool))  # [len, tok]
+    return jnp.where(keep[None, None], win_base[:, :, None, :], PAD)
+
+
+def candidate_valid(win_base):
+    """[D, T, L] -> [D, T, L] validity of candidate (p, l).
+
+    Candidate (p, l) is valid iff all of its l+1 tokens are real (no PAD
+    inside the window — PAD only occurs at document tails).
+    """
+    real = win_base != PAD  # [D, T, L]
+    return jnp.cumprod(real.astype(jnp.int32), axis=-1).astype(bool)
+
+
+def window_base_np(doc_tokens: np.ndarray, max_len: int) -> np.ndarray:
+    D, T = doc_tokens.shape
+    out = np.full((D, T, max_len), PAD, dtype=np.int32)
+    for l in range(max_len):
+        out[:, : T - l, l] = doc_tokens[:, l:]
+    return out

@@ -1,0 +1,59 @@
+"""Verification join: batched similarity of (candidate window, entity)
+pairs. This is the per-signature reducer verify of Def. 4 and the
+post-lookup verify of Def. 3 — the compute hot-spot the
+``kernels/jaccard_verify`` Pallas kernel accelerates; this module is the
+jnp fallback + dispatch point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.semantics import similarity
+
+
+def verify_pairs(
+    win_tokens,
+    ent_ids,
+    dict_tokens,
+    token_weight,
+    gamma: float,
+    sim_name: str,
+    use_kernel: bool = False,
+):
+    """Verify candidate (window, entity) pairs.
+
+    win_tokens: [N, L] padded windows; ent_ids: [N, K] int32 (-1
+    invalid); dict_tokens: [E, L]. Returns (hits [N, K] bool,
+    scores [N, K] f32).
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        scores = kops.jaccard_verify(
+            win_tokens, ent_ids, dict_tokens, token_weight, sim_name
+        )
+    else:
+        safe_ids = jnp.maximum(ent_ids, 0)
+        ent_toks = dict_tokens[safe_ids]  # [N, K, L]
+        scores = similarity(
+            sim_name,
+            ent_toks,
+            win_tokens[:, None, :],
+            token_weight,
+            xp=jnp,
+        )
+    hits = (scores >= gamma - 1e-6) & (ent_ids >= 0)
+    return hits, scores
+
+
+def dedup_hits(hit_mask, ent_ids):
+    """Drop duplicate (window, entity) hits within each window's K list.
+
+    The same entity can be reached through several signatures/tokens;
+    keep only the first hit per (row, entity).
+    """
+    same = (ent_ids[:, :, None] == ent_ids[:, None, :]) & hit_mask[:, None, :]
+    K = ent_ids.shape[1]
+    earlier = jnp.tril(jnp.ones((K, K), dtype=bool), k=-1)
+    dup = (same & earlier[None]).any(axis=-1)
+    return hit_mask & ~dup

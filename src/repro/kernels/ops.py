@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are the dispatch points the extraction engine calls when
+``use_kernel=True``: they adapt engine-level arguments (entity-id lists,
+weight tables) to the dense tile layout the kernels consume, and select
+interpret mode off-TPU (the assignment's validation path — the kernel
+*body* still executes, in Python, on CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import jaccard_verify as _jv
+from repro.kernels import minhash as _mh
+from repro.kernels import window_filter as _wf
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def jaccard_verify(win_tokens, ent_ids, dict_tokens, token_weight, sim_name: str):
+    """Engine-facing verify: gathers entity rows/weights, runs the kernel.
+
+    win_tokens [N, L]; ent_ids [N, K] (-1 invalid); dict_tokens [E, L];
+    token_weight [V]. Returns scores [N, K] f32 (0 for invalid ids).
+    Falls back to the jnp reference for modes the kernel doesn't fuse.
+    """
+    if sim_name not in ("extra", "missing"):
+        from repro.core.semantics import similarity
+
+        safe = jnp.maximum(ent_ids, 0)
+        return similarity(
+            sim_name, dict_tokens[safe], win_tokens[:, None, :], token_weight, xp=jnp
+        )
+
+    from repro.core.semantics import first_occurrence_mask
+
+    safe = jnp.maximum(ent_ids, 0)
+    ent_toks = dict_tokens[safe]  # [N, K, L]
+    ent_w = token_weight[ent_toks] * (ent_toks != 0)
+    first = first_occurrence_mask(win_tokens, xp=jnp)
+    win_w = token_weight[win_tokens] * first
+    scores = _jv.jaccard_verify_pallas(
+        win_tokens,
+        win_w.astype(jnp.float32),
+        ent_toks,
+        ent_w.astype(jnp.float32),
+        mode=sim_name,
+        interpret=_interpret(),
+    )
+    return jnp.where(ent_ids >= 0, scores, 0.0)
+
+
+def minhash(tokens, valid, bands: int, rows: int):
+    """[N, L] tokens -> [N, bands] uint32 banded minhash signatures."""
+    return _mh.minhash_pallas(
+        tokens, valid, bands=bands, rows=rows, interpret=_interpret()
+    )
+
+
+def window_filter(doc_tokens, bits, num_bits: int, num_hashes: int, max_len: int):
+    """[D, T] docs -> [D, T, L] bool window-survival mask (Bloom probe)."""
+    return _wf.window_filter_pallas(
+        doc_tokens,
+        bits,
+        num_bits=num_bits,
+        num_hashes=num_hashes,
+        max_len=max_len,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,113 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function is the bit-semantics reference the kernels are tested
+against across shape/dtype sweeps (tests/test_kernels.py). They are also
+the CPU fallbacks used when kernels are disabled.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_GOLDEN = 0x9E3779B9
+_BLOOM_SEED_BASE = 9100
+_LSH_SEED_BASE = 7000
+
+
+def jaccard_verify_ref(win_tokens, win_w, ent_tokens, ent_w, mode: str):
+    """Weighted containment scores for (window, entity-candidate) pairs.
+
+    win_tokens [N, L] i32 (PAD=0), win_w [N, L] f32 (0 where invalid /
+    duplicate), ent_tokens [N, K, L] i32, ent_w [N, K, L] f32 (0 pad).
+    mode: "extra" | "missing".
+    Returns scores [N, K] f32 = w(e ∩ s) / w(e or s).
+    """
+    eq = ent_tokens[:, :, :, None] == win_tokens[:, None, None, :]  # [N,K,L,Lw]
+    valid = (ent_tokens[:, :, :, None] != 0) & (win_tokens[:, None, None, :] != 0)
+    hit = (eq & valid).any(axis=-1)  # entity token appears in window
+    inter = (ent_w * hit).sum(axis=-1)  # [N, K]
+    we = ent_w.sum(axis=-1)
+    ws = win_w.sum(axis=-1)[:, None]
+    denom = we if mode == "extra" else jnp.broadcast_to(ws, we.shape)
+    scores = inter / jnp.maximum(denom, 1e-30)
+    return jnp.where(ws > 0, scores, 0.0).astype(jnp.float32)
+
+
+def _hash_u32(x, seed):
+    off = np.uint32((_GOLDEN * (seed + 1)) & 0xFFFFFFFF)
+    x = x.astype(jnp.uint32) + off
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_C1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_C2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _combine(h, g):
+    return _mix(h ^ (g + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2)))
+
+
+def _mix(x):
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_C1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_C2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def minhash_ref(tokens, valid, bands: int, rows: int):
+    """Banded MinHash signatures. tokens [N, L] i32, valid [N, L] bool.
+
+    Returns [N, bands] uint32 — bit-identical to
+    ``signatures._minhash_jnp`` (same seeds/combine).
+    """
+    outs = []
+    for b in range(bands):
+        mins = []
+        for r in range(rows):
+            h = _hash_u32(tokens, _LSH_SEED_BASE + b * rows + r)
+            h = jnp.where(valid, h, jnp.uint32(0xFFFFFFFF))
+            mins.append(h.min(axis=-1))
+        band = mins[0]
+        for m in mins[1:]:
+            band = _combine(band, m)
+        band = _combine(band, jnp.full_like(band, jnp.uint32(b + 1)))
+        outs.append(band)
+    return jnp.stack(outs, axis=-1)
+
+
+def window_filter_ref(doc_tokens, bits, num_bits: int, num_hashes: int, max_len: int):
+    """Fused ISH-filter probe over all (pos, len) windows.
+
+    doc_tokens [D, T] i32; bits [num_bits//32] uint32.
+    Returns survive [D, T, L] bool: window (p, l) contains >= 1 token
+    probing into the Bloom filter (ignoring PAD validity, which the
+    caller combines in).
+    """
+    hit = jnp.ones(doc_tokens.shape, bool)
+    for k in range(num_hashes):
+        h = _hash_u32(doc_tokens, _BLOOM_SEED_BASE + k)
+        pos = h % jnp.uint32(num_bits)
+        word = bits[(pos // 32).astype(jnp.int32)]
+        bit = (word >> (pos % 32)) & jnp.uint32(1)
+        hit = hit & (bit == 1)
+    D, T = doc_tokens.shape
+    # window (p, l) covers tokens p..p+l: running-or over shifted hits
+    outs = []
+    acc = jnp.zeros((D, T), bool)
+    shifted = hit
+    for l in range(max_len):
+        acc = acc | shifted
+        outs.append(acc)
+        shifted = jnp.concatenate(
+            [shifted[:, 1:], jnp.zeros((D, 1), bool)], axis=1
+        )
+    return jnp.stack(outs, axis=-1)

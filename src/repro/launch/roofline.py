@@ -1,0 +1,143 @@
+"""Roofline-term derivation from a compiled dry-run artifact (deliverable g).
+
+This container is CPU-only; TPU v5e is the TARGET. We derive the three
+roofline terms structurally from the compiled SPMD module via
+``launch/hlo_analysis.py`` (trip-count-aware — XLA's own cost_analysis
+counts scan bodies once, which understates a 16-group layer scan 16×):
+
+    compute term    = max(MXU_s, VPU_s)
+        MXU_s = exact dot/conv FLOPs / 197e12   (bf16 MXU peak)
+        VPU_s = approx elementwise FLOPs / 3e12 (VPU model, see below)
+    memory term     = fusion-boundary HBM bytes / 819e9
+    collective term = ring-model wire bytes / 50e9
+
+All inputs are PER-DEVICE (the SPMD module is the per-device program;
+verified: a 16-way sharded 1024³ matmul reports 2·1024³/16 flops), so the
+prompt's ``/(chips × …)`` normalisation is already folded in.
+
+VPU model: v4's VPU is ≈4.3 TFLOP/s against a 275 TFLOP/s MXU; scaling to
+v5e's 197 TFLOP/s gives ≈3 TFLOP/s. Elementwise counts are 1 op/output
+element (transcendentals cost more, masks less), so VPU_s is a ±3×
+estimate — good enough to flag "softmax-bound" cells, and iteration-over-
+iteration deltas (what §Perf optimizes) are exact in the byte/flop counts.
+
+``memory_analysis()`` (peak live bytes) is taken from XLA directly — its
+buffer assignment handles loops correctly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch import hlo_analysis as H
+
+# ---- TPU v5e hardware model (per chip) ------------------------------------
+PEAK_FLOPS = 197e12  # bf16 MXU FLOP/s
+VPU_FLOPS = 3e12  # modeled VPU throughput (see module docstring)
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (per-direction, per axis)
+
+
+def total_params(cfg) -> float:
+    """Total parameter count (MoE: ALL experts), embeddings included."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    hd = cfg.resolved_head_dim
+    H_, KH = cfg.num_heads, cfg.num_kv_heads
+    attn_p = d * hd * (H_ + 2 * KH) + H_ * hd * d
+    gated = cfg.act in ("swiglu", "geglu")
+    mlp_p = d * cfg.d_ff * (3 if gated else 2)
+    if cfg.num_experts:
+        mlp_p = cfg.num_experts * mlp_p + d * cfg.num_experts
+    n = L * (attn_p + mlp_p) + 2 * d * V
+    if cfg.encoder_layers:
+        n += cfg.encoder_layers * (attn_p + d * cfg.d_ff * 2)
+    return float(n)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only); N counts active
+    params (MoE: top_k experts + router), D = tokens processed."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.padded_vocab
+    hd = cfg.resolved_head_dim
+    H_, KH = cfg.num_heads, cfg.num_kv_heads
+    attn_p = d * hd * (H_ + 2 * KH) + H_ * hd * d
+    gated = cfg.act in ("swiglu", "geglu")
+    mlp_p = d * cfg.d_ff * (3 if gated else 2)
+    if cfg.num_experts:
+        mlp_active = cfg.top_k * mlp_p + d * cfg.num_experts
+    else:
+        mlp_active = mlp_p
+    per_layer = attn_p + mlp_active
+    n_active = L * per_layer + 2 * d * V
+    if cfg.encoder_layers:
+        n_active += cfg.encoder_layers * (attn_p + mlp_p)
+    if shape.mode == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/sequence
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    mxu_s: float
+    vpu_s: float
+    stats: H.Stats
+    model_flops: float
+    useful_frac: float  # MODEL_FLOPS / (MXU_FLOPs × chips)
+    bottleneck: str
+    step_time_s: float  # max of the three terms (no-overlap bound)
+    chips: int
+    xla_cost: dict
+
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful FLOPs / (chips × peak × step_time)."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.step_time_s)
+
+    def to_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "mxu_s": self.mxu_s,
+            "vpu_s": self.vpu_s,
+            "hlo": self.stats.to_dict(),
+            "model_flops": self.model_flops,
+            "useful_frac": self.useful_frac,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "chips": self.chips,
+            "roofline_fraction": self.roofline_fraction(),
+            "xla_cost_reference": self.xla_cost,
+        }
+
+
+def derive(cost_analysis: dict, hlo_text: str, cfg, shape, chips: int) -> Roofline:
+    stats = H.analyze(hlo_text)
+    mxu_s = stats.mxu_flops / PEAK_FLOPS
+    vpu_s = stats.vpu_flops / VPU_FLOPS
+    ct = max(mxu_s, vpu_s)
+    mt = stats.bytes / HBM_BW
+    st = stats.wire_bytes / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": st}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return Roofline(
+        compute_s=ct,
+        memory_s=mt,
+        collective_s=st,
+        mxu_s=mxu_s,
+        vpu_s=vpu_s,
+        stats=stats,
+        model_flops=mf,
+        useful_frac=mf / max(stats.mxu_flops * chips, 1.0),
+        bottleneck=bottleneck,
+        step_time_s=max(ct, mt, st),
+        chips=chips,
+        xla_cost={k: cost_analysis.get(k) for k in ("flops", "bytes accessed")
+                  if k in cost_analysis},
+    )

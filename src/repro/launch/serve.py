@@ -1,0 +1,81 @@
+"""Serving launcher: batched KV-cache decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-9b --requests 12
+
+Uses the reduced config on CPU; the production decode path is the same
+``decode_step`` the dry-run lowers for decode_32k/long_500k cells.
+Optionally annotates generated text with EE-Join entity mentions
+(--annotate), demonstrating the operator as a serve-time output stage.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.data.synth import make_corpus
+from repro.launch.mesh import make_cpu_mesh
+from repro.models.model import build_model
+from repro.models.sharding import ShardingRules
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--annotate", action="store_true")
+    args = ap.parse_args()
+
+    mesh = make_cpu_mesh(1, 1)
+    cfg = get_smoke_config(args.arch)
+    rules = ShardingRules(mesh)
+    model = build_model(cfg, rules)
+    params, _ = model.init(jax.random.PRNGKey(0))
+
+    eng = ServeEngine(
+        model, params, batch_slots=args.slots, max_len=args.max_len,
+        temperature=args.temperature,
+    )
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab_size, size=rng.integers(4, 12)).tolist()
+        r = Request(prompt=prompt, max_new_tokens=args.max_new)
+        reqs.append(r)
+        eng.submit(r)
+    eng.run()
+    done = sum(r.done for r in reqs)
+    print(f"[serve] completed {done}/{len(reqs)} requests "
+          f"(slots={args.slots}, cache pos={int(eng.cache['pos'])})")
+
+    if args.annotate:
+        corpus = make_corpus(num_docs=4, doc_len=64,
+                             vocab_size=cfg.vocab_size, num_entities=32, seed=1)
+        op = EEJoinOperator(corpus.dictionary, EEJoinConfig(gamma=0.8))
+        plan = op.choose_plan(
+            op.gather_statistics(corpus.doc_tokens, total_docs=4)
+        )
+        prepared = op.prepare(plan)
+        outs = np.zeros((len(reqs), args.max_new), np.int32)
+        for i, r in enumerate(reqs):
+            toks = (r.prompt + r.out)[: args.max_new]
+            outs[i, : len(toks)] = toks
+        m = op.execute(prepared, outs)
+        n = int((np.asarray(m.doc) >= 0).sum())
+        print(f"[serve] EE-Join annotation: {n} entity mentions "
+              f"in {len(reqs)} generations")
+    for r in reqs[:3]:
+        print(f"[serve] prompt={r.prompt[:6]}... -> out={r.out[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

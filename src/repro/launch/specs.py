@@ -1,0 +1,298 @@
+"""Abstract input specs + shardings for every (arch × shape) dry-run cell.
+
+Everything here is ``jax.ShapeDtypeStruct`` — no device allocation ever
+happens (the full configs are exercised ONLY via lower/compile). The same
+builders drive the real launchers with concrete arrays.
+
+Cell kinds (configs/base.SHAPES):
+  train_4k    -> ``train_step(params, opt_state, batch)``
+  prefill_32k -> ``prefill(params, tokens[, context])``
+  decode_32k  -> ``serve_step(params, cache, tokens)`` with a seq_len cache
+  long_500k   -> same as decode, batch=1, sub-quadratic archs only
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.model import LM, build_model
+from repro.models.sharding import ShardingRules
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.trainer import make_train_step
+
+
+def tree_shardings(mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_params(model: LM):
+    """(param ShapeDtypeStructs, PartitionSpec tree) with zero allocation."""
+    captured: list = []
+
+    def init_only(k):
+        p, s = model.init(k)
+        captured.append(s)
+        return p
+
+    p_shapes = jax.eval_shape(init_only, jax.random.PRNGKey(0))
+    return p_shapes, captured[0]
+
+
+def opt_specs(param_specs, fp32_master: bool = True):
+    s = {
+        "m": param_specs,
+        "v": param_specs,
+        "step": P(),
+    }
+    if fp32_master:
+        s["master"] = param_specs
+    return s
+
+
+def _batch_axes(rules: ShardingRules, B: int):
+    """Resolved mesh axes for the global-batch dim (with divisibility
+    fallback, e.g. long_500k's batch=1 -> replicated)."""
+    return rules.resolve("batch", B)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    """Training/prefill batch ShapeDtypeStructs + PartitionSpec tree."""
+    B, S = shape.global_batch, shape.seq_len
+    ba = _batch_axes(rules, B)
+    shapes: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    specs: dict[str, Any] = {
+        "tokens": P(ba, None),
+        "labels": P(ba, None),
+    }
+    if cfg.context_len:
+        shapes["context"] = jax.ShapeDtypeStruct(
+            (B, cfg.context_len, cfg.context_dim or cfg.d_model),
+            jnp.dtype(cfg.dtype),
+        )
+        specs["context"] = P(ba, None, None)
+    return shapes, specs
+
+
+def cache_abstract(model: LM, batch: int, max_len: int, kv_splits: int):
+    """Abstract KV/state cache for decode cells (ShapeDtypeStructs)."""
+    cfg = model.cfg
+    if cfg.context_len:
+        ctx = jax.ShapeDtypeStruct(
+            (batch, cfg.context_len, cfg.context_dim or cfg.d_model),
+            jnp.dtype(cfg.dtype),
+        )
+        return jax.eval_shape(
+            lambda p, c: model.init_cache(p, batch, max_len, kv_splits, context=c),
+            model_abstract_params_cached(model), ctx,
+        )
+    return jax.eval_shape(
+        lambda p: model.init_cache(p, batch, max_len, kv_splits),
+        model_abstract_params_cached(model),
+    )
+
+
+_ABSTRACT_CACHE: dict[int, tuple] = {}
+
+
+def model_abstract_params_cached(model: LM):
+    key = id(model)
+    if key not in _ABSTRACT_CACHE:
+        _ABSTRACT_CACHE[key] = abstract_params(model)
+    return _ABSTRACT_CACHE[key][0]
+
+
+def model_abstract_specs_cached(model: LM):
+    key = id(model)
+    if key not in _ABSTRACT_CACHE:
+        _ABSTRACT_CACHE[key] = abstract_params(model)
+    return _ABSTRACT_CACHE[key][1]
+
+
+def cache_spec_tree(model: LM, cache_shapes, rules: ShardingRules):
+    """PartitionSpec tree matching ``init_cache``'s pytree.
+
+    ``layers`` leaves carry a leading G (group-stack) dim -> prepend None
+    to the per-block spec; ``tail`` blocks are unstacked.
+    """
+    cfg = model.cfg
+
+    def block_specs(kind: str, shapes_dict, stacked: bool):
+        if stacked:
+            stripped = {
+                k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                for k, v in shapes_dict.items()
+            }
+        else:
+            stripped = shapes_dict
+        sp = T.cache_specs(cfg, kind, rules, stripped)
+        if stacked:
+            sp = {k: P(*((None,) + tuple(v))) for k, v in sp.items()}
+        return sp
+
+    layers = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        layers[f"b{i}"] = block_specs(kind, cache_shapes["layers"][f"b{i}"], True)
+    tail = [
+        block_specs(kind, cache_shapes["tail"][i], False)
+        for i, kind in enumerate(cfg.extra_tail_blocks)
+    ]
+    return {"layers": layers, "tail": tail, "pos": P()}
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) dry-run cell."""
+
+    arch: str
+    shape: ShapeConfig
+    fn: Any  # callable to jit
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    static_info: dict
+
+
+# params (bf16) + optimizer state (3x f32) per model-shard below this
+# threshold -> skip FSDP entirely (params replicated over `data`): the
+# whole state fits, and per-layer-per-microbatch weight all-gathers
+# disappear (§Perf hillclimb #3, second attempt — measured win on the
+# small archs; dbrx-class models keep FSDP because they must).
+_FSDP_FREE_BYTES = 2e9
+
+
+def _model_unshardable_state(cfg: ModelConfig, tp: int) -> float:
+    """Param+opt bytes that stay REPLICATED under model-only sharding
+    (attention weights whose head dims don't divide the TP axis — for
+    those, the `embed` dim is the only shardable one, so dropping FSDP
+    replicates their full fp32 optimizer state on every device; this is
+    what blew whisper's argument bytes to 9.7 GB, §Perf log)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+    per_layer = 0.0
+    if tp > 1 and H % tp:
+        per_layer += 2.0 * d * H * hd  # wq + wo
+    if tp > 1 and KH % tp:
+        per_layer += 2.0 * d * KH * hd  # wk + wv
+    layers = cfg.num_layers + cfg.encoder_layers
+    return per_layer * layers * 14.0
+
+
+def default_rules(cfg: ModelConfig, mesh) -> ShardingRules:
+    from repro.launch import roofline as RL
+
+    n_model = mesh.shape.get("model", 1)
+    state_bytes = RL.total_params(cfg) * 14.0 / max(n_model, 1)
+    if (
+        state_bytes <= _FSDP_FREE_BYTES
+        and _model_unshardable_state(cfg, n_model) <= _FSDP_FREE_BYTES / 4
+    ):
+        return ShardingRules(mesh, rules={"embed": (None,)})
+    return ShardingRules(mesh)
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    microbatches: int = 1,
+    kv_splits: int = 0,
+    fp32_master: bool = True,
+    rules: ShardingRules | None = None,
+) -> Cell:
+    """Assemble the jit-able (fn, abstract args, shardings) for one cell."""
+    rules = rules or default_rules(cfg, mesh)
+    model = build_model(cfg, rules)
+    p_shapes = model_abstract_params_cached(model)
+    p_specs = model_abstract_specs_cached(model)
+    param_sh = tree_shardings(mesh, p_specs)
+    scalar_sh = NamedSharding(mesh, P())
+
+    if shape.mode == "train":
+        o_shapes = jax.eval_shape(
+            lambda p: init_opt_state(p, fp32_master), p_shapes
+        )
+        opt_sh = tree_shardings(mesh, opt_specs(p_specs, fp32_master))
+        b_shapes, b_specs = batch_specs(cfg, shape, rules)
+        batch_sh = tree_shardings(mesh, b_specs)
+        step = make_train_step(
+            model, AdamWConfig(fp32_master=fp32_master), microbatches
+        )
+        return Cell(
+            arch=cfg.name,
+            shape=shape,
+            fn=step,
+            args=(p_shapes, o_shapes, b_shapes),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, scalar_sh),
+            donate_argnums=(0, 1),
+            static_info={"microbatches": microbatches,
+                         "fp32_master": fp32_master,
+                         "fallbacks": list(rules.fallbacks)},
+        )
+
+    if shape.mode == "prefill":
+        b_shapes, b_specs = batch_specs(cfg, shape, rules)
+        batch_sh = tree_shardings(mesh, b_specs)
+        ba = _batch_axes(rules, shape.global_batch)
+        out_sh = NamedSharding(mesh, P(ba, rules.resolve("vocab", cfg.padded_vocab)))
+        if cfg.context_len:
+            fn = lambda p, t, c: model.prefill(p, t, context=c)  # noqa: E731
+            args = (p_shapes, b_shapes["tokens"], b_shapes["context"])
+            in_sh = (param_sh, batch_sh["tokens"], batch_sh["context"])
+        else:
+            fn = lambda p, t: model.prefill(p, t)  # noqa: E731
+            args = (p_shapes, b_shapes["tokens"])
+            in_sh = (param_sh, batch_sh["tokens"])
+        return Cell(
+            arch=cfg.name, shape=shape, fn=fn, args=args,
+            in_shardings=in_sh, out_shardings=out_sh, donate_argnums=(),
+            static_info={"fallbacks": list(rules.fallbacks)},
+        )
+
+    # ---- decode (decode_32k / long_500k): one new token vs seq_len cache
+    B, S = shape.global_batch, shape.seq_len
+    if not kv_splits:
+        # split-KV decode shards the cache over `model` ONLY when the KV
+        # heads can't (a spec may use each mesh axis at most once)
+        m = mesh.shape.get("model", 1)
+        if cfg.num_kv_heads % m == 0:
+            kv_splits = 1
+        else:
+            kv_splits = m if S % m == 0 else 1
+    model_d = model
+    c_shapes = cache_abstract(model_d, B, S, kv_splits)
+    c_specs = cache_spec_tree(model_d, c_shapes, rules)
+    cache_sh = tree_shardings(mesh, c_specs)
+    ba = _batch_axes(rules, B)
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(ba))
+    logits_sh = NamedSharding(mesh, P(ba, rules.resolve("vocab", cfg.padded_vocab)))
+
+    def serve_step(p, cache, t):
+        return model_d.decode_step(p, cache, t)
+
+    return Cell(
+        arch=cfg.name, shape=shape, fn=serve_step,
+        args=(p_shapes, c_shapes, tok),
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(1,),
+        static_info={"kv_splits": kv_splits,
+                     "fallbacks": list(rules.fallbacks)},
+    )

@@ -1,0 +1,89 @@
+"""Per-(arch × shape × mesh) execution knobs.
+
+Two layers:
+
+* ``default_knobs`` — BASELINE memory-fit levers (microbatch count chosen
+  so the remat activation stash fits HBM, KV-split count matching the
+  model axis). These are *feasibility* settings, not perf hillclimbs; the
+  paper-faithful baseline uses them as-is.
+* ``TUNED`` — §Perf hillclimb overrides, applied only with ``--tuned``.
+  Every entry corresponds to one hypothesis→change→measure row in
+  EXPERIMENTS.md §Perf. ``cfg`` keys are ``dataclasses.replace``d into
+  the ModelConfig; the rest feed ``build_cell``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# activation-stash budget for the scan carry checkpoint per device
+_STASH_BUDGET = 4e9
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Smallest power-of-two microbatch count whose remat stash
+    (G groups × per-device microbatch tokens × d_model × 2B) fits.
+
+    (A large-vocab logits term lived here briefly — §Perf iteration #7 —
+    but the fused chunked CE loss (#9) removed the [mb,S,V] peak
+    entirely, and fewer microbatches mean fewer FSDP re-gathers.)"""
+    if shape.mode != "train":
+        return 1
+    dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    per_dev_batch = max(shape.global_batch // dp, 1)
+    stash = (
+        cfg.num_groups * per_dev_batch * shape.seq_len * cfg.d_model * 2.0
+    )
+    micro = 1
+    while stash / micro > _STASH_BUDGET and micro < per_dev_batch:
+        micro *= 2
+    return micro
+
+
+# Cell-specific overrides that are part of the OPTIMIZED build's
+# defaults (each is one §Perf iteration; the formula alone can't see
+# XLA's f32 residual stacking or flash workspace):
+#   whisper train: remat residuals stack in f32 ([G,mb,S,d] — §Perf #10);
+#     halving the microbatch tokens halves the dominant live buffer.
+#   dbrx train: 0.4 GB over budget at the microbatch cap; smaller flash
+#     chunks shrink the attention workspace.
+_DEFAULT_OVERRIDES: dict[tuple[str, str], dict] = {
+    ("whisper-large-v3", "train_4k"): {"microbatches": 8},
+    ("dbrx-132b", "train_4k"): {"fp32_master": False},
+    # the stash formula can't see per-microbatch f32 residual internals:
+    # rglru's associative_scan saves log-depth stage tensors; llama's
+    # cross+self attention saves stack in f32 (§Perf #10) — both scale
+    # with microbatch tokens, so give these cells more microbatches.
+    ("recurrentgemma-9b", "train_4k"): {"microbatches": 8},
+    ("llama-3.2-vision-11b", "train_4k"): {"microbatches": 8},
+}
+
+
+def default_knobs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    knobs = {"microbatches": default_microbatches(cfg, shape, mesh)}
+    knobs.update(_DEFAULT_OVERRIDES.get((cfg.name, shape.name), {}))
+    return knobs
+
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb overrides — see EXPERIMENTS.md §Perf for the
+# hypothesis → change → before/after log behind every entry.
+# key: (arch, shape_name)
+# ---------------------------------------------------------------------------
+TUNED: dict[tuple[str, str], dict] = {}
+
+
+def resolve(cfg: ModelConfig, shape: ShapeConfig, mesh, tuned: bool):
+    """-> (possibly-replaced cfg, build_cell kwargs)."""
+    knobs = default_knobs(cfg, shape, mesh)
+    cfg_ov = knobs.pop("cfg", None)
+    if cfg_ov:
+        cfg = dataclasses.replace(cfg, **cfg_ov)
+    if tuned:
+        ov = dict(TUNED.get((cfg.name, shape.name), {}))
+        cfg_ov = ov.pop("cfg", None)
+        if cfg_ov:
+            cfg = dataclasses.replace(cfg, **cfg_ov)
+        knobs.update(ov)
+    return cfg, knobs

@@ -1,0 +1,224 @@
+"""Flash-attention with a custom VJP (§Perf hillclimbs #1 and #4).
+
+Two structural choices vs the naive baseline (layers.chunked_attention):
+
+1. **Flash backward** — the baseline's autodiff backward saves the
+   probability matrices of every (q-chunk × kv-chunk) pair. We save only
+   ``(q, k, v, out, lse)`` and recompute scores chunkwise in a two-pass
+   backward (dq sweep + dk/dv sweep). Exact math; verified against the
+   naive reference in tests/test_flash.py.
+
+2. **GQA-flattened layout** — the baseline computes in ``[B,S,KH,G,D]``,
+   which is shardable over the ``model`` axis only via KH. Most assigned
+   archs have KH ∈ {1,2,4,8} < 16, so every attention tensor fell back
+   to replicated and XLA inserted per-layer q/out all-gathers (the +156
+   GB/device all-gather regression on granite, §Perf log). Here K/V are
+   expanded to the full H heads *outside* the custom VJP (autodiff sums
+   the cotangents back to KH automatically) and everything runs in
+   ``[B,S,H,D]`` — head-sharded TP for every arch whose H divides the
+   model axis (8 of 10). Per-device K/V bytes are unchanged: each shard
+   holds H/16 expanded heads instead of the full KH replicated.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_KV_PAD_POS = -(1 << 30)
+_NEG = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int):
+    m = (kpos[None, :] != _KV_PAD_POS)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= qpos[:, None] - kpos[None, :] < window
+    return m  # [qc, kc]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, q_positions, kv_positions, causal, window, q_chunk,
+           kv_chunk):
+    out, _ = _fwd(q, k, v, q_positions, kv_positions, causal, window,
+                  q_chunk, kv_chunk)
+    return out
+
+
+def _fwd(q, k, v, q_positions, kv_positions, causal, window, q_chunk,
+         kv_chunk):
+    """q [B,Sq,H,D]; k/v [B,Skv,H,D] (pre-expanded heads)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    n_q, n_kv = Sq // q_chunk, Skv // kv_chunk
+    k_r = k.reshape(B, n_kv, kv_chunk, H, D)
+    v_r = v.reshape(B, n_kv, kv_chunk, H, D)
+    kpos_r = kv_positions.reshape(n_kv, kv_chunk)
+
+    def q_block(args):
+        qc, qpos = args  # [B,qc,H,D], [qc]
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kc, vc, kpos = xs
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                           preferred_element_type=jnp.float32)
+            msk = _mask(qpos, kpos, causal, window)
+            s = jnp.where(msk[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(qc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        qc_sz = qc.shape[1]
+        m0 = jnp.full((B, H, qc_sz), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, qc_sz), jnp.float32)
+        a0 = jnp.zeros((B, H, qc_sz, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k_r.swapaxes(0, 1), v_r.swapaxes(0, 1), kpos_r),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), jnp.inf)
+        return out.astype(v.dtype), lse  # [B,H,qc,D], [B,H,qc]
+
+    q_r = q.reshape(B, n_q, q_chunk, H, D).swapaxes(0, 1)
+    qpos_r = q_positions.reshape(n_q, q_chunk)
+    outs, lses = jax.lax.map(q_block, (q_r, qpos_r))  # [n_q,B,H,qc,D]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D)
+    lse = lses.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return out, lse
+
+
+def _fwd_vjp(q, k, v, q_positions, kv_positions, causal, window, q_chunk,
+             kv_chunk):
+    out, lse = _fwd(q, k, v, q_positions, kv_positions, causal, window,
+                    q_chunk, kv_chunk)
+    return out, (q, k, v, q_positions, kv_positions, out, lse)
+
+
+def _bwd_vjp(causal, window, q_chunk, kv_chunk, res, dout):
+    q, k, v, q_positions, kv_positions, out, lse = res
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    n_q, n_kv = Sq // q_chunk, Skv // kv_chunk
+
+    # delta_t = sum_d dout_t,d * out_t,d (flash-attention bwd identity)
+    delta = jnp.einsum(
+        "bshd,bshd->bhs", dout.astype(jnp.float32), out.astype(jnp.float32)
+    )  # [B,H,Sq]
+
+    q_r = q.reshape(B, n_q, q_chunk, H, D).swapaxes(0, 1)
+    do_r = dout.reshape(B, n_q, q_chunk, H, D).swapaxes(0, 1)
+    k_r = k.reshape(B, n_kv, kv_chunk, H, D).swapaxes(0, 1)
+    v_r = v.reshape(B, n_kv, kv_chunk, H, D).swapaxes(0, 1)
+    qpos_r = q_positions.reshape(n_q, q_chunk)
+    kpos_r = kv_positions.reshape(n_kv, kv_chunk)
+    lse_r = lse.reshape(B, H, n_q, q_chunk).transpose(2, 0, 1, 3)
+    dl_r = delta.reshape(B, H, n_q, q_chunk).transpose(2, 0, 1, 3)
+
+    def _p(qc, kc, qpos, kpos, lse_c):
+        s = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                       preferred_element_type=jnp.float32)
+        msk = _mask(qpos, kpos, causal, window)
+        s = jnp.where(msk[None, None], s, _NEG)
+        lse_safe = jnp.where(jnp.isfinite(lse_c), lse_c, 0.0)
+        p = jnp.exp(s - lse_safe[..., None])
+        p = jnp.where(msk[None, None], p, 0.0)
+        p = jnp.where(jnp.isfinite(lse_c)[..., None], p, 0.0)
+        return p  # [B,H,qc,kc] f32
+
+    # ---- pass A: dq (map q chunks; scan kv chunks)
+    def dq_block(args):
+        qc, doc, qpos, lse_c, dl_c = args
+
+        def kv_step(dq_acc, xs):
+            kc, vc, kpos = xs
+            p = _p(qc, kc, qpos, kpos, lse_c)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dl_c[..., None])
+            dq_c = jnp.einsum("bhqk,bkhd->bqhd", ds.astype(qc.dtype), kc,
+                              preferred_element_type=jnp.float32)
+            return dq_acc + dq_c, None
+
+        dq0 = jnp.zeros((B, q_chunk, H, D), jnp.float32)
+        dq_c, _ = jax.lax.scan(kv_step, dq0, (k_r, v_r, kpos_r))
+        return dq_c
+
+    dq_r = jax.lax.map(dq_block, (q_r, do_r, qpos_r, lse_r, dl_r))
+    dq = dq_r.swapaxes(0, 1).reshape(B, Sq, H, D).astype(q.dtype)
+
+    # ---- pass B: dk/dv (map kv chunks; scan q chunks)
+    def dkv_block(args):
+        kc, vc, kpos = args
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc = carry
+            qc, doc, qpos, lse_c, dl_c = xs
+            p = _p(qc, kc, qpos, kpos, lse_c)
+            dv_c = jnp.einsum("bhqk,bqhd->bkhd", p.astype(doc.dtype), doc,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dl_c[..., None])
+            dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds.astype(qc.dtype), qc,
+                              preferred_element_type=jnp.float32)
+            return (dk_acc + dk_c, dv_acc + dv_c), None
+
+        z = jnp.zeros((B, kv_chunk, H, D), jnp.float32)
+        (dk_c, dv_c), _ = jax.lax.scan(
+            q_step, (z, z), (q_r, do_r, qpos_r, lse_r, dl_r)
+        )
+        return dk_c, dv_c
+
+    dk_r, dv_r = jax.lax.map(dkv_block, (k_r, v_r, kpos_r))
+    dk = dk_r.swapaxes(0, 1).reshape(B, Skv, H, D).astype(k.dtype)
+    dv = dv_r.swapaxes(0, 1).reshape(B, Skv, H, D).astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_fwd_vjp, _bwd_vjp)
+
+
+def flash_attention(q, k, v, *, q_positions, kv_positions, causal,
+                    window: int = 0, q_chunk: int = 1024,
+                    kv_chunk: int = 1024):
+    """Drop-in for layers.chunked_attention with flash-style backward.
+
+    q [B,Sq,H,D] (unscaled); k/v [B,Skv,KH,D]. Returns [B,Sq,H,D].
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    # Python-float scale: a np.float64 scalar would silently promote
+    # bf16 activations to f32 through the whole attention block.
+    q = q * float(1.0 / np.sqrt(D))
+    if G > 1:
+        # GQA flattening: expand K/V to H heads so every tensor is
+        # head-shardable; autodiff sums dk/dv back over the G copies.
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    # chunk fitting + KV padding (same policy as the baseline)
+    from repro.models.layers import _fit_chunk
+
+    q_chunk = _fit_chunk(Sq, q_chunk)
+    kv_chunk = min(kv_chunk, Skv)
+    pad_kv = (-Skv) % kv_chunk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.concatenate(
+            [kv_positions, jnp.full((pad_kv,), _KV_PAD_POS, jnp.int32)]
+        )
+    return _flash(q, k, v, q_positions, kv_positions, causal, window,
+                  q_chunk, kv_chunk)

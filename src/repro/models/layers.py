@@ -1,0 +1,291 @@
+"""Shared model components: norms, RoPE, MLPs, attention.
+
+Attention comes in two memory-aware forms:
+
+* ``chunked_attention`` — training/prefill. Online-softmax over KV chunks
+  (lax.scan) inside an outer loop over Q chunks, so peak score memory is
+  ``q_chunk x kv_chunk`` instead of ``S x S`` (mandatory at 32k).
+  Supports causal + sliding-window masks and GQA grouping.
+* ``decode_attention`` — single-token decode against a KV cache laid out
+  as ``[B, n_splits, S/n_splits, KH, D]``. The splits dim is sharded over
+  the ``model`` mesh axis (flash-decoding style split-KV): each shard
+  produces partial (max, denom, weighted-V) and the combine over the
+  splits dim lowers to a tiny cross-shard reduction instead of an
+  all-gather of the cache.
+
+All matmuls run in the config dtype (bf16); softmax statistics and norms
+accumulate in fp32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import ShardingRules
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(rng, shape, logical, rules: ShardingRules, scale=None, dtype=jnp.bfloat16):
+    """Truncated-normal dense weight + its PartitionSpec."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    w = jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std
+    return w.astype(dtype), rules.spec(logical, shape)
+
+
+def constraint(x, logical, rules: ShardingRules):
+    """with_sharding_constraint via logical names (no-op on 1-device)."""
+    if rules.mesh.size <= 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, rules.spec(logical, x.shape))
+    )
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def init_norm(kind: str, dim: int, rules: ShardingRules):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((dim,), jnp.float32)}, {"w": P(None)}
+    if kind == "layernorm":
+        return (
+            {"w": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)},
+            {"w": P(None), "b": P(None)},
+        )
+    if kind == "layernorm_nonparam":  # olmo: non-parametric LN
+        return {}, {}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["w"]).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * p["w"] + p["b"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, D], positions [..., S] (broadcastable)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg, rules: ShardingRules, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p, s = {}, {}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wi"], s["wi"] = dense_init(ks[0], (d, f), ("embed", "mlp"), rules)
+        p["wg"], s["wg"] = dense_init(ks[1], (d, f), ("embed", "mlp"), rules)
+    else:
+        p["wi"], s["wi"] = dense_init(ks[0], (d, f), ("embed", "mlp"), rules)
+    p["wo"], s["wo"] = dense_init(ks[2], (f, d), ("mlp", "embed"), rules)
+    return p, s
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wi"])
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(x @ p["wi"])
+    else:
+        raise ValueError(cfg.act)
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg, rules: ShardingRules, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KH = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    kv_in = cfg.context_dim or d if cross else d
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], (d, H, hd), ("embed", "heads", None), rules)
+    p["wk"], s["wk"] = dense_init(ks[1], (kv_in, KH, hd), ("embed", "kv_heads", None), rules)
+    p["wv"], s["wv"] = dense_init(ks[2], (kv_in, KH, hd), ("embed", "kv_heads", None), rules)
+    p["wo"], s["wo"] = dense_init(ks[3], (H, hd, d), ("heads", None, "embed"), rules)
+    return p, s
+
+
+_KV_PAD_POS = -(1 << 30)  # sentinel position marking padded KV slots
+
+
+def _fit_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (trace-time only)."""
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def _gqa_scores(q, k):
+    """q [B,Sq,KH,G,D] x k [B,Skv,KH,D] -> [B,KH,G,Sq,Skv] (fp32)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    q_positions,
+    kv_positions,
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+):
+    """Online-softmax attention. q [B,Sq,H,D]; k,v [B,Skv,KH,D].
+
+    Returns [B,Sq,H,D] in q.dtype. ``window > 0`` restricts to a sliding
+    causal window (local attention).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    q = (q * scale).reshape(B, Sq, KH, G, D)
+
+    q_chunk = _fit_chunk(Sq, q_chunk)
+    n_q = Sq // q_chunk
+    # KV side: pad to a multiple of the chunk (context lengths like 1601
+    # are prime — _fit_chunk alone would degrade to a length-1 scan) and
+    # mask the padded slots out via sentinel positions.
+    kv_chunk = min(kv_chunk, Skv)
+    pad_kv = (-Skv) % kv_chunk
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.concatenate(
+            [kv_positions, jnp.full((pad_kv,), _KV_PAD_POS, jnp.int32)]
+        )
+        Skv = Skv + pad_kv
+    n_kv = Skv // kv_chunk
+
+    k_r = k.reshape(B, n_kv, kv_chunk, KH, D)
+    v_r = v.reshape(B, n_kv, kv_chunk, KH, D)
+    kpos_r = kv_positions.reshape(n_kv, kv_chunk)
+
+    def q_block(args):
+        qc, qpos = args  # [B,qc,KH,G,D], [qc]
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kc, vc, kpos = xs  # [B,ck,KH,D], [B,ck,KH,D], [ck]
+            s = _gqa_scores(qc, kc)  # [B,KH,G,qc,ck] fp32
+            mask = (kpos[None, :] != _KV_PAD_POS)  # padded KV slots
+            mask = jnp.broadcast_to(mask, (qpos.shape[0], kpos.shape[0]))
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(qc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        qc_sz = qc.shape[1]
+        m0 = jnp.full((B, KH, G, qc_sz), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc_sz), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc_sz, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (k_r.swapaxes(0, 1), v_r.swapaxes(0, 1), kpos_r),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # [B,KH,G,qc,D]
+
+    q_r = q.reshape(B, n_q, q_chunk, KH, G, D).swapaxes(0, 1)  # [n_q,B,qc,KH,G,D]
+    qpos_r = q_positions.reshape(n_q, q_chunk)
+    outs = jax.lax.map(q_block, (q_r, qpos_r))  # [n_q,B,KH,G,qc,D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KH * G, D)
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_positions, q_position, window: int = 0):
+    """Single-token attention against a split-KV cache.
+
+    q [B,H,D]; k/v_cache [B,n_splits,Sc,KH,D]; kv_positions [B,n_splits,Sc]
+    (-1 for empty slots); q_position [B]. Returns [B,H,D].
+    """
+    B, H, D = q.shape
+    _, NS, Sc, KH, _ = k_cache.shape
+    G = H // KH
+    scale = 1.0 / np.sqrt(D)
+    qg = (q * scale).reshape(B, KH, G, D)
+
+    s = jnp.einsum(
+        "bhgd,bnkhd->bnhgk", qg, k_cache, preferred_element_type=jnp.float32
+    )  # [B,NS,KH,G,Sc]
+    mask = (kv_positions >= 0) & (kv_positions <= q_position[:, None, None])
+    if window:
+        mask &= q_position[:, None, None] - kv_positions < window
+    s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+
+    # per-split partials, then combine across the (sharded) splits dim
+    m = s.max(axis=-1)  # [B,NS,KH,G]
+    m_glob = m.max(axis=1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(mask[:, :, None, None, :], p, 0.0)
+    l = p.sum(axis=(1, 4))  # [B,KH,G]
+    pv = jnp.einsum(
+        "bnhgk,bnkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = pv / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, H, D).astype(v_cache.dtype)

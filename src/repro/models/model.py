@@ -1,0 +1,350 @@
+"""Model facade: init / forward / decode, assembled from transformer.py.
+
+``LM`` covers all ten assigned architectures:
+  * decoder-only (dense / MoE / ssm / hybrid) — groups of blocks
+  * VLM — ``cross_attn_gated`` blocks consume projected image embeddings
+  * enc-dec (whisper) — a bidirectional encoder stack feeds the decoder's
+    ``cross_attn`` blocks; the conv frontend is a stub (precomputed frame
+    embeddings arrive as the context input, per the assignment).
+
+Params are plain pytrees; ``init`` also returns a matching pytree of
+PartitionSpecs derived from logical axis rules (models/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.sharding import ShardingRules
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+    rules: ShardingRules
+
+    # ---------------------------------------------------------------- init
+    def init(self, rng):
+        cfg = self.cfg
+        rules = self.rules
+        dt = jnp.dtype(cfg.dtype)
+        G = T.num_groups(cfg)
+        ks = jax.random.split(rng, 8)
+        p, s = {}, {}
+
+        V = cfg.padded_vocab
+        emb, emb_spec = L.dense_init(ks[0], (V, cfg.d_model), ("vocab", "embed"), rules, scale=0.02, dtype=dt)
+        p["embed"], s["embed"] = emb, emb_spec
+        p["lm_head"], s["lm_head"] = L.dense_init(
+            ks[1], (cfg.d_model, V), ("embed", "vocab"), rules, dtype=dt
+        )
+
+        def one_group(k):
+            gp, gs = {}, {}
+            kk = jax.random.split(k, len(cfg.block_pattern))
+            for i, kind in enumerate(cfg.block_pattern):
+                gp[f"b{i}"], gs[f"b{i}"] = T.init_block(kk[i], cfg, kind, rules)
+            return gp, gs
+
+        gkeys = jax.random.split(ks[2], G)
+        gp0, gs0 = one_group(gkeys[0])
+        stacked = jax.vmap(lambda k: one_group(k)[0])(gkeys)
+        p["groups"] = stacked
+        s["groups"] = jax.tree.map(
+            lambda spec: P(*((None,) + tuple(spec))), gs0,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+        if cfg.extra_tail_blocks:
+            tk = jax.random.split(ks[3], len(cfg.extra_tail_blocks))
+            p["tail"], s["tail"] = [], []
+            for i, kind in enumerate(cfg.extra_tail_blocks):
+                tp, ts = T.init_block(tk[i], cfg, kind, rules)
+                p["tail"].append(tp)
+                s["tail"].append(ts)
+
+        p["final_norm"], s["final_norm"] = L.init_norm(cfg.norm, cfg.d_model, rules)
+
+        if cfg.context_dim and cfg.context_dim != cfg.d_model:
+            p["ctx_proj"], s["ctx_proj"] = L.dense_init(
+                ks[4], (cfg.context_dim, cfg.d_model), (None, "embed"), rules, dtype=dt
+            )
+
+        if cfg.encoder_layers:
+            ekeys = jax.random.split(ks[5], cfg.encoder_layers)
+            enc0_p, enc0_s = T.init_block(ekeys[0], cfg, "attn", rules)
+            enc_stack = jax.vmap(lambda k: T.init_block(k, cfg, "attn", rules)[0])(ekeys)
+            p["encoder"] = {"groups": enc_stack}
+            s["encoder"] = {
+                "groups": jax.tree.map(
+                    lambda spec: P(*((None,) + tuple(spec))), enc0_s,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            }
+            fp, fs = L.init_norm(cfg.norm, cfg.d_model, rules)
+            p["encoder"]["final_norm"], s["encoder"]["final_norm"] = fp, fs
+
+        return p, s
+
+    # ------------------------------------------------------------- context
+    def _encode_context(self, params, context):
+        """Project / encode the raw context (image patches or frames)."""
+        cfg = self.cfg
+        if context is None:
+            return None
+        if "ctx_proj" in params:
+            context = context @ params["ctx_proj"]
+        if cfg.encoder_layers:
+            x = context
+            pos = jnp.arange(x.shape[1])
+
+            def enc_step(carry, gp):
+                aux: dict = {}
+                y, _ = T.apply_block_seq(
+                    cfg, "attn", gp, carry, self.rules,
+                    positions=pos, context=None, causal=False, aux=aux,
+                )
+                return y, None
+
+            body = enc_step
+            if cfg.remat:
+                body = jax.checkpoint(enc_step)
+            x, _ = jax.lax.scan(body, x, params["encoder"]["groups"])
+            context = L.apply_norm(cfg.norm, params["encoder"]["final_norm"], x)
+        return context
+
+    # ------------------------------------------------------------- forward
+    def forward_features(self, params, tokens, context=None):
+        """tokens [B,S] -> final-norm features [B,S,d] (+ aux dict).
+
+        Split from ``forward`` so training can fuse the unembedding into
+        the chunked CE loss (``fused_ce_loss``) without materialising
+        [B,S,V] logits."""
+        cfg = self.cfg
+        rules = self.rules
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        x = L.constraint(x, ("batch", "seq", None), rules)
+        pos = jnp.arange(S)
+        ctx = self._encode_context(params, context)
+
+        def group_fn(x, gp):
+            aux_g = {"moe_aux": jnp.float32(0.0), "moe_drop_frac": jnp.float32(0.0)}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, _ = T.apply_block_seq(
+                    cfg, kind, gp[f"b{i}"], x, rules,
+                    positions=pos, context=ctx, causal=True, aux=aux_g,
+                )
+            # barrier pins the remat-saved carry to bf16 — without it XLA
+            # hoists the next layernorm's f32 convert into the stacked
+            # residual buffer, doubling the stash (§Perf iteration #10)
+            x = jax.lax.optimization_barrier(x)
+            return x, (aux_g["moe_aux"], aux_g["moe_drop_frac"])
+
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn)
+        if cfg.scan_layers:
+            x, (aux_v, drop_v) = jax.lax.scan(body, x, params["groups"])
+            moe_aux, drop = aux_v.mean(), drop_v.mean()
+        else:
+            moe_aux = drop = jnp.float32(0.0)
+            G = T.num_groups(cfg)
+            for g in range(G):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                x, (a, dr) = body(x, gp)
+                moe_aux, drop = moe_aux + a / G, drop + dr / G
+
+        for i, kind in enumerate(cfg.extra_tail_blocks):
+            aux_g: dict = {}
+            x, _ = T.apply_block_seq(
+                cfg, kind, params["tail"][i], x, rules,
+                positions=pos, context=ctx, causal=True, aux=aux_g,
+            )
+
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        return x, {"moe_aux": moe_aux, "moe_drop_frac": drop}
+
+    def forward(self, params, tokens, context=None):
+        """tokens [B,S] -> logits [B,S,V_pad] (+ aux dict)."""
+        x, aux = self.forward_features(params, tokens, context)
+        logits = x @ params["lm_head"]
+        logits = L.constraint(logits, ("batch", "seq", "vocab"), self.rules)
+        return logits, aux
+
+    def prefill(self, params, tokens, context=None):
+        """Serving prefill: logits of the last position only [B, V]."""
+        logits, _ = self.forward(params, tokens, context)
+        return logits[:, -1]
+
+    # -------------------------------------------------------------- decode
+    def init_cache(self, params, batch: int, max_len: int, kv_splits: int = 1,
+                   context=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        G = T.num_groups(cfg)
+        ctx = self._encode_context(params, context)
+
+        def one_block_cache(kind, gp_block):
+            c = T.init_block_cache(cfg, kind, batch, max_len, kv_splits, dt)
+            if kind in T.CROSS_KINDS and ctx is not None:
+                ck = jnp.einsum("bcd,dhe->bche", ctx, gp_block["attn"]["wk"])
+                cv = jnp.einsum("bcd,dhe->bche", ctx, gp_block["attn"]["wv"])
+                c = dict(c, ck=ck[:, None], cv=cv[:, None])
+            return c
+
+        caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            gp_i = jax.tree.map(lambda a: a, params["groups"][f"b{i}"])
+            # build per-group caches by vmapping over the stacked dim
+            def mk(gp_block):
+                return one_block_cache(kind, gp_block)
+            caches[f"b{i}"] = jax.vmap(mk)(gp_i) if _has_ctx_kv(kind, ctx) else (
+                jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (G,) + a.shape),
+                    T.init_block_cache(cfg, kind, batch, max_len, kv_splits, dt),
+                )
+            )
+        tail = []
+        for i, kind in enumerate(cfg.extra_tail_blocks):
+            tail.append(one_block_cache(kind, params["tail"][i]))
+        return {"layers": caches, "tail": tail, "pos": jnp.int32(0)}
+
+    def decode_step(self, params, cache, tokens, context=None):
+        """tokens [B] -> (logits [B, V_pad], new cache).
+
+        The group loop CARRIES the stacked cache and updates it in place
+        (dynamic_update_index) instead of passing it as scan xs/ys —
+        the xs/ys form double-buffers the whole KV cache in temps
+        (whisper decode_32k: 12.2 GB of scratch for a 4.7 GB cache;
+        §Perf log).
+        """
+        cfg = self.cfg
+        rules = self.rules
+        B = tokens.shape[0]
+        x = params["embed"][tokens][:, None]  # [B,1,d]
+        pos = cache["pos"]
+
+        def group_fn(carry, g):
+            x, caches = carry
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            cg = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, g, 0, keepdims=False),
+                caches,
+            )
+            aux: dict = {}
+            new_cg = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, new_cg[f"b{i}"] = T.apply_block_decode(
+                    cfg, kind, gp[f"b{i}"], x, rules, pos=pos,
+                    cache=cg[f"b{i}"], aux=aux,
+                )
+            caches = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new, g, 0
+                ),
+                caches, new_cg,
+            )
+            return (x, caches), None
+
+        G = T.num_groups(cfg)
+        (x, new_caches), _ = jax.lax.scan(
+            group_fn, (x, cache["layers"]), jnp.arange(G)
+        )
+        new_tail = []
+        for i, kind in enumerate(cfg.extra_tail_blocks):
+            aux: dict = {}
+            x, nc = T.apply_block_decode(
+                cfg, kind, params["tail"][i], x, rules, pos=pos,
+                cache=cache["tail"][i], aux=aux,
+            )
+            new_tail.append(nc)
+
+        x = L.apply_norm(cfg.norm, params["final_norm"], x)
+        logits = (x @ params["lm_head"])[:, 0]
+        return logits, {"layers": new_caches, "tail": new_tail, "pos": pos + 1}
+
+
+def _has_ctx_kv(kind, ctx):
+    return kind in T.CROSS_KINDS and ctx is not None
+
+
+# --------------------------------------------------------------------------
+# loss / steps
+# --------------------------------------------------------------------------
+
+
+def fused_ce_loss(cfg: ModelConfig, x, lm_head, labels, z_coef: float = 1e-4,
+                  moe_aux=None, chunk: int = 512):
+    """Cross-entropy fused with the unembedding, chunked over sequence.
+
+    Never materialises the full [B, S, V] logits (the peak buffer on
+    every large-vocab train cell: glm 151k / llama 128k vocab × f32 —
+    §Perf log iteration #9). Per-position CE is independent, so chunking
+    the S dim is exact. x [B,S,d] (final-norm output), lm_head [d,V].
+    """
+    B, S, d = x.shape
+    c = chunk
+    while S % c:
+        c -= 1
+    n = S // c
+
+    xc = x.reshape(B, n, c, d).swapaxes(0, 1)  # [n,B,c,d]
+    lc = labels.reshape(B, n, c).swapaxes(0, 1)
+
+    def chunk_loss(args):
+        xi, li = args  # [B,c,d], [B,c]
+        logits = (xi @ lm_head).astype(jnp.float32)  # [B,c,V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = li >= 0
+        safe = jnp.maximum(li, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = ((lse - gold) * mask).sum()
+        zsq = ((lse * mask) ** 2).sum()
+        return nll, zsq, mask.sum()
+
+    # checkpoint: without it the map's backward STACKS every chunk's f32
+    # logits as residuals — the exact buffer this function exists to kill.
+    # Recomputing one [B,c,d]@[d,V] matmul per chunk in the backward is
+    # the cheap side of that trade.
+    nll, zsq, cnt = jax.lax.map(jax.checkpoint(chunk_loss), (xc, lc))
+    denom = jnp.maximum(cnt.sum(), 1)
+    loss = nll.sum() / denom
+    zloss = z_coef * zsq.sum() / denom
+    total = loss + zloss
+    if moe_aux is not None:
+        total = total + 0.01 * moe_aux
+    return total, {"nll": loss, "zloss": zloss}
+
+
+def lm_loss(cfg: ModelConfig, logits, labels, z_coef: float = 1e-4, moe_aux=None):
+    """Cross-entropy with label mask (-1), z-loss, and MoE aux loss.
+
+    ``logits`` may be vocab-padded; padded ids never appear in labels.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = nll.sum() / denom
+    zloss = z_coef * ((lse * mask) ** 2).sum() / denom
+    total = loss + zloss
+    if moe_aux is not None:
+        total = total + 0.01 * moe_aux
+    return total, {"nll": loss, "zloss": zloss}
+
+
+def build_model(cfg: ModelConfig, rules: ShardingRules) -> LM:
+    return LM(cfg=cfg, rules=rules)

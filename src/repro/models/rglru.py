@@ -1,0 +1,100 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+The gated diagonal linear recurrence
+
+    a_t = exp(-c softplus(Λ) ⊙ σ(W_a x_t))
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (σ(W_x x_t) ⊙ x_t)
+
+is elementwise-affine in h, so training/prefill runs as a parallel
+``associative_scan`` over time — O(S log S) depth, no O(S²) memory —
+which is what makes the hybrid arch long_500k-capable. Decode is the
+plain O(1)-state step.
+
+Block layout (Griffin recurrent block): two d→d_rnn branches; branch A
+goes conv1d(4, causal) → RG-LRU, branch B is a GeLU gate; merged output
+projects back to d.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import ShardingRules
+from repro.models.xlstm import _causal_conv4
+
+_C = 8.0
+
+
+def init_rglru(rng, cfg, rules: ShardingRules):
+    d = cfg.d_model
+    dr = d  # lru width == model width (RecurrentGemma)
+    ks = jax.random.split(rng, 7)
+    p, s = {}, {}
+    p["w_in"], s["w_in"] = dense_init(ks[0], (d, dr), ("embed", "mlp"), rules)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (d, dr), ("embed", "mlp"), rules)
+    p["conv"], s["conv"] = dense_init(ks[2], (4, dr), (None, "mlp"), rules)
+    # square recurrent gates: column-parallel only (a spec may use each
+    # mesh axis once; activations stay dr-sharded over `model`)
+    p["w_a"], s["w_a"] = dense_init(ks[3], (dr, dr), (None, "mlp"), rules)
+    p["w_x"], s["w_x"] = dense_init(ks[4], (dr, dr), (None, "mlp"), rules)
+    # Λ init so a^(1/c) ~ U[0.9, 0.999] (paper init)
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    p["lam"] = jnp.log(jnp.expm1(-jnp.log(u)))  # inverse softplus
+    s["lam"] = jax.sharding.PartitionSpec(None)
+    p["w_out"], s["w_out"] = dense_init(ks[6], (dr, d), ("mlp", "embed"), rules)
+    return p, s
+
+
+def rglru_state(cfg, batch: int, dtype=jnp.float32):
+    dr = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), dtype),
+        "conv": jnp.zeros((batch, 3, dr), dtype),
+    }
+
+
+def _gates(p, u):
+    """u [.., dr] -> (a, b) of the affine recurrence h' = a h + b."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def apply_rglru(cfg, p, x, state=None):
+    """x [B,S,d] -> (y, state'). Parallel associative scan over time."""
+    B, S, d = x.shape
+    if state is None:
+        state = rglru_state(cfg, B)
+    u = x @ p["w_in"]
+    u, new_tail = _causal_conv4(u, p["conv"], state["conv"])
+    a, b = _gates(p, u)
+    # fold the carried h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": hs[:, -1], "conv": new_tail}
+
+
+def apply_rglru_step(cfg, p, x, state):
+    """Decode step: x [B,1,d] -> (y [B,1,d], state')."""
+    u = x @ p["w_in"]
+    u, new_tail = _causal_conv4(u, p["conv"], state["conv"])
+    a, b = _gates(p, u[:, 0])
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    y = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h, "conv": new_tail}

@@ -1,0 +1,68 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility fallback.
+
+Every parameter/activation annotates its dims with *logical* axis names;
+``ShardingRules`` resolves them to mesh axes, replicating any dim whose
+size does not divide the assigned mesh axes (e.g. starcoder2's 36 heads
+on a 16-way model axis). The resolution is recorded so DESIGN/EXPERIMENTS
+can report which dims fell back.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (first that divides wins; tuples
+# mean "shard over the product of these axes")
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",), None),
+    "embed": (("data",), None),  # FSDP param sharding dim
+    "mlp": (("model",), None),
+    "heads": (("model",), None),
+    "kv_heads": (("model",), None),
+    "vocab": (("model",), None),
+    "experts": (("model",), None),
+    "seq": (None,),
+    "cache_seq": (("model",), None),  # split-KV decode sharding
+    "qkv": (("model",), None),  # fused q/k/v head*dim output dim
+    None: (None,),
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict | None = None
+    fallbacks: list | None = None
+
+    def __post_init__(self):
+        self.rules = dict(DEFAULT_RULES, **(self.rules or {}))
+        self.fallbacks = []
+
+    def _axes_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in axes if a in self.mesh.shape]))
+
+    def resolve(self, logical: str | None, dim_size: int):
+        """logical name + dim size -> mesh axes (or None)."""
+        for cand in self.rules.get(logical, (None,)):
+            if cand is None:
+                return None
+            axes = tuple(
+                a for a in cand if self.mesh.shape.get(a, 1) > 1
+            )
+            if not axes:
+                continue
+            n = self._axes_size(axes)
+            if dim_size % n == 0:
+                return axes if len(axes) > 1 else axes[0]
+            self.fallbacks.append((logical, dim_size, axes))
+        return None
+
+    def spec(self, logical_dims: tuple, shape: tuple) -> P:
+        """Tuple of logical names (len == rank) -> PartitionSpec."""
+        assert len(logical_dims) == len(shape), (logical_dims, shape)
+        return P(*[self.resolve(l, s) for l, s in zip(logical_dims, shape)])

@@ -1,0 +1,320 @@
+"""Generic decoder LM assembly covering all assigned architecture families.
+
+A model is a stack of *layer groups*; each group instantiates the
+config's ``block_pattern`` (e.g. ``("rglru","rglru","local_attn")`` for
+RecurrentGemma, ``("attn",)*4 + ("cross_attn_gated",)`` for
+Llama-3.2-Vision, ``("attn_nomlp","cross_attn")`` per Whisper decoder
+layer). Groups are identical, so the stack runs under ``lax.scan`` with
+per-group stacked params (compact HLO at 40+ layers) and optional remat.
+
+Block kinds:
+  attn              pre-norm GQA self-attention (+MLP/MoE sub-block)
+  local_attn        sliding-window self-attention (+MLP)
+  attn_nomlp        self-attention only (whisper decoder first half)
+  cross_attn        cross-attention to a context (+MLP)
+  cross_attn_gated  tanh-gated cross-attention (VLM; zero-init gate)
+  rglru             Griffin recurrent block (+MLP)
+  mlstm / slstm     xLSTM blocks (bring their own FFN)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import flash as F
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import xlstm as X
+from repro.models.sharding import ShardingRules
+
+HAS_MLP = {"attn", "local_attn", "cross_attn", "cross_attn_gated", "rglru"}
+ATTN_KINDS = {"attn", "local_attn", "attn_nomlp"}
+CROSS_KINDS = {"cross_attn", "cross_attn_gated"}
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    return cfg.num_groups
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply
+# --------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, kind: str, rules: ShardingRules):
+    ks = jax.random.split(rng, 4)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.init_norm(cfg.norm, cfg.d_model, rules)
+    if kind in ATTN_KINDS:
+        p["attn"], s["attn"] = L.init_attention(ks[0], cfg, rules)
+    elif kind in CROSS_KINDS:
+        p["attn"], s["attn"] = L.init_attention(ks[0], cfg, rules, cross=True)
+        if kind == "cross_attn_gated":
+            p["gate"] = jnp.zeros((), jnp.float32)
+            s["gate"] = P()
+    elif kind == "rglru":
+        p["rnn"], s["rnn"] = R.init_rglru(ks[0], cfg, rules)
+    elif kind == "mlstm":
+        p["cell"], s["cell"] = X.init_mlstm(ks[0], cfg, rules)
+    elif kind == "slstm":
+        p["cell"], s["cell"] = X.init_slstm(ks[0], cfg, rules)
+    else:
+        raise ValueError(kind)
+    if kind in HAS_MLP:
+        p["norm2"], s["norm2"] = L.init_norm(cfg.norm, cfg.d_model, rules)
+        if cfg.num_experts > 0:
+            p["mlp"], s["mlp"] = M.init_moe(ks[1], cfg, rules)
+        else:
+            p["mlp"], s["mlp"] = L.init_mlp(ks[1], cfg, rules)
+    return p, s
+
+
+def _tp_pad_heads(q, k, v, rules: ShardingRules):
+    """GQA expansion + head padding + sharding constraints for the flash
+    path (§Perf iterations #5/#6/#8).
+
+    * K/V are expanded to the full query-head count so every attention
+      tensor is shardable by heads (per-device K/V bytes unchanged —
+      each shard holds H/tp expanded heads instead of KH replicated).
+    * Head counts that do not divide the TP axis (whisper 20, starcoder2
+      36 on a 16-way axis) are padded to the next multiple; padded q
+      heads are zeros, outputs sliced off by the caller — exact, with
+      zero gradients to the pads (tests/test_flash.py).
+    * Explicit constraints pin the expanded/padded K/V to the heads
+      sharding — without them SPMD kept the expanded K/V replicated and
+      every q-chunk re-read the full buffer (the prefill regression in
+      the §Perf log, iteration #8).
+    Returns (q', k', v', H_original).
+    """
+    H = q.shape[2]
+    tp = rules.mesh.shape.get("model", 1)
+    KH = k.shape[2]
+    if KH != H:  # expand GQA groups at the call site
+        k = jnp.repeat(k, H // KH, axis=2)
+        v = jnp.repeat(v, H // KH, axis=2)
+    if tp > 1 and H % tp:
+        Hp = -(-H // tp) * tp
+        pad = Hp - H
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.concatenate([k, k[:, :, :pad]], axis=2)
+        v = jnp.concatenate([v, v[:, :, :pad]], axis=2)
+    q = L.constraint(q, ("batch", "seq", "heads", None), rules)
+    k = L.constraint(k, ("batch", "seq", "heads", None), rules)
+    v = L.constraint(v, ("batch", "seq", "heads", None), rules)
+    return q, k, v, H
+
+
+def _mlp_sub(cfg, p, x, rules, aux):
+    h = L.apply_norm(cfg.norm, p["norm2"], x)
+    if cfg.num_experts > 0:
+        y, a = M.apply_moe(cfg, p["mlp"], h, rules)
+        for k, v in a.items():
+            aux[k] = aux.get(k, 0.0) + v
+    else:
+        y = L.apply_mlp(cfg, p["mlp"], h)
+    return x + y
+
+
+def apply_block_seq(
+    cfg, kind: str, p, x, rules, *, positions, context, causal, aux,
+    state=None,
+):
+    """Full-sequence (train/prefill) application; returns (x, new_state)."""
+    h = L.apply_norm(cfg.norm, p["norm1"], x)
+    new_state = state
+    if kind in ATTN_KINDS:
+        B, S, d = x.shape
+        hd = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wq"])
+        k = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        q = L.constraint(q, ("batch", "seq", "heads", None), rules)
+        window = cfg.local_window if kind == "local_attn" else 0
+        if cfg.use_flash:
+            q, k, v, H_orig = _tp_pad_heads(q, k, v, rules)
+            attn_fn = F.flash_attention
+        else:
+            H_orig, attn_fn = q.shape[2], L.chunked_attention
+        o = attn_fn(
+            q, k, v,
+            q_positions=positions[0] if positions.ndim > 1 else positions,
+            kv_positions=positions[0] if positions.ndim > 1 else positions,
+            causal=causal,
+            window=window,
+            q_chunk=cfg.attn_chunk,
+            kv_chunk=cfg.attn_chunk,
+        )[:, :, :H_orig]
+        x = x + jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"])
+    elif kind in CROSS_KINDS:
+        q = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wq"])
+        k = jnp.einsum("bcd,dhe->bche", context, p["attn"]["wk"])
+        v = jnp.einsum("bcd,dhe->bche", context, p["attn"]["wv"])
+        Sc = context.shape[1]
+        if cfg.use_flash:
+            q, k, v, H_orig = _tp_pad_heads(q, k, v, rules)
+            attn_fn = F.flash_attention
+        else:
+            H_orig, attn_fn = q.shape[2], L.chunked_attention
+        o = attn_fn(
+            q, k, v,
+            q_positions=positions[0] if positions.ndim > 1 else positions,
+            kv_positions=jnp.arange(Sc),
+            causal=False,
+            q_chunk=cfg.attn_chunk,
+            kv_chunk=min(cfg.attn_chunk, Sc),
+        )[:, :, :H_orig]
+        o = jnp.einsum("bshe,hed->bsd", o, p["attn"]["wo"])
+        if kind == "cross_attn_gated":
+            o = jnp.tanh(p["gate"]).astype(o.dtype) * o
+        x = x + o
+    elif kind == "rglru":
+        y, new_state = R.apply_rglru(cfg, p["rnn"], h, state)
+        x = x + y
+    elif kind == "mlstm":
+        y, new_state = X.apply_mlstm(cfg, p["cell"], h, state)
+        x = x + y
+    elif kind == "slstm":
+        y, new_state = X.apply_slstm(cfg, p["cell"], h, state)
+        x = x + y
+    else:
+        raise ValueError(kind)
+    if kind in HAS_MLP:
+        x = _mlp_sub(cfg, p, x, rules, aux)
+    x = L.constraint(x, ("batch", "seq", None), rules)
+    return x, new_state
+
+
+def apply_block_decode(cfg, kind: str, p, x, rules, *, pos, cache, aux):
+    """Single-token application; x [B,1,d]; returns (x, new_cache)."""
+    h = L.apply_norm(cfg.norm, p["norm1"], x)
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    if kind in ATTN_KINDS or kind in CROSS_KINDS:
+        q = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wq"])[:, 0]  # [B,H,hd]
+        if kind in ATTN_KINDS:
+            k_new = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wk"])[:, 0]
+            v_new = jnp.einsum("bsd,dhe->bshe", h, p["attn"]["wv"])[:, 0]
+            posv = jnp.full((B,), pos, jnp.int32)
+            q = L.apply_rope(q[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+            k_new = L.apply_rope(k_new[:, None], posv[:, None], cfg.rope_theta)[:, 0]
+            window = cfg.local_window if kind == "local_attn" else 0
+            kc, vc, kvpos = cache["k"], cache["v"], cache["kvpos"]
+            NS, Sc = kc.shape[1], kc.shape[2]
+            slot = pos % (NS * Sc) if window else pos  # ring for local attn
+            s_idx, i_idx = slot // Sc, slot % Sc
+            kc = jax.lax.dynamic_update_slice(
+                kc, k_new[:, None, None], (0, s_idx, i_idx, 0, 0)
+            )
+            vc = jax.lax.dynamic_update_slice(
+                vc, v_new[:, None, None], (0, s_idx, i_idx, 0, 0)
+            )
+            kvpos = jax.lax.dynamic_update_slice(
+                kvpos, jnp.full((B, 1, 1), pos, jnp.int32), (0, s_idx, i_idx)
+            )
+            o = L.decode_attention(q, kc, vc, kvpos, jnp.full((B,), pos), window)
+            cache = dict(cache, k=kc, v=vc, kvpos=kvpos)
+        else:
+            o = L.decode_attention(
+                q, cache["ck"], cache["cv"], cache["ckpos"],
+                jnp.full((B,), jnp.iinfo(jnp.int32).max // 2),
+            )
+            if kind == "cross_attn_gated":
+                o = jnp.tanh(p["gate"]).astype(o.dtype) * o
+        x = x + jnp.einsum("bhe,hed->bd", o, p["attn"]["wo"])[:, None]
+    elif kind == "rglru":
+        y, new = R.apply_rglru_step(cfg, p["rnn"], h, cache)
+        x = x + y
+        cache = new
+    elif kind == "mlstm":
+        up = h[:, 0] @ p["cell"]["w_up"]
+        gate = h[:, 0] @ p["cell"]["w_gate"]
+        conv_in, tail = X._causal_conv4(up[:, None], p["cell"]["conv"], cache["conv"])
+        conv_in = jax.nn.silu(conv_in)
+        q, k, v, logi, logf = X._mlstm_qkv(cfg, p["cell"], conv_in)
+        v = jnp.einsum("bsd,dhe->bshe", up[:, None], p["cell"]["w_v"])
+        new, hh = X._mlstm_cell(
+            dict(cache, conv=tail), q[:, 0], k[:, 0], v[:, 0], logi[:, 0], logf[:, 0]
+        )
+        d = cfg.d_model
+        hh = hh.reshape(B, 2 * d).astype(x.dtype)
+        y = ((hh * jax.nn.silu(gate)) @ p["cell"]["w_down"])[:, None]
+        x = x + y
+        cache = new
+    elif kind == "slstm":
+        gx = jnp.einsum("bd,dhg->bhg", h[:, 0], p["cell"]["w_x"])
+        new, hh = X._slstm_cell(cfg, p["cell"], cache, gx)
+        d = cfg.d_model
+        hh = hh.reshape(B, d).astype(x.dtype)
+        y = (jax.nn.gelu(hh @ p["cell"]["w_up1"]) * (hh @ p["cell"]["w_up2"])) @ p["cell"]["w_down"]
+        x = x + y[:, None]
+        cache = new
+    else:
+        raise ValueError(kind)
+    if kind in HAS_MLP:
+        x = _mlp_sub(cfg, p, x, rules, aux)
+    return x, cache
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def init_block_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, kv_splits: int, dtype
+):
+    hd = cfg.resolved_head_dim
+    KH = cfg.num_kv_heads
+    if kind in ATTN_KINDS:
+        S = min(cfg.local_window, max_len) if kind == "local_attn" else max_len
+        ns = kv_splits if (kind != "local_attn" and S % kv_splits == 0) else 1
+        return {
+            "k": jnp.zeros((batch, ns, S // ns, KH, hd), dtype),
+            "v": jnp.zeros((batch, ns, S // ns, KH, hd), dtype),
+            "kvpos": jnp.full((batch, ns, S // ns), -1, jnp.int32),
+        }
+    if kind in CROSS_KINDS:
+        Sc = cfg.context_len
+        return {
+            "ck": jnp.zeros((batch, 1, Sc, KH, hd), dtype),
+            "cv": jnp.zeros((batch, 1, Sc, KH, hd), dtype),
+            "ckpos": jnp.zeros((batch, 1, Sc), jnp.int32),
+        }
+    if kind == "rglru":
+        return R.rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return X.mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return X.slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, kind: str, rules: ShardingRules, shapes):
+    """PartitionSpecs for one block's cache pytree (G-stacked upstream)."""
+    def spec_for(path, arr):
+        if path in ("k", "v"):
+            return rules.spec(("batch", "cache_seq", None, "kv_heads", None), arr.shape)
+        if path in ("ck", "cv"):
+            return rules.spec(("batch", None, None, "kv_heads", None), arr.shape)
+        if path in ("kvpos", "ckpos"):
+            return rules.spec(("batch", "cache_seq", None), arr.shape) if path == "kvpos" else rules.spec(("batch", None, None), arr.shape)
+        if path == "C":
+            return rules.spec(("batch", "heads", None, None), arr.shape)
+        if path in ("n", "h", "c", "m"):
+            dims = ("batch",) + tuple([None] * (arr.ndim - 1))
+            return rules.spec(dims, arr.shape)
+        if path == "conv":
+            return rules.spec(("batch", None, None), arr.shape)
+        return rules.spec(tuple([None] * arr.ndim), arr.shape)
+
+    return {k: spec_for(k, v) for k, v in shapes.items()}

@@ -1,0 +1,303 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory, block-diagonal recurrence).
+
+Baseline implementation is the *exact sequential recurrence* via
+``lax.scan`` over time with log-space stabilisation (the paper's m-state)
+— numerically faithful and O(1)-state for long_500k decode. The
+chunkwise-parallel mLSTM form is a §Perf hillclimb (see EXPERIMENTS.md):
+it rewrites the same math as intra-chunk attention + inter-chunk state
+so the MXU sees large matmuls instead of a length-T scan.
+
+State layouts (per block):
+  mLSTM: C [B, H, D, D], n [B, H, D], m [B, H]
+  sLSTM: c, n, h, m each [B, H, D]
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import ShardingRules
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg, rules: ShardingRules):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = (2 * d) // H  # cell operates on the 2x up-projected branch
+    ks = jax.random.split(rng, 8)
+    p, s = {}, {}
+    p["w_up"], s["w_up"] = dense_init(ks[0], (d, 2 * d), ("embed", "mlp"), rules)
+    p["w_gate"], s["w_gate"] = dense_init(ks[1], (d, 2 * d), ("embed", "mlp"), rules)
+    p["w_q"], s["w_q"] = dense_init(ks[2], (2 * d, H, dh), ("mlp", "heads", None), rules)
+    p["w_k"], s["w_k"] = dense_init(ks[3], (2 * d, H, dh), ("mlp", "heads", None), rules)
+    p["w_v"], s["w_v"] = dense_init(ks[4], (2 * d, H, dh), ("mlp", "heads", None), rules)
+    p["w_if"], s["w_if"] = dense_init(ks[5], (2 * d, H, 2), ("mlp", "heads", None), rules)
+    p["b_if"] = jnp.zeros((H, 2), jnp.float32)
+    s["b_if"] = jax.sharding.PartitionSpec(None, None)
+    p["w_down"], s["w_down"] = dense_init(ks[6], (2 * d, d), ("mlp", "embed"), rules)
+    p["conv"], s["conv"] = dense_init(ks[7], (4, 2 * d), (None, "mlp"), rules)
+    return p, s
+
+
+def mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = (2 * d) // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+        "conv": jnp.zeros((batch, 3, 2 * d), dtype),  # causal conv tail
+    }
+
+
+def _mlstm_cell(state, q, k, v, logi, logf):
+    """One step of the stabilised mLSTM recurrence.
+
+    q,k,v [B,H,D]; logi,logf [B,H]. Returns (state', h [B,H,D]).
+    """
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(logf + m, logi)
+    a = jnp.exp(logf + m - m_new)[..., None]  # decay
+    b = jnp.exp(logi - m_new)[..., None]  # input scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = C * a[..., None] + b[..., None] * jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n_new = n * a + b * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", C_new, qf)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = num / den
+    return {"C": C_new, "n": n_new, "m": m_new, "conv": state["conv"]}, h
+
+
+def _mlstm_qkv(cfg, p, up):
+    """Projections from the (conv'd) up branch: up [B,S,2d]."""
+    q = jnp.einsum("bsd,dhe->bshe", up, p["w_q"])
+    k = jnp.einsum("bsd,dhe->bshe", up, p["w_k"]) / np.sqrt(q.shape[-1])
+    v = jnp.einsum("bsd,dhe->bshe", up, p["w_v"])
+    gates = jnp.einsum("bsd,dhg->bshg", up, p["w_if"]).astype(jnp.float32) + p["b_if"]
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])
+    return q, k, v, logi, logf
+
+
+def _causal_conv4(x, w, tail=None):
+    """Depthwise causal conv (kernel 4) over [B,S,C]; optional carry tail
+    [B,3,C] for decode. Returns (y, new_tail)."""
+    B, S, C = x.shape
+    if tail is None:
+        tail = jnp.zeros((B, 3, C), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)  # [B, S+3, C]
+    y = (
+        xp[:, 0:S] * w[0]
+        + xp[:, 1 : S + 1] * w[1]
+        + xp[:, 2 : S + 2] * w[2]
+        + xp[:, 3 : S + 3] * w[3]
+    )
+    return y, xp[:, -3:]
+
+
+def apply_mlstm(cfg, p, x, state=None):
+    """x [B,S,d] -> (y [B,S,d], state').
+
+    Dispatches to the chunkwise-parallel form (§Perf hillclimb: intra-
+    chunk attention + inter-chunk state, MXU-sized matmuls instead of a
+    length-S scan) unless ``cfg.mlstm_chunk == 0`` (exact sequential
+    baseline). Both compute the same stabilised recurrence; equivalence
+    is tested to 1e-4 in tests/test_xlstm_chunkwise.py.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    if state is None:
+        state = mlstm_state(cfg, B)
+    up = x @ p["w_up"]
+    gate = x @ p["w_gate"]
+    conv_in, new_tail = _causal_conv4(up, p["conv"], state["conv"])
+    conv_in = jax.nn.silu(conv_in)
+    q, k, v, logi, logf = _mlstm_qkv(cfg, p, conv_in)
+    # v comes from the un-conv'd branch (paper fig. 10)
+    v = jnp.einsum("bsd,dhe->bshe", up, p["w_v"])
+
+    chunk = getattr(cfg, "mlstm_chunk", 0)
+    if chunk and S > 1:
+        final, h = _mlstm_chunkwise(
+            state, q, k, v, logi, logf, min(chunk, S)
+        )
+        final = dict(final, conv=new_tail)
+        h = h.reshape(B, S, 2 * d).astype(x.dtype)
+    else:
+        cell_state = {k_: state[k_] for k_ in ("C", "n", "m")} | {
+            "conv": new_tail
+        }
+
+        def step(carry, xs):
+            qt, kt, vt, it, ft = xs
+            new, hh = _mlstm_cell(carry, qt, kt, vt, it, ft)
+            return new, hh
+
+        xs = (
+            q.swapaxes(0, 1),
+            k.swapaxes(0, 1),
+            v.swapaxes(0, 1),
+            logi.swapaxes(0, 1),
+            logf.swapaxes(0, 1),
+        )
+        final, hs = jax.lax.scan(step, cell_state, xs)
+        h = hs.swapaxes(0, 1).reshape(B, S, 2 * d).astype(x.dtype)
+    y = (h * jax.nn.silu(gate)) @ p["w_down"]
+    return y, final
+
+
+def _mlstm_chunkwise(state, q, k, v, logi, logf, L: int):
+    """Chunkwise-parallel stabilised mLSTM (exact rewrite).
+
+    Derivation: with ``B_t = Σ_{s≤t} logf_s`` (within-chunk cumsum),
+    ``a_s = logi_s − B_s`` and ``M_t = max(m_prev, cummax_{s≤t} a_s)``,
+    the sequential recurrence unrolls to
+
+        m_t = B_t + M_t
+        C_t = e^{m_prev−M_t} C_prev + Σ_{s≤t} e^{a_s−M_t} v_s k_sᵀ
+        h_t = [e^{m_prev−M_t} C_prev q_t + ((q Kᵀ ⊙ D) V)_t] / den_t
+
+    where ``D_ts = e^{a_s−M_t}`` masked to s≤t (all exponents ≤ 0 —
+    stable), and den_t = max(|analogous n·q|, e^{−m_t}). The scan runs
+    over S/L chunks; each step is L×L / L×dh matmuls.
+    """
+    B, S, H, dh = q.shape
+    while S % L:
+        L -= 1
+    n_chunks = S // L
+
+    def re(x):  # [B,S,...] -> [n, B, L, ...]
+        return x.reshape((B, n_chunks, L) + x.shape[2:]).swapaxes(0, 1)
+
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C0, n0, m0 = carry  # [B,H,dh,dh], [B,H,dh], [B,H]
+        qc, kc, vc, lic, lfc = xs  # [B,L,H,dh] / [B,L,H]
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        Bc = jnp.cumsum(lfc, axis=1)  # [B,L,H]
+        a = lic - Bc
+        Mt = jnp.maximum(jax.lax.cummax(a, axis=1), m0[:, None])  # [B,L,H]
+
+        scores = jnp.einsum("blhd,bshd->bhls", qf, kf)  # [B,H,L,L]
+        D = jnp.exp(a.transpose(0, 2, 1)[:, :, None, :]
+                    - Mt.transpose(0, 2, 1)[:, :, :, None])  # [B,H,L(t),L(s)]
+        D = jnp.where(tri[None, None], D, 0.0)
+        sd = scores * D
+        num_intra = jnp.einsum("bhls,bshd->blhd", sd, vf)
+        den_intra = jnp.einsum("bhls->bhl", sd).transpose(0, 2, 1)  # [B,L,H]
+
+        inter_w = jnp.exp(m0[:, None] - Mt)  # [B,L,H]
+        num = (inter_w[..., None]
+               * jnp.einsum("bhde,blhe->blhd", C0, qf)) + num_intra
+        den_vec = inter_w * jnp.einsum("bhd,blhd->blh", n0, qf) + den_intra
+        m_t = Bc + Mt
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))[..., None]
+        h = num / den  # [B,L,H,dh]
+
+        ML = Mt[:, -1]  # [B,H]
+        w_s = jnp.exp(a - ML[:, None])  # [B,L,H]
+        decay = jnp.exp(m0 - ML)
+        C_L = decay[..., None, None] * C0 + jnp.einsum(
+            "blhd,blhe->bhde", vf * w_s[..., None], kf
+        )
+        n_L = decay[..., None] * n0 + jnp.einsum("blhd,blh->bhd", kf, w_s)
+        m_L = Bc[:, -1] + ML
+        return (C_L, n_L, m_L), h
+
+    carry0 = (state["C"], state["n"], state["m"])
+    (C_f, n_f, m_f), hs = jax.lax.scan(
+        chunk_step, carry0, (re(q), re(k), re(v), re(logi), re(logf))
+    )
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return {"C": C_f, "n": n_f, "m": m_f}, h
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg, rules: ShardingRules):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f_up = max(1, int(round(d * 4 / 3 / 64)) * 64)
+    ks = jax.random.split(rng, 5)
+    p, s = {}, {}
+    # 4 gates (i, f, z, o) from input and block-diagonal recurrence
+    p["w_x"], s["w_x"] = dense_init(ks[0], (d, H, 4 * dh), ("embed", "heads", None), rules)
+    p["r"], s["r"] = dense_init(ks[1], (H, dh, 4 * dh), ("heads", None, None), rules)
+    p["b"] = jnp.zeros((H, 4 * dh), jnp.float32)
+    s["b"] = jax.sharding.PartitionSpec(None, None)
+    p["w_up1"], s["w_up1"] = dense_init(ks[2], (d, f_up), ("embed", "mlp"), rules)
+    p["w_up2"], s["w_up2"] = dense_init(ks[3], (d, f_up), ("embed", "mlp"), rules)
+    p["w_down"], s["w_down"] = dense_init(ks[4], (f_up, d), ("mlp", "embed"), rules)
+    return p, s
+
+
+def slstm_state(cfg, batch: int, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    return {
+        "c": jnp.zeros((batch, H, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "h": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H, dh), -1e30, dtype),
+    }
+
+
+def _slstm_cell(cfg, p, state, gx):
+    """gx [B,H,4dh] pre-activations from the input projection."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    dh = c.shape[-1]
+    rec = jnp.einsum("bhd,hdg->bhg", h, p["r"].astype(jnp.float32))
+    g = gx.astype(jnp.float32) + rec + p["b"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new
+
+
+def apply_slstm(cfg, p, x, state=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    if state is None:
+        state = slstm_state(cfg, B)
+    gx = jnp.einsum("bsd,dhg->bshg", x, p["w_x"])  # [B,S,H,4dh]
+
+    def step(carry, g):
+        return _slstm_cell(cfg, p, carry, g)
+
+    # sLSTM's h->gates dependency is inherently sequential (no chunkwise
+    # rewrite exists); unrolling amortises loop overhead + weight reads
+    # across iterations (§Perf hillclimb, xlstm cell).
+    unroll = min(getattr(cfg, "slstm_unroll", 1), S)
+    while S % unroll:
+        unroll -= 1
+    final, hs = jax.lax.scan(step, state, gx.swapaxes(0, 1), unroll=unroll)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    # post-block gated FFN (factor 4/3, paper App. figure)
+    y = (jax.nn.gelu(h @ p["w_up1"]) * (h @ p["w_up2"])) @ p["w_down"]
+    return y, final

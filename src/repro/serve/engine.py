@@ -1,0 +1,129 @@
+"""Batched serving engine: fixed-slot continuous batching over the
+model's decode_step, with greedy/temperature sampling.
+
+Slots hold independent requests; finished slots are refilled from the
+queue each step (continuous batching-lite). The decode step itself is a
+single jitted call over the whole slot batch — one program regardless of
+request mix — with per-slot position masking, which is what keeps the
+engine shape-static and dry-runnable on the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        model: LM,
+        params,
+        batch_slots: int = 8,
+        max_len: int = 256,
+        kv_splits: int = 1,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.temperature = temperature
+        self.cache = model.init_cache(params, batch_slots, max_len, kv_splits)
+        self._step = jax.jit(model.decode_step)
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * batch_slots
+        # per-slot progress: index of the next prompt token to feed (-1 idle)
+        self._feed = np.full((batch_slots,), -1, dtype=np.int64)
+        self._rng = jax.random.PRNGKey(seed)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot_cache(self, slot: int) -> None:
+        """Invalidate a slot's KV/state so a refilled request never
+        attends to the previous occupant's cache entries."""
+
+        def reset(tree, batch_dim: int):
+            def one(path, arr):
+                name = str(getattr(path[-1], "key", ""))
+                if name in ("kvpos", "ckpos"):
+                    idx = (slice(None),) * batch_dim + (slot,)
+                    return arr.at[idx].set(-1)
+                if name in ("k", "v", "C", "n", "h", "c", "conv"):
+                    idx = (slice(None),) * batch_dim + (slot,)
+                    return arr.at[idx].set(0)
+                return arr
+
+            return jax.tree_util.tree_map_with_path(one, tree)
+
+        self.cache = dict(
+            self.cache,
+            layers=reset(self.cache["layers"], 1),  # [G, B, ...]
+            tail=reset(self.cache["tail"], 0),  # [B, ...]
+        )
+
+    def _fill_slots(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                self.active[s] = self.queue.popleft()
+                self._feed[s] = 0
+                self._reset_slot_cache(s)
+
+    def step(self) -> int:
+        """One global decode step across all slots; returns #active."""
+        self._fill_slots()
+        tokens = np.zeros((self.slots,), dtype=np.int32)
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self._feed[s] < len(req.prompt):  # still feeding the prompt
+                tokens[s] = req.prompt[self._feed[s]]
+            else:
+                tokens[s] = req.out[-1] if req.out else req.prompt[-1]
+        logits, self.cache = self._step(self.params, self.cache, jnp.asarray(tokens))
+        if self.temperature > 0:
+            self._rng, k = jax.random.split(self._rng)
+            nxt = jax.random.categorical(k, logits / self.temperature, axis=-1)
+        else:
+            nxt = logits.argmax(axis=-1)
+        nxt = np.asarray(nxt)
+        n_active = 0
+        for s, req in enumerate(self.active):
+            if req is None:
+                continue
+            n_active += 1
+            if self._feed[s] < len(req.prompt) - 1:
+                self._feed[s] += 1  # prompt not exhausted: discard logits
+                continue
+            self._feed[s] += 1
+            req.out.append(int(nxt[s]))
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.active[s] = None
+                self._feed[s] = -1
+        return n_active
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drain the queue (shared cache position: single stream window)."""
+        for _ in range(max_steps):
+            if not any(self.active) and not self.queue:
+                break
+            if int(self.cache["pos"]) >= self.max_len:
+                break
+            self.step()

@@ -1,0 +1,100 @@
+"""Fault tolerance: restart supervision, elastic re-meshing, stragglers.
+
+At 1000+ nodes the failure model is: (a) a worker dies mid-step →
+the whole synchronous job dies and is restarted by the cluster scheduler;
+(b) the replacement capacity differs → the mesh must re-factor; (c) a
+worker is slow → on a synchronous TPU mesh this is *skew*, not
+straggling, and is handled at the data/shuffle level (capacity-bounded
+all_to_all + the EE-Join job-completion objective), not by speculative
+re-execution.
+
+This module implements the supervisor side:
+
+* ``run_with_restarts`` — supervises a training function, restoring from
+  the newest consistent checkpoint on every crash (bounded retries,
+  exponential backoff). Fault injection hooks make this testable.
+* ``elastic_remesh`` — restores a checkpoint onto a *different* mesh
+  factorisation (checkpoints are logical-keyed global arrays, so this is
+  just a re-device_put; see train/checkpoint.py).
+* ``StepBarrierMonitor`` — wall-clock watchdog per step; on a real
+  deployment it feeds the scheduler's slow-node eviction. Here it
+  records per-step durations and flags outliers (> k·median).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 3
+    backoff_s: float = 0.1
+    backoff_mult: float = 2.0
+
+
+def run_with_restarts(
+    train_fn: Callable[[bool], dict],
+    policy: RestartPolicy = RestartPolicy(),
+    on_restart: Callable[[int, BaseException], None] | None = None,
+) -> dict:
+    """Supervise ``train_fn(resume: bool)``; restart from checkpoints.
+
+    ``train_fn`` must be restart-safe: when called with resume=True it
+    restores the newest checkpoint and continues (trainer.train is).
+    """
+    delay = policy.backoff_s
+    attempt = 0
+    while True:
+        try:
+            return train_fn(attempt > 0)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as e:  # noqa: BLE001 - supervisor boundary
+            attempt += 1
+            if attempt > policy.max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(attempt, e)
+            time.sleep(delay)
+            delay *= policy.backoff_mult
+
+
+def elastic_remesh(ckpt_dir: str, params_t, opt_t, new_mesh, new_specs):
+    """Restore the latest checkpoint onto a different mesh factorisation."""
+    from repro.train import checkpoint as C
+
+    restored = C.try_restore_latest(ckpt_dir, params_t, opt_t, new_mesh, new_specs)
+    if restored is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    return restored
+
+
+@dataclasses.dataclass
+class StepBarrierMonitor:
+    """Flags steps whose wall time is an outlier (straggler telemetry)."""
+
+    threshold: float = 3.0
+    window: int = 50
+    durations: list = dataclasses.field(default_factory=list)
+    flagged: list = dataclasses.field(default_factory=list)
+    _t0: float | None = None
+
+    def start(self) -> None:
+        self._t0 = time.time()
+
+    def stop(self, step: int) -> bool:
+        assert self._t0 is not None
+        dt = time.time() - self._t0
+        self.durations.append(dt)
+        recent = self.durations[-self.window :]
+        med = float(np.median(recent))
+        slow = len(recent) >= 5 and dt > self.threshold * med
+        if slow:
+            self.flagged.append((step, dt, med))
+        return slow

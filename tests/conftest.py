@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+from repro.data.synth import make_corpus
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    return make_corpus(
+        num_docs=8, doc_len=64, vocab_size=512, num_entities=24, seed=1
+    )
+
+
+@pytest.fixture(scope="session")
+def zipf_corpus():
+    return make_corpus(
+        num_docs=24,
+        doc_len=96,
+        vocab_size=1024,
+        num_entities=48,
+        mention_dist="zipf",
+        seed=3,
+    )

@@ -1,0 +1,126 @@
+"""Cost model: Lemma 1 monotonicity + §5.2 search optimality (property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cost_model import (
+    ALL_OPTIONS,
+    OBJ_JOB,
+    OBJ_WORK,
+    CostParams,
+    cost_side,
+    objective_value,
+)
+from repro.core.plan import PlanSide
+from repro.core.search import exhaustive_plan, search_plan
+from repro.core.stats import EEStats, gather_stats
+from repro.data.synth import make_corpus
+
+
+def _random_stats(rng: np.random.Generator, E: int = 64) -> EEStats:
+    """Synthetic-but-valid EEStats: monotone curves, nonneg prefix sums."""
+    def curve_up():
+        return np.concatenate([[0.0], np.cumsum(rng.uniform(0, 100, E))])
+
+    surv_head = curve_up()
+    surv_tail = (surv_head[-1] - surv_head)  # complementary, non-increasing
+    cum = {
+        name: curve_up()
+        for name in (
+            "verify_word", "verify_prefix", "verify_lsh", "verify_variant",
+            "postings_word", "postings_prefix", "variants",
+        )
+    }
+    grid = np.linspace(0, E, 9)
+    index_bytes = {}
+    for kind in ("word", "prefix", "variant"):
+        h = np.sort(rng.uniform(0, 1e6, len(grid)))
+        t = np.sort(rng.uniform(0, 1e6, len(grid)))[::-1].copy()
+        h[0] = 0.0
+        t[-1] = 0.0
+        index_bytes[kind] = (grid, h, t)
+    return EEStats(
+        num_entities=E,
+        max_len=5,
+        scale=10.0,
+        num_windows=float(rng.uniform(1e4, 1e6)),
+        avg_sigs_per_window=float(rng.uniform(1.5, 4.0)),
+        survivors_head=surv_head,
+        survivors_tail=surv_tail,
+        cum=cum,
+        index_bytes=index_bytes,
+        sig_skew={k: float(rng.uniform(1, 30)) for k in ("word", "prefix", "lsh", "variant")},
+        table_bytes_per_entity={k: 24.0 for k in ("word", "prefix", "lsh", "variant")},
+    )
+
+
+@given(st.integers(0, 10_000), st.sampled_from(ALL_OPTIONS), st.sampled_from([OBJ_JOB, OBJ_WORK]))
+@settings(max_examples=60, deadline=None)
+def test_lemma1_monotonicity(seed, option, objective):
+    """Head cost non-decreasing, tail cost non-increasing in the split."""
+    rng = np.random.default_rng(seed)
+    stats = _random_stats(rng)
+    params = CostParams(num_devices=8, hbm_budget_bytes=float(rng.uniform(1e4, 1e6)))
+    algo, scheme = option
+    E = stats.num_entities
+    prev_h, prev_t = -1.0, float("inf")
+    for p in range(0, E + 1, 4):
+        h = objective_value(cost_side(stats, params, 0, p, algo, scheme, head=True), objective)
+        t = objective_value(cost_side(stats, params, p, E, algo, scheme, head=False), objective)
+        assert h >= prev_h - 1e-9, f"head cost decreased at p={p}"
+        assert t <= prev_t + 1e-9, f"tail cost increased at p={p}"
+        prev_h, prev_t = h, t
+
+
+@given(st.integers(0, 10_000), st.sampled_from([OBJ_JOB, OBJ_WORK]))
+@settings(max_examples=25, deadline=None)
+def test_search_near_optimal(seed, objective):
+    """Bracketed search within 10% of exhaustive even on adversarial
+    step-shaped random stats (real curves are much smoother; see the
+    real-stats test below for the tight bound)."""
+    rng = np.random.default_rng(seed)
+    stats = _random_stats(rng)
+    params = CostParams(num_devices=8, hbm_budget_bytes=float(rng.uniform(1e4, 1e6)))
+    opts = [("index", "prefix"), ("ssjoin", "variant"), ("ssjoin", "prefix")]
+    got = search_plan(stats, params, objective, options=opts)
+    want = exhaustive_plan(stats, params, objective, options=opts)
+    assert got.predicted_cost <= want.predicted_cost * 1.10
+    assert got.evaluations < want.evaluations / 2
+
+
+def test_search_on_real_stats_matches_exhaustive():
+    c = make_corpus(num_docs=24, doc_len=96, vocab_size=1024, num_entities=48, seed=3)
+    stats = gather_stats(c.dictionary, c.doc_tokens[:8], 24, gamma=0.8)
+    params = CostParams(num_devices=4)
+    for objective in (OBJ_JOB, OBJ_WORK):
+        got = search_plan(stats, params, objective)
+        want = exhaustive_plan(stats, params, objective)
+        assert got.predicted_cost <= want.predicted_cost * 1.02
+
+
+def test_objectives_can_disagree():
+    """Work-done ignores skew; job-completion pays it — plans may differ."""
+    rng = np.random.default_rng(12)
+    found = False
+    for seed in range(40):
+        stats = _random_stats(np.random.default_rng(seed))
+        stats.sig_skew = {k: 200.0 for k in stats.sig_skew}  # brutal skew
+        params = CostParams(num_devices=64)
+        a = search_plan(stats, params, OBJ_WORK)
+        b = search_plan(stats, params, OBJ_JOB)
+        if (a.head, a.tail, a.split) != (b.head, b.tail, b.split):
+            found = True
+            break
+    assert found, "objectives never disagreed across 40 random stats"
+
+
+def test_memory_budget_forces_passes():
+    c = make_corpus(num_docs=16, doc_len=64, vocab_size=512, num_entities=48, seed=5)
+    stats = gather_stats(c.dictionary, c.doc_tokens[:8], 16, gamma=0.8)
+    tight = CostParams(num_devices=4, hbm_budget_bytes=2e4)
+    loose = CostParams(num_devices=4, hbm_budget_bytes=1e12)
+    ct = cost_side(stats, tight, 0, 48, "index", "word", head=True)
+    cl = cost_side(stats, loose, 0, 48, "index", "word", head=True)
+    assert ct.passes > cl.passes == 1
+    assert ct.job_completion > cl.job_completion

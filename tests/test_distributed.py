@@ -1,0 +1,37 @@
+"""Distributed extraction correctness (subprocess: needs fake devices).
+
+The XLA host-device-count flag must be set before jax initialises, so
+these checks run in a child process rather than the pytest process
+(which must keep seeing 1 device for the smoke tests).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(n_devices: int) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest_distributed", str(n_devices)],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_distributed_extraction_8_devices():
+    checks = _run(8)
+    assert checks["n_devices"] == 8
+    failed = [k for k, v in checks.items() if isinstance(v, bool) and not v]
+    assert not failed, f"failed distributed checks: {failed}"

@@ -1,0 +1,157 @@
+"""Extraction algorithms vs the brute-force oracle (filter, index, ssjoin)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.filter import build_ish_filter, measure_fp_rate
+from repro.core.signatures import LshParams, entity_signatures
+from repro.extraction import engine as E
+from repro.extraction.oracle import oracle_extract
+
+GAMMA = 0.8
+
+
+@pytest.fixture(scope="module")
+def setup(small_corpus):
+    c = small_corpus
+    d = c.dictionary
+    flt = build_ish_filter(d, GAMMA)
+    return dict(
+        c=c,
+        d=d,
+        docs=jnp.asarray(c.doc_tokens),
+        ddict=E.DeviceDictionary.from_host(d),
+        flt=(jnp.asarray(flt.bits), flt.num_bits, flt.num_hashes),
+        flt_host=flt,
+        truth_extra=oracle_extract(c.doc_tokens, d, GAMMA, "extra"),
+        truth_var=oracle_extract(c.doc_tokens, d, GAMMA, "variant_exact"),
+    )
+
+
+def _cands(s, params):
+    base, surv = E.survival_mask(s["docs"], s["d"].max_len, s["flt"])
+    return E.compact_candidates(base, surv, params.max_candidates)
+
+
+def test_filter_never_drops_true_mentions(setup):
+    s = setup
+    base, surv = E.survival_mask(s["docs"], s["d"].max_len, s["flt"])
+    surv = np.asarray(surv)
+    for (doc, pos, length, _e) in s["truth_extra"]:
+        assert surv[doc, pos, length - 1], "ISH filter dropped a true mention"
+
+
+def test_filter_prunes_substantially(setup):
+    s = setup
+    base, surv_nf = E.survival_mask(s["docs"], s["d"].max_len, None)
+    _, surv = E.survival_mask(s["docs"], s["d"].max_len, s["flt"])
+    kept = float(np.asarray(surv).sum()) / float(np.asarray(surv_nf).sum())
+    assert kept < 0.6, f"filter kept {kept:.0%} of candidates"
+
+
+def test_filter_fp_rate_bounded(setup):
+    rng = np.random.default_rng(0)
+    sample = rng.integers(1, setup["d"].vocab_size, size=10000).astype(np.int32)
+    assert measure_fp_rate(setup["flt_host"], sample) < 0.05
+
+
+@pytest.mark.parametrize("kind,truth_key", [
+    ("word", "truth_extra"),
+    ("prefix", "truth_extra"),
+    ("variant", "truth_var"),
+])
+def test_index_paths_match_oracle(setup, kind, truth_key):
+    s = setup
+    params = E.ExtractParams(
+        gamma=GAMMA, scheme=kind, max_candidates=8192, result_capacity=8192
+    )
+    cands = _cands(s, params)
+    parts = E.build_index_partitions(s["d"], kind, GAMMA, memory_budget_bytes=1 << 30)
+    assert len(parts) == 1
+    got = E.extract_index_part(cands, parts[0], s["ddict"], params).to_set()
+    assert got == s[truth_key]
+
+
+@pytest.mark.parametrize("kind", ["word", "prefix", "variant"])
+def test_index_multipass_equals_single_pass(setup, kind):
+    """Def. 3's |E|/M_e multi-pass must not change results."""
+    s = setup
+    params = E.ExtractParams(
+        gamma=GAMMA, scheme=kind, max_candidates=8192, result_capacity=8192
+    )
+    cands = _cands(s, params)
+    big = E.build_index_partitions(s["d"], kind, GAMMA, memory_budget_bytes=1 << 30)
+    small = E.build_index_partitions(s["d"], kind, GAMMA, memory_budget_bytes=1200)
+    assert len(small) > 1, "budget should force multiple passes"
+    got_big = E.extract_index_part(cands, big[0], s["ddict"], params).to_set()
+    got_small = set()
+    for part in small:
+        got_small |= E.extract_index_part(cands, part, s["ddict"], params).to_set()
+    assert got_small == got_big
+
+
+@pytest.mark.parametrize("scheme,truth_key", [
+    ("word", "truth_extra"),
+    ("prefix", "truth_extra"),
+    ("variant", "truth_var"),
+])
+def test_ssjoin_paths_match_oracle(setup, scheme, truth_key):
+    s = setup
+    params = E.ExtractParams(
+        gamma=GAMMA, scheme=scheme, max_candidates=8192, result_capacity=16384
+    )
+    cands = _cands(s, params)
+    table = E.build_sig_table(entity_signatures(scheme, s["d"], GAMMA))
+    got = E.extract_ssjoin_local(cands, table, s["ddict"], params).to_set()
+    assert got == s[truth_key]
+
+
+def test_ssjoin_lsh_high_recall_no_false_positives(setup):
+    s = setup
+    lsh = LshParams(bands=16, rows=1)  # aggressive banding -> high recall
+    params = E.ExtractParams(
+        gamma=GAMMA, scheme="lsh", max_candidates=8192,
+        result_capacity=16384, lsh=lsh,
+    )
+    cands = _cands(s, params)
+    table = E.build_sig_table(entity_signatures("lsh", s["d"], GAMMA, lsh))
+    got = E.extract_ssjoin_local(cands, table, s["ddict"], params).to_set()
+    assert got <= s["truth_extra"], "verification must kill false positives"
+    recall = len(got & s["truth_extra"]) / len(s["truth_extra"])
+    assert recall > 0.9, f"LSH recall {recall:.0%}"
+
+
+def test_overflow_is_surfaced(setup):
+    s = setup
+    params = E.ExtractParams(
+        gamma=GAMMA, scheme="word", max_candidates=64, result_capacity=64
+    )
+    cands = _cands(s, params)
+    assert int(cands["overflow"]) > 0
+    assert int(cands["n_survive"]) > 64
+
+
+def test_eejoin_operator_end_to_end(zipf_corpus):
+    c = zipf_corpus
+    op = EEJoinOperator(c.dictionary, EEJoinConfig(gamma=GAMMA))
+    stats = op.gather_statistics(c.doc_tokens[:8], total_docs=c.doc_tokens.shape[0])
+    from repro.core.cost_model import CostParams
+
+    plan = op.choose_plan(stats, CostParams(num_devices=4))
+    prepared = op.prepare(plan, CostParams(num_devices=4))
+    m = op.execute(prepared, jnp.asarray(c.doc_tokens))
+    got = m.to_set()
+
+    # per-side oracle: schemes define each side's exact predicate
+    truth = set()
+    for side in prepared.sides:
+        a = side.ddict.entity_offset
+        b = a + side.ddict.tokens.shape[0]
+        sim = "variant_exact" if side.side.scheme == "variant" else "extra"
+        tr = oracle_extract(c.doc_tokens, c.dictionary, GAMMA, sim)
+        truth |= {t for t in tr if a <= t[3] < b}
+        if side.side.scheme == "lsh":
+            pytest.skip("probabilistic side chosen; covered elsewhere")
+    assert got == truth

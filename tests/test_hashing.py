@@ -1,0 +1,49 @@
+"""Hash parity (numpy vs jnp) and set-hash properties."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import hashing as H
+
+
+@given(st.lists(st.integers(1, 2**31 - 1), min_size=1, max_size=64), st.integers(0, 50))
+@settings(max_examples=50, deadline=None)
+def test_hash_parity_np_jnp(vals, seed):
+    x = np.array(vals, dtype=np.int32)
+    a = H.hash_u32(x, seed, xp=np)
+    b = np.asarray(H.hash_u32(jnp.asarray(x), seed, xp=jnp))
+    assert (a == b).all()
+
+
+@given(
+    st.lists(st.integers(1, 10**6), min_size=1, max_size=16),
+    st.integers(0, 10),
+)
+@settings(max_examples=50, deadline=None)
+def test_set_hash_permutation_invariant(vals, seed):
+    x = np.array(vals, dtype=np.int32)
+    v = np.ones(len(x), dtype=bool)
+    h1 = H.set_hash(x, v, seed=seed, xp=np)
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(x))
+    h2 = H.set_hash(x[perm], v[perm], seed=seed, xp=np)
+    assert h1 == h2
+    h3 = np.asarray(H.set_hash(jnp.asarray(x), jnp.asarray(v), seed=seed, xp=jnp))
+    assert h1 == h3
+
+
+def test_set_hash_respects_mask():
+    x = np.array([5, 9, 7, 7], dtype=np.int32)
+    v = np.array([True, False, True, False])
+    y = np.array([5, 7, 1, 2], dtype=np.int32)
+    w = np.array([True, True, False, False])
+    assert H.set_hash(x, v, xp=np) == H.set_hash(y, w, xp=np)
+
+
+def test_hash_distribution_roughly_uniform():
+    x = np.arange(1, 100001, dtype=np.int32)
+    h = H.hash_u32(x, 0, xp=np)
+    buckets = np.bincount((h % np.uint32(64)).astype(np.int64), minlength=64)
+    assert buckets.max() / buckets.mean() < 1.2

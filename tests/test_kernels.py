@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.signatures import LshParams, _minhash_np
+from repro.kernels import ops, ref
+from repro.kernels.jaccard_verify import jaccard_verify_pallas
+from repro.kernels.minhash import minhash_pallas
+from repro.kernels.window_filter import window_filter_pallas
+
+
+def _rand_tokens(rng, shape, vocab=512, pad_frac=0.3):
+    t = rng.integers(1, vocab, size=shape).astype(np.int32)
+    pad = rng.random(shape) < pad_frac
+    return np.where(pad, 0, t).astype(np.int32)
+
+
+# ------------------------------------------------------------- jaccard
+@pytest.mark.parametrize("N,K,L", [(7, 3, 4), (128, 64, 8), (200, 130, 5), (1, 1, 2), (513, 17, 16)])
+@pytest.mark.parametrize("mode", ["extra", "missing"])
+def test_jaccard_verify_sweep(N, K, L, mode):
+    rng = np.random.default_rng(N * 1000 + K + L)
+    win = _rand_tokens(rng, (N, L))
+    ent = _rand_tokens(rng, (N, K, L))
+    win_w = (rng.uniform(0.1, 2.0, (N, L)) * (win != 0)).astype(np.float32)
+    ent_w = (rng.uniform(0.1, 2.0, (N, K, L)) * (ent != 0)).astype(np.float32)
+    got = jaccard_verify_pallas(
+        jnp.asarray(win), jnp.asarray(win_w), jnp.asarray(ent), jnp.asarray(ent_w),
+        mode=mode, bn=64, bk=32, interpret=True,
+    )
+    want = ref.jaccard_verify_ref(
+        jnp.asarray(win), jnp.asarray(win_w), jnp.asarray(ent), jnp.asarray(ent_w), mode
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_jaccard_verify_matches_engine_semantics():
+    """Kernel path == semantics.similarity on first-occurrence windows."""
+    from repro.core.semantics import similarity, first_occurrence_mask
+
+    rng = np.random.default_rng(0)
+    N, K, L, V = 64, 8, 6, 128
+    win = _rand_tokens(rng, (N, L), vocab=V)
+    ids = rng.integers(0, 32, size=(N, K)).astype(np.int32)
+    dict_tokens = _rand_tokens(rng, (32, L), vocab=V)
+    dict_tokens[:, 0] = np.maximum(dict_tokens[:, 0], 1)  # no empty entities
+    # dedup entity rows (dictionary invariant)
+    for i in range(32):
+        row = dict_tokens[i]
+        seen = set()
+        for j in range(L):
+            if row[j] in seen:
+                row[j] = 0
+            elif row[j] != 0:
+                seen.add(row[j])
+    tw = np.zeros((V,), np.float32)
+    tw[1:] = rng.uniform(0.2, 2.0, V - 1)
+    got = ops.jaccard_verify(
+        jnp.asarray(win), jnp.asarray(ids), jnp.asarray(dict_tokens),
+        jnp.asarray(tw), "extra",
+    )
+    want = similarity(
+        "extra", jnp.asarray(dict_tokens)[jnp.asarray(ids)],
+        jnp.asarray(win)[:, None, :], jnp.asarray(tw), xp=jnp,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------- minhash
+@pytest.mark.parametrize("N,L", [(5, 3), (256, 8), (300, 5), (1, 1)])
+@pytest.mark.parametrize("bands,rows", [(4, 2), (8, 1), (2, 4)])
+def test_minhash_sweep(N, L, bands, rows):
+    rng = np.random.default_rng(N + bands * 10 + rows)
+    toks = _rand_tokens(rng, (N, L))
+    valid = toks != 0
+    got = minhash_pallas(
+        jnp.asarray(toks), jnp.asarray(valid), bands=bands, rows=rows,
+        bn=64, interpret=True,
+    )
+    want = ref.minhash_ref(jnp.asarray(toks), jnp.asarray(valid), bands, rows)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # and bit-identical to the host-side dictionary path
+    host = _minhash_np(toks, valid, LshParams(bands=bands, rows=rows))
+    assert (np.asarray(got) == host).all()
+
+
+# ------------------------------------------------------- window filter
+@pytest.mark.parametrize("D,T,L", [(3, 32, 4), (16, 128, 8), (9, 64, 5)])
+@pytest.mark.parametrize("num_bits", [1 << 12, 1 << 15])
+def test_window_filter_sweep(D, T, L, num_bits):
+    rng = np.random.default_rng(D * T)
+    docs = _rand_tokens(rng, (D, T), vocab=2048, pad_frac=0.05)
+    words = rng.integers(0, 2**32, size=(num_bits // 32,), dtype=np.uint32)
+    got = window_filter_pallas(
+        jnp.asarray(docs), jnp.asarray(words), num_bits=num_bits,
+        num_hashes=3, max_len=L, bd=4, interpret=True,
+    )
+    want = ref.window_filter_ref(
+        jnp.asarray(docs), jnp.asarray(words), num_bits, 3, L
+    )
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_kernels_equal_engine_extraction(small_corpus):
+    """End-to-end: extraction with use_kernel=True == use_kernel=False."""
+    from repro.core.filter import build_ish_filter
+    from repro.core.signatures import entity_signatures
+    from repro.extraction import engine as E
+
+    c = small_corpus
+    d = c.dictionary
+    flt = build_ish_filter(d, 0.8)
+    fltt = (jnp.asarray(flt.bits), flt.num_bits, flt.num_hashes)
+    docs = jnp.asarray(c.doc_tokens)
+    ddict = E.DeviceDictionary.from_host(d)
+    for use_kernel in (False, True):
+        params = E.ExtractParams(
+            gamma=0.8, scheme="prefix", max_candidates=4096,
+            result_capacity=8192, use_kernel=use_kernel,
+        )
+        base, surv = E.survival_mask(docs, d.max_len, fltt, use_kernel)
+        cands = E.compact_candidates(base, surv, params.max_candidates)
+        table = E.build_sig_table(entity_signatures("prefix", d, 0.8))
+        m = E.extract_ssjoin_local(cands, table, ddict, params)
+        if use_kernel:
+            got_k = m.to_set()
+        else:
+            got_j = m.to_set()
+    assert got_k == got_j

@@ -1,0 +1,102 @@
+"""Similarity semantics: paper examples, parity, predicate relations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.semantics import (
+    SIM_EXTRA,
+    SIM_JACCARD,
+    SIM_MISSING,
+    SIM_VARIANT_EXACT,
+    similarity,
+)
+
+# vocabulary for the paper's §2 example
+APPLE, IPHONE, FOUR, G32, CHARGER, BLACK = 1, 2, 3, 4, 5, 6
+V = 16
+
+
+def _tw(weights=None):
+    tw = np.ones((V,), dtype=np.float32)
+    tw[0] = 0.0
+    if weights:
+        for t, w in weights.items():
+            tw[t] = w
+    return tw
+
+
+def _sim(name, ent, win, tw, xp=np):
+    ent = np.array([ent + [0] * (6 - len(ent))], dtype=np.int32)
+    win = np.array([win + [0] * (6 - len(win))], dtype=np.int32)
+    if xp is np:
+        return float(similarity(name, ent, win, tw, xp=np)[0])
+    return float(
+        similarity(name, jnp.asarray(ent), jnp.asarray(win), jnp.asarray(tw), xp=jnp)[0]
+    )
+
+
+def test_paper_example_jaccard_containment():
+    tw = _tw()
+    e1 = [IPHONE, CHARGER]
+    e2 = [APPLE, IPHONE, FOUR, BLACK, G32]  # stand-in for the long entity
+    s1 = [IPHONE, FOUR]
+    approx = pytest.approx
+    # JaccCont_missing(E2, S1) = w(e∩s)/w(s) = 2/2 = 1 (S1 ⊆ E2)
+    assert _sim(SIM_MISSING, e2, s1, tw) == approx(1.0)
+    # JaccCont_missing(E1, S1) = 1/2
+    assert _sim(SIM_MISSING, e1, s1, tw) == approx(0.5)
+    # extra variation: coverage of the entity
+    assert _sim(SIM_EXTRA, e2, s1, tw) == approx(2.0 / 5.0)
+    assert _sim(SIM_EXTRA, e1, s1, tw) == approx(0.5)
+    # symmetric jaccard
+    assert _sim(SIM_JACCARD, e1, s1, tw) == approx(1.0 / 3.0)
+
+
+def test_weighted_example_def2():
+    # Apple:1 iPhone:8 4:2 32G:1, gamma=0.75 -> {iPhone 4} has weight 10/12
+    tw = _tw({APPLE: 1.0, IPHONE: 8.0, FOUR: 2.0, G32: 1.0})
+    e = [APPLE, IPHONE, FOUR, G32]
+    assert _sim(SIM_EXTRA, e, [IPHONE, FOUR], tw) >= 0.75
+    assert _sim(SIM_EXTRA, e, [IPHONE], tw) < 0.75
+    assert _sim(SIM_EXTRA, e, [APPLE, IPHONE, FOUR], tw) >= 0.75
+
+
+def test_variant_exact_requires_subset():
+    tw = _tw()
+    e = [APPLE, IPHONE, FOUR]
+    assert _sim(SIM_VARIANT_EXACT, e, [APPLE, IPHONE], tw) == pytest.approx(2.0 / 3.0)
+    # junk token breaks the subset requirement
+    assert _sim(SIM_VARIANT_EXACT, e, [APPLE, IPHONE, CHARGER], tw) == 0.0
+    # but plain extra-containment tolerates it
+    assert _sim(SIM_EXTRA, e, [APPLE, IPHONE, CHARGER], tw) == pytest.approx(2.0 / 3.0)
+
+
+def test_duplicate_window_tokens_counted_once():
+    tw = _tw()
+    e = [APPLE, IPHONE]
+    assert _sim(SIM_MISSING, e, [APPLE, APPLE, APPLE], tw) == pytest.approx(1.0)
+    assert _sim(SIM_JACCARD, e, [APPLE, APPLE], tw) == pytest.approx(0.5)
+
+
+@given(
+    st.lists(st.integers(1, V - 1), min_size=1, max_size=5, unique=True),
+    st.lists(st.integers(1, V - 1), min_size=1, max_size=5),
+)
+@settings(max_examples=80, deadline=None)
+def test_np_jnp_parity_and_relations(ent, win):
+    tw = _tw()
+    for name in (SIM_MISSING, SIM_EXTRA, SIM_JACCARD, SIM_VARIANT_EXACT):
+        a = _sim(name, ent, win, tw, xp=np)
+        b = _sim(name, ent, win, tw, xp=jnp)
+        assert abs(a - b) < 1e-6
+    # variant_exact(e,s) > 0 implies it equals extra(e,s)
+    ve = _sim(SIM_VARIANT_EXACT, ent, win, tw)
+    ex = _sim(SIM_EXTRA, ent, win, tw)
+    if ve > 0:
+        assert abs(ve - ex) < 1e-6
+    assert ve <= ex + 1e-6
+    # jaccard lower-bounds both containments
+    assert _sim(SIM_JACCARD, ent, win, tw) <= min(ex, _sim(SIM_MISSING, ent, win, tw)) + 1e-6

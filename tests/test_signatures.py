@@ -1,0 +1,118 @@
+"""Signature-scheme completeness contracts (§3.3)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.dictionary import build_dictionary
+from repro.core.semantics import SIM_EXTRA, SIM_VARIANT_EXACT, similarity
+from repro.core.signatures import (
+    SIG_LSH,
+    SIG_PREFIX,
+    SIG_VARIANT,
+    SIG_WORD,
+    LshParams,
+    entity_signatures,
+    prefix_token_sets,
+    window_signatures,
+)
+
+V = 64
+GAMMA = 0.7
+
+
+def _dict_one(ent_tokens, tw=None):
+    return build_dictionary([ent_tokens], V, token_weight=tw)
+
+
+@given(
+    st.lists(st.integers(1, V - 1), min_size=2, max_size=6, unique=True),
+    st.data(),
+)
+@settings(max_examples=60, deadline=None)
+def test_prefix_sets_are_hitting_sets(ent, data):
+    """Any window with extra-containment >= gamma contains a prefix token."""
+    d = _dict_one(ent)
+    (prefix,) = prefix_token_sets(d, GAMMA)
+    # adversarial window: entity tokens minus the prefix set
+    rest = [t for t in ent if t not in prefix.tolist()]
+    tw = d.token_weight
+    if rest:
+        win = np.array([rest + [0] * (6 - len(rest))], dtype=np.int32)
+        s = similarity(SIM_EXTRA, d.tokens[:1], win, tw, xp=np)[0]
+        assert s < GAMMA, "window avoiding all prefix tokens must not match"
+    # random subsets that DO match must intersect the prefix
+    idx = data.draw(st.lists(st.integers(0, len(ent) - 1), min_size=1, unique=True))
+    sub = [ent[i] for i in idx]
+    win = np.array([sub + [0] * (6 - len(sub))], dtype=np.int32)
+    s = similarity(SIM_EXTRA, d.tokens[:1], win, tw, xp=np)[0]
+    if s >= GAMMA:
+        assert set(sub) & set(prefix.tolist())
+
+
+@given(st.lists(st.integers(1, V - 1), min_size=2, max_size=5, unique=True))
+@settings(max_examples=40, deadline=None)
+def test_word_prefix_signature_overlap_on_match(ent):
+    d = _dict_one(ent)
+    L = d.max_len
+    for scheme in (SIG_WORD, SIG_PREFIX):
+        es = entity_signatures(scheme, d, GAMMA)
+        # the full-entity window must share a signature
+        win = jnp.asarray(d.tokens[:1])
+        ws, wm = window_signatures(scheme, win, win != 0, GAMMA)
+        shared = set(np.asarray(ws)[np.asarray(wm)].tolist()) & set(es.sig.tolist())
+        assert shared, f"{scheme}: full mention must share a signature"
+
+
+def test_variant_signatures_are_verification_free(zipf_corpus):
+    """A variant signature collision implies a true variant_exact match."""
+    c = zipf_corpus
+    d = c.dictionary
+    es = entity_signatures(SIG_VARIANT, d, GAMMA)
+    # probe every window of the first few docs
+    from repro.extraction.substrings import window_base_np
+
+    base = window_base_np(c.doc_tokens[:4], d.max_len)
+    cand = base.reshape(-1, d.max_len)
+    ws, wm = window_signatures(SIG_VARIANT, jnp.asarray(cand), jnp.asarray(cand != 0), GAMMA)
+    ws = np.asarray(ws)[:, 0]
+    sig_to_ents: dict[int, list[int]] = {}
+    for s, e in zip(es.sig.tolist(), es.entity_id.tolist()):
+        sig_to_ents.setdefault(s, []).append(e)
+    valid = np.cumprod(base.reshape(-1, d.max_len) != 0, axis=-1).astype(bool)[:, 0]
+    checked = 0
+    for i in range(len(cand)):
+        if not valid[i]:
+            continue
+        for e in sig_to_ents.get(int(ws[i]), ()):
+            s = similarity(
+                SIM_VARIANT_EXACT,
+                d.tokens[e : e + 1],
+                cand[i : i + 1],
+                d.token_weight,
+                xp=np,
+            )[0]
+            assert s >= GAMMA - 1e-6
+            checked += 1
+    assert checked > 0, "test corpus produced no variant collisions"
+
+
+def test_lsh_recall_reasonable():
+    rng = np.random.default_rng(0)
+    ents = [rng.choice(np.arange(1, V), size=4, replace=False).tolist() for _ in range(50)]
+    d = build_dictionary(ents, V)
+    lsh = LshParams(bands=8, rows=2)
+    es = entity_signatures(SIG_LSH, d, GAMMA, lsh)
+    # exact mentions: the entity itself as window
+    win = jnp.asarray(d.tokens)
+    ws, wm = window_signatures(SIG_LSH, win, win != 0, GAMMA, lsh)
+    ws = np.asarray(ws)
+    found = 0
+    per_ent = {}
+    for s, e in zip(es.sig.tolist(), es.entity_id.tolist()):
+        per_ent.setdefault(e, set()).add(s)
+    for e in range(d.num_entities):
+        if set(ws[e].tolist()) & per_ent[e]:
+            found += 1
+    assert found == d.num_entities, "identical sets must share every band"

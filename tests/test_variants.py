@@ -1,0 +1,59 @@
+"""Jaccard-variant enumeration (Def. 2) vs brute force."""
+import itertools
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.variants import (
+    enumerate_entity_variants,
+    variant_keys,
+    window_variant_key,
+)
+from repro.core.dictionary import build_dictionary
+from repro.core import hashing
+
+
+@given(
+    st.lists(st.integers(1, 1000), min_size=1, max_size=7, unique=True),
+    st.floats(0.3, 1.0),
+)
+@settings(max_examples=60, deadline=None)
+def test_enumeration_matches_bruteforce(tokens, gamma):
+    toks = np.array(tokens, dtype=np.int32)
+    rng = np.random.default_rng(7)
+    ws = rng.uniform(0.5, 3.0, size=len(toks)).astype(np.float32)
+    total = ws.sum()
+
+    got = {
+        tuple(sorted(v.tolist()))
+        for v in enumerate_entity_variants(toks, ws, gamma, max_variants=1024)
+    }
+    want = set()
+    for r in range(1, len(toks) + 1):
+        for comb in itertools.combinations(range(len(toks)), r):
+            if ws[list(comb)].sum() >= gamma * total - 1e-6:
+                want.add(tuple(sorted(int(toks[i]) for i in comb)))
+    assert got == want
+
+
+def test_variant_keys_match_window_hash():
+    d = build_dictionary([[3, 9, 5], [7, 2]], vocab_size=16)
+    k1, k2, eid = variant_keys(d, gamma=0.6)
+    assert len(k1) == len(eid) > 0
+    # hashing a window with the same token set reproduces the key
+    win = jnp.asarray([[5, 3, 9, 0]], dtype=jnp.int32)  # permuted, padded
+    w1, w2 = window_variant_key(win, win != 0, xp=jnp)
+    full_idx = [i for i in range(len(k1)) if eid[i] in (0, 1)]
+    assert int(np.asarray(w1)[0]) in k1.tolist()
+    pos = k1.tolist().index(int(np.asarray(w1)[0]))
+    assert int(np.asarray(w2)[0]) == int(k2[pos])
+
+
+def test_gamma_one_gives_only_full_set():
+    toks = np.array([4, 8, 15], dtype=np.int32)
+    ws = np.ones(3, dtype=np.float32)
+    vs = enumerate_entity_variants(toks, ws, gamma=1.0)
+    assert len(vs) == 1 and sorted(vs[0].tolist()) == [4, 8, 15]
