@@ -1,6 +1,9 @@
 """Benchmark aggregator: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [--only NAME]
+
+``--smoke`` runs a seconds-long subset (tiny shapes, fused-vs-unfused
+parity asserted) so CI catches benchmark drift without a full run.
 
 Sections:
     algorithms   §6 main table (plans × mention distributions)
@@ -43,7 +46,19 @@ SECTIONS = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="seconds-long CI subset: kernel pipeline parity + timing only",
+    )
     args = ap.parse_args()
+    if args.smoke and args.only:
+        ap.error("--smoke runs a fixed subset; it cannot be combined with --only")
+    if args.smoke:
+        t0 = time.time()
+        bench_kernels.main(smoke=True)
+        print(f"# [kernels --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        return
     failures = []
     for name, fn in SECTIONS:
         if args.only and name != args.only:

@@ -1,0 +1,41 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the
+top-level ``jax`` namespace, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` in the move. All repro code imports
+``shard_map`` from here and uses the *new* spelling (``check_vma``);
+on older jax the shim translates the kwarg and delegates to the
+experimental entry point.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # jax >= 0.6: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map
+
+    shard_map = _shard_map
+except ImportError:  # older jax: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    @functools.wraps(_exp_shard_map)
+    def shard_map(f, *args, check_vma: bool | None = None, **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _exp_shard_map(f, *args, **kwargs)
+
+
+def axis_size(name: str):
+    """Size of a named mesh axis from inside a shard_map/pmap body.
+
+    ``jax.lax.axis_size`` is a newer addition; older jax gets the same
+    value as a (constant-folded) ``psum(1)`` over the axis.
+    """
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+__all__ = ["shard_map", "axis_size"]

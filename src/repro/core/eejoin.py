@@ -197,10 +197,18 @@ class EEJoinOperator:
         cfg = self.config
         out: Matches | None = None
         for side in prepared.sides:
-            base, surv = engine.survival_mask(
-                doc_tokens, prepared.max_entity_len, side.flt, cfg.use_kernel
-            )
-            cands = engine.compact_candidates(base, surv, side.params.max_candidates)
+            if cfg.use_kernel:
+                # fused megakernel: one pass emits survival + (lsh) sigs
+                cands = engine.fused_filter_compact(
+                    doc_tokens, prepared.max_entity_len, side.flt, side.params
+                )
+            else:
+                base, surv = engine.survival_mask(
+                    doc_tokens, prepared.max_entity_len, side.flt, False
+                )
+                cands = engine.compact_candidates(
+                    base, surv, side.params.max_candidates
+                )
             if side.side.algo == ALGO_INDEX:
                 m: Matches | None = None
                 for part in side.index_parts:

@@ -110,9 +110,11 @@ def build_inverted_index(
     np.cumsum(counts, out=offsets[1:])
     P = max(1, int(counts.max()) if counts.size else 1)
     padded = np.full((V, P), -1, dtype=np.int32)
-    for t in np.unique(toks):
-        lo, hi = offsets[t], offsets[t + 1]
-        padded[t, : hi - lo] = ents[lo:hi]
+    if len(toks):
+        # vectorised CSR->padded scatter: rank of each posting within its
+        # token's list is its flat position minus the list start.
+        rank = np.arange(len(toks)) - offsets[toks.astype(np.int64)]
+        padded[toks, rank] = ents
     return InvertedIndex(offsets, ents, padded, P)
 
 
@@ -133,18 +135,18 @@ def build_variant_index(
     keys1 = np.zeros((n_buckets, cap), dtype=np.uint32)
     keys2 = np.zeros((n_buckets, cap), dtype=np.uint32)
     ents = np.full((n_buckets, cap), -1, dtype=np.int32)
-    fill = np.zeros((n_buckets,), dtype=np.int64)
     dropped = 0
-    for i in range(len(k1)):
-        b = int(bucket[i])
-        j = int(fill[b])
-        if j >= cap:
-            dropped += 1
-            continue
-        keys1[b, j] = k1[i]
-        keys2[b, j] = k2[i]
-        ents[b, j] = eid[i]
-        fill[b] = j + 1
+    if len(k1):
+        # vectorised bucket fill (see engine.build_sig_table): stable sort
+        # by bucket preserves insertion order; ranks >= cap are dropped.
+        order = np.argsort(bucket, kind="stable")
+        sb = bucket[order]
+        rank = np.arange(len(k1)) - np.searchsorted(sb, sb)
+        keep = rank < cap
+        dropped = int((~keep).sum())
+        keys1[sb[keep], rank[keep]] = k1[order][keep]
+        keys2[sb[keep], rank[keep]] = k2[order][keep]
+        ents[sb[keep], rank[keep]] = eid[order][keep]
     return VariantIndex(keys1, keys2, ents, n_buckets, cap, dropped)
 
 

@@ -33,15 +33,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import axis_size, shard_map
 
 from repro.core import hashing
 from repro.core.dictionary import PAD
-from repro.core.signatures import (
-    EntitySignatures,
-    num_window_signatures,
-    window_signatures,
-)
+from repro.core.signatures import EntitySignatures, num_window_signatures
 from repro.extraction import engine
 from repro.extraction.results import Matches, compact_matches, merge_matches
 from repro.extraction.verify import dedup_hits, verify_pairs
@@ -65,7 +62,7 @@ def worker_index(axis_names: tuple[str, ...]) -> jnp.ndarray:
     """Flat worker id across (possibly several) mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -94,8 +91,11 @@ def distributed_extract_index(
 
     def body(docs):
         docs = docs.reshape(dl, -1)
-        base, surv = engine.survival_mask(docs, max_len, side.flt, params.use_kernel)
-        cands = engine.compact_candidates(base, surv, params.max_candidates)
+        if params.use_kernel:
+            cands = engine.fused_filter_compact(docs, max_len, side.flt, params)
+        else:
+            base, surv = engine.survival_mask(docs, max_len, side.flt, False)
+            cands = engine.compact_candidates(base, surv, params.max_candidates)
         out = None
         for part in side.index_parts:
             m = engine.extract_index_part(cands, part, side.ddict, params)
@@ -172,18 +172,18 @@ def _build_table_fixed(esigs: EntitySignatures, n_buckets: int, cap: int, entity
     keys2 = np.zeros((n_buckets, cap), dtype=np.uint32)
     ents = np.full((n_buckets, cap), -1, dtype=np.int32)
     fill = np.zeros((n_buckets,), dtype=np.int64)
-    dropped = 0
-    for i in range(len(sig)):
-        b = int(bucket[i])
-        j = int(fill[b])
-        if j >= cap:
-            dropped += 1
-            continue
-        keys1[b, j] = sig[i]
-        keys2[b, j] = k2v[i]
-        ents[b, j] = esigs.entity_id[i]
-        fill[b] = j + 1
-    assert dropped == 0, "common table geometry must fit every shard"
+    if len(sig):
+        # vectorised fill (see engine.build_sig_table): stable sort by
+        # bucket, rank-in-bucket scatter, overflow checked in bulk.
+        order = np.argsort(bucket, kind="stable")
+        sb = bucket[order]
+        rank = np.arange(len(sig)) - np.searchsorted(sb, sb)
+        dropped = int((rank >= cap).sum())
+        assert dropped == 0, "common table geometry must fit every shard"
+        keys1[sb, rank] = sig[order]
+        keys2[sb, rank] = k2v[order]
+        ents[sb, rank] = esigs.entity_id[order]
+        np.add.at(fill, sb, 1)
     return keys1, keys2, ents, float(fill.max() / max(fill.mean(), 1e-9))
 
 
@@ -224,11 +224,15 @@ def distributed_extract_ssjoin(
             bucket_cap=table.bucket_cap,
             entity_offset=table.entity_offset,
         )
-        base, surv = engine.survival_mask(docs, max_len, side.flt, params.use_kernel)
-        cands = engine.compact_candidates(base, surv, params.max_candidates)
+        if params.use_kernel:
+            # fused megakernel: survival + (lsh) band sigs in one pass
+            cands = engine.fused_filter_compact(docs, max_len, side.flt, params)
+        else:
+            base, surv = engine.survival_mask(docs, max_len, side.flt, False)
+            cands = engine.compact_candidates(base, surv, params.max_candidates)
         toks, ok = cands["win_tokens"], cands["win_valid"]
         N = toks.shape[0]
-        sigs, smask = window_signatures(params.scheme, toks, toks != PAD, params.gamma, params.lsh)
+        sigs, smask = engine.window_sigs_for(cands, params)
         smask = smask & ok[:, None]
 
         # ---- dispatch: route each (candidate, signature) to its owner

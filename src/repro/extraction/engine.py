@@ -31,6 +31,7 @@ from repro.core.index import (
     query_variant,
 )
 from repro.core.signatures import (
+    SIG_LSH,
     SIG_VARIANT,
     EntitySignatures,
     LshParams,
@@ -39,7 +40,7 @@ from repro.core.signatures import (
     window_signatures,
 )
 from repro.core.variants import VARIANT_SEEDS, window_variant_key
-from repro.extraction.results import Matches, compact_matches
+from repro.extraction.results import Matches, compact_matches, select_nonzero
 from repro.extraction.substrings import window_base
 from repro.extraction.verify import dedup_hits, verify_pairs
 
@@ -113,6 +114,26 @@ def survival_mask(doc_tokens, max_len: int, flt: tuple | None, use_kernel: bool 
     return base, valid & surv
 
 
+def _compact_bit_indices(rows, max_candidates: int):
+    """rows [M, L] bool -> ascending flat set-bit indices [NC] (-1 pad).
+
+    Two-stage static-shape compaction: survivor density is low (the
+    whole point of the ISH filter), so a flat ``nonzero`` over M*L
+    elements is the pipeline bottleneck — selecting the (at most NC)
+    rows with any set bit first shrinks the second ``nonzero`` to NC*L
+    elements (~5x wall-clock on CPU at D128xT512xL8). Exact at any
+    density: every selected row holds >= 1 set bit, so NC rows always
+    cover the first NC set bits.
+    """
+    M, L = rows.shape
+    starts, _ = select_nonzero(rows.any(axis=-1), max_candidates)
+    sub = rows[jnp.maximum(starts, 0)] & (starts >= 0)[:, None]  # [NC, L]
+    sel, ok = select_nonzero(sub.reshape(-1), max_candidates)
+    safe = jnp.maximum(sel, 0)
+    idx = jnp.maximum(starts[safe // L], 0) * L + safe % L
+    return jnp.where(ok, idx, -1), ok
+
+
 def compact_candidates(base, survive, max_candidates: int):
     """Flatten surviving candidates into fixed-capacity buffers.
 
@@ -120,9 +141,8 @@ def compact_candidates(base, survive, max_candidates: int):
     n_survive [] and overflow [] counters.
     """
     D, T, L = base.shape
+    idx, ok = _compact_bit_indices(survive.reshape(-1, L), max_candidates)
     flat = survive.reshape(-1)
-    (idx,) = jnp.nonzero(flat, size=max_candidates, fill_value=-1)
-    ok = idx >= 0
     safe = jnp.maximum(idx, 0)
     d = safe // (T * L)
     rem = safe % (T * L)
@@ -141,6 +161,102 @@ def compact_candidates(base, survive, max_candidates: int):
         n_survive=n,
         overflow=jnp.maximum(n - max_candidates, 0).astype(jnp.int32),
     )
+
+
+def fused_filter_compact(
+    doc_tokens,
+    max_len: int,
+    flt: tuple | None,
+    params: ExtractParams,
+    sig_mode: str | None = None,
+) -> dict:
+    """use_kernel fast path: one-pass megakernel -> direct compaction.
+
+    Replaces ``survival_mask`` + ``compact_candidates`` (and, for the
+    LSH scheme, ``window_signatures``) with a single streaming
+    ``fused_probe`` kernel pass: the [D,T,L] int32 base and int8 mask
+    are never materialised — survival arrives as a packed [D,T] uint32
+    bitmap, candidate windows are gathered straight from the [D,T]
+    token array, and LSH band signatures come out of the kernel
+    (bit-identical to ``window_signatures``; padded slots carry the
+    all-invalid-window band constants). Returns the ``compact_candidates``
+    dict, plus ``sigs``/``sig_mask`` when the scheme is ``lsh``.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.fused_probe import SIG_MODE_LSH, SIG_MODE_NONE, empty_band_sigs
+
+    D, T = doc_tokens.shape
+    L = max_len
+    if L > 32:
+        # the packed bitmap holds one length per uint32 bit; longer
+        # windows fall back to the standalone window_filter kernel +
+        # dense compaction (still a single streaming probe pass)
+        base, surv = survival_mask(doc_tokens, max_len, flt, use_kernel=True)
+        return compact_candidates(base, surv, params.max_candidates)
+    if sig_mode is None:
+        # In-kernel band-sig emission computes minima for every (pos, len)
+        # window and stores a [D,T,L,B] tensor — profitable only when the
+        # compacted candidate stream covers the whole window grid (then
+        # the post-compaction re-gather would move the same bytes); in
+        # the filter's target low-density regime, post-compaction
+        # signatures over [N, L] windows are far less work.
+        dense = params.max_candidates >= D * T * L
+        sig_mode = (
+            SIG_MODE_LSH if (params.scheme == SIG_LSH and dense) else SIG_MODE_NONE
+        )
+    lsh = sig_mode == SIG_MODE_LSH
+    packed, kernel_sigs = kops.fused_probe(
+        doc_tokens, flt, max_len, sig_mode, params.lsh.bands, params.lsh.rows
+    )
+
+    # two-stage compaction straight off the packed bitmap: nonzero over
+    # the [D*T] word stream, then unpack only the selected words' bits —
+    # the [D,T,L] bool survival tensor is never materialised.
+    shifts = jnp.arange(L, dtype=jnp.uint32)
+    flat_words = packed.reshape(-1)
+    starts, _ = select_nonzero(flat_words != 0, params.max_candidates)
+    words = flat_words[jnp.maximum(starts, 0)] * (starts >= 0)
+    sub = ((words[:, None] >> shifts[None, :]) & jnp.uint32(1)).astype(bool)
+    sel, ok = select_nonzero(sub.reshape(-1), params.max_candidates)
+    ssafe = jnp.maximum(sel, 0)
+    safe = jnp.maximum(starts[ssafe // L], 0) * L + ssafe % L
+    d = safe // (T * L)
+    rem = safe % (T * L)
+    p = rem // L
+    l = rem % L  # length-1
+
+    # gather windows straight from the doc rows (no [D,T,L] base)
+    cols = p[:, None] + jnp.arange(L)[None, :]  # [N, L]
+    toks = doc_tokens[d[:, None], jnp.minimum(cols, T - 1)]
+    lens_mask = (jnp.arange(L)[None, :] <= l[:, None]) & (cols < T)
+    toks = jnp.where(lens_mask & ok[:, None], toks, PAD)
+    n = jax.lax.population_count(packed).sum().astype(jnp.int32)
+    cands = dict(
+        win_tokens=toks.astype(jnp.int32),
+        win_valid=ok,
+        doc=jnp.where(ok, d, -1).astype(jnp.int32),
+        pos=jnp.where(ok, p, -1).astype(jnp.int32),
+        length=jnp.where(ok, l + 1, -1).astype(jnp.int32),
+        n_survive=n,
+        overflow=jnp.maximum(n - params.max_candidates, 0).astype(jnp.int32),
+    )
+    if lsh:
+        gathered = kernel_sigs[d, p, l]  # [N, B]
+        empty = jnp.asarray(empty_band_sigs(params.lsh.bands, params.lsh.rows))
+        cands["sigs"] = jnp.where(ok[:, None], gathered, empty[None, :])
+        cands["sig_mask"] = jnp.broadcast_to(ok[:, None], gathered.shape)
+    return cands
+
+
+def window_sigs_for(cands: dict, params: ExtractParams):
+    """Window signatures for compacted candidates: kernel-emitted when
+    the fused path provided them (``cands["sigs"]``), else computed from
+    the gathered windows. Returns (sigs [N, S], mask [N, S]); callers
+    still AND the mask with ``cands["win_valid"]``."""
+    if "sigs" in cands:
+        return cands["sigs"], cands["sig_mask"]
+    toks = cands["win_tokens"]
+    return window_signatures(params.scheme, toks, toks != PAD, params.gamma, params.lsh)
 
 
 def _emit(cands, hits, scores, ent_global, params: ExtractParams) -> Matches:
@@ -305,14 +421,17 @@ def build_sig_table(
     keys1 = np.zeros((n_buckets, cap), dtype=np.uint32)
     keys2 = np.zeros((n_buckets, cap), dtype=np.uint32)
     ents = np.full((n_buckets, cap), -1, dtype=np.int32)
-    fill = np.zeros((n_buckets,), dtype=np.int64)
-    for i in range(len(sig)):
-        b = int(bucket[i])
-        j = int(fill[b])
-        keys1[b, j] = sig[i]
-        keys2[b, j] = k2[i]
-        ents[b, j] = esigs.entity_id[i]
-        fill[b] = j + 1
+    if len(sig):
+        # vectorised bucket fill: stable argsort groups rows by bucket
+        # (preserving insertion order within each), the rank-in-bucket is
+        # position minus the bucket's first position, and one fancy
+        # scatter lands every row — no Python-level loop over signatures.
+        order = np.argsort(bucket, kind="stable")
+        sb = bucket[order]
+        rank = np.arange(len(sig)) - np.searchsorted(sb, sb)
+        keys1[sb, rank] = sig[order]
+        keys2[sb, rank] = k2[order]
+        ents[sb, rank] = esigs.entity_id[order]
     mean = max(counts.mean(), 1e-9)
     return SigTable(
         keys1=jnp.asarray(keys1),
@@ -349,9 +468,7 @@ def extract_ssjoin_local(
     device between ``window_signatures`` and ``probe_sig_table``.
     """
     toks, ok = cands["win_tokens"], cands["win_valid"]
-    sigs, mask = window_signatures(
-        params.scheme, toks, toks != PAD, params.gamma, params.lsh
-    )
+    sigs, mask = window_sigs_for(cands, params)
     ents = probe_sig_table(table, sigs, mask & ok[:, None])
     gamma = 0.0 if params.scheme == SIG_VARIANT else params.gamma
     hits, scores = verify_pairs(

@@ -1,0 +1,39 @@
+"""Shared jnp hash helpers for Pallas kernel bodies.
+
+One copy of the murmur3-finaliser family for every kernel module, with
+the constants imported from ``core.hashing`` — bit-parity with the
+host-side builds is a hard correctness contract, so there is exactly
+one in-kernel implementation to keep in sync. ``ref.py`` keeps its own
+independent copy on purpose: it is the oracle the kernels are tested
+against and must not share the implementation under test.
+
+Plain jnp ops, usable inside Pallas kernel bodies and under jit alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.hashing import _C1, _C2, _GOLDEN
+
+
+def mix(x):
+    """murmur3 finaliser over uint32 (bit-identical to hashing._mix)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_C1)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(_C2)
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_seeded(x, seed: int):
+    """hashing.hash_u32 for kernel bodies (seed folded in host-side)."""
+    off = np.uint32((_GOLDEN * (seed + 1)) & 0xFFFFFFFF)
+    return mix(x.astype(jnp.uint32) + off)
+
+
+def combine(h, g):
+    """Order-dependent combine (bit-identical to hashing.combine)."""
+    return mix(h ^ (g + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2)))

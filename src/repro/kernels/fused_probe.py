@@ -1,0 +1,278 @@
+"""Pallas TPU megakernel: fused ISH-filter probe + window signatures.
+
+This fuses the whole map-side candidate front end — validity, Bloom
+survival, and (for the LSH scheme) per-window MinHash band signatures —
+into ONE ``pallas_call`` that streams each ``[Bd, T]`` document tile
+HBM->VMEM exactly once. The unfused pipeline runs three jitted passes
+(``window_base`` -> ``token_in_filter`` -> ``window_signatures``) and
+round-trips the ``L``-times-expanded ``[D, T, L]`` base / survival
+tensors through HBM between them; here every per-window quantity is a
+*running* recurrence over one in-register token stream:
+
+    real[t]          = tok[t] != PAD
+    hit[t]           = all k Bloom probes of tok[t] set   (bitmap VMEM-resident)
+    valid[t, l]      = AND(real[t .. t+l])                (running-and)
+    survive[t, l]    = valid[t, l] & OR(hit[t .. t+l])    (running-or)
+    rmin_i[t, l]     = MIN(h_i(tok[t .. t+l]))            (running-min, i < B*R)
+    sig[t, l, b]     = combine(rmin_{bR} .. rmin_{bR+R-1}, b+1)
+
+The survival mask is emitted *packed*: bit ``l`` of ``packed[d, t]``
+(uint32, so L <= 32) is ``survive[d, t, l]`` — a 4 B/token store instead
+of the unfused path's L B/token int8 mask and 4L B/token int32 base.
+Band signatures are bit-identical to ``core.signatures.window_signatures``
+for the ``lsh`` scheme: MinHash minima are duplicate-insensitive, so the
+first-occurrence masking the jnp path applies never changes a row
+minimum, and the seeds / murmur3 finaliser / combine below match
+``core.hashing`` exactly.
+
+HBM-traffic accounting (per document token; L = max_len, K = num_hashes,
+B = bands; see ``hbm_bytes_unfused`` / ``hbm_bytes_fused``):
+
+    unfused  read 4 (docs) + write 4L (base) + read 4L (filter probe)
+             + write L (int8 mask) + read L (compaction scan)
+    fused    read 4 (docs) + write 4 (packed bitmap)
+             [+ write 4LB (band sigs, lsh mode only)]
+
+For the filter stages alone that is a ~(10L+4)/8 ≈ 10x traffic cut at
+L = 8; the kernel additionally hashes each token K times instead of the
+unfused path's K*L times (the [D,T,L] base repeats every token L times).
+Downstream, the engine's fused compaction gathers candidate windows
+straight from the [D, T] token array — ``window_base`` is never
+materialised (see ``extraction.engine.fused_filter_compact``).
+
+Tiling: one full document row per grid row ([Bd, T] tiles) so windows
+never straddle a tile edge; the Bloom bitmap block is grid-invariant
+(loaded once, reused across steps). Validated in interpret mode on CPU;
+on TPU the bitmap gather uses dynamic VMEM indexing (minor-dim gather,
+Mosaic v4+).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.filter import _BLOOM_SEED_BASE  # single source of truth
+from repro.core.signatures import _LSH_SEED_BASE
+from repro.kernels._hashing import combine as _combine
+from repro.kernels._hashing import hash_seeded as _hash
+
+_MAX_U32 = 0xFFFFFFFF
+
+DEFAULT_BD = 8
+
+SIG_MODE_NONE = "none"
+SIG_MODE_LSH = "lsh"
+
+
+def empty_band_sigs(bands: int, rows: int) -> np.ndarray:
+    """[bands] uint32: the band signatures of an all-invalid window.
+
+    Matches ``signatures._minhash_np`` on a row with no valid tokens
+    (every row-minimum is 0xFFFFFFFF). Used by the engine to pad
+    non-surviving candidate slots so the fused signature tensor is
+    bit-identical to ``window_signatures`` on PAD-only windows too.
+    """
+    from repro.core import hashing
+
+    row = np.full((1,), _MAX_U32, dtype=np.uint32)
+    out = []
+    for b in range(bands):
+        band = row
+        for _ in range(1, rows):
+            band = hashing.combine(band, row, xp=np)
+        band = hashing.combine(band, np.full((1,), b + 1, dtype=np.uint32), xp=np)
+        out.append(band[0])
+    return np.array(out, dtype=np.uint32)
+
+
+def _kernel(
+    doc_ref,
+    bits_ref,
+    packed_ref,
+    *sig_refs,
+    num_bits: int,
+    num_hashes: int,
+    max_len: int,
+    bands: int,
+    rows: int,
+    use_filter: bool,
+    sig_mode: str,
+):
+    docs = doc_ref[...]  # [Bd, T] int32
+    Bd, T = docs.shape
+    real = docs != 0  # PAD == 0
+
+    if use_filter:
+        bits = bits_ref[...]  # [num_bits // 32] uint32 (VMEM-resident)
+        hit = jnp.ones(docs.shape, bool)
+        for k in range(num_hashes):
+            h = _hash(docs, _BLOOM_SEED_BASE + k)
+            pos = h % jnp.uint32(num_bits)
+            word = bits[(pos // 32).astype(jnp.int32)]  # VMEM gather
+            bit = (word >> (pos % 32)) & jnp.uint32(1)
+            hit = hit & (bit == 1)
+    else:
+        hit = real  # survival degenerates to validity
+
+    lsh = sig_mode == SIG_MODE_LSH
+    if lsh:
+        sig_ref = sig_refs[0]
+        # per-token row hashes, invalid -> MAX so they never win a min
+        hv = [
+            jnp.where(real, _hash(docs, _LSH_SEED_BASE + i), jnp.uint32(_MAX_U32))
+            for i in range(bands * rows)
+        ]
+        rmin = [jnp.full(docs.shape, _MAX_U32, dtype=jnp.uint32) for _ in hv]
+
+    vand = jnp.ones(docs.shape, bool)
+    vor = jnp.zeros(docs.shape, bool)
+    pack = jnp.zeros(docs.shape, dtype=jnp.uint32)
+    sh_real, sh_hit = real, hit
+    sh_hv = list(hv) if lsh else []
+    zero_row = jnp.zeros((Bd, 1), bool)
+    max_row = jnp.full((Bd, 1), _MAX_U32, dtype=jnp.uint32)
+    for l in range(max_len):
+        vand = vand & sh_real
+        vor = vor | sh_hit
+        surv = vand & vor
+        pack = pack | (surv.astype(jnp.uint32) << jnp.uint32(l))
+        if lsh:
+            for i in range(bands * rows):
+                rmin[i] = jnp.minimum(rmin[i], sh_hv[i])
+            for b in range(bands):
+                band = rmin[b * rows]
+                for r in range(1, rows):
+                    band = _combine(band, rmin[b * rows + r])
+                band = _combine(band, jnp.full_like(band, jnp.uint32(b + 1)))
+                sig_ref[:, :, l, b] = band
+        if l + 1 < max_len:
+            sh_real = jnp.concatenate([sh_real[:, 1:], zero_row], axis=1)
+            sh_hit = jnp.concatenate([sh_hit[:, 1:], zero_row], axis=1)
+            if lsh:
+                sh_hv = [
+                    jnp.concatenate([v[:, 1:], max_row], axis=1) for v in sh_hv
+                ]
+    packed_ref[...] = pack
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_bits",
+        "num_hashes",
+        "max_len",
+        "sig_mode",
+        "bands",
+        "rows",
+        "use_filter",
+        "bd",
+        "interpret",
+    ),
+)
+def fused_probe_pallas(
+    doc_tokens,  # [D, T] i32
+    bits,  # [num_bits // 32] uint32 (ignored when use_filter=False)
+    num_bits: int,
+    num_hashes: int,
+    max_len: int,
+    sig_mode: str = SIG_MODE_NONE,
+    bands: int = 4,
+    rows: int = 2,
+    use_filter: bool = True,
+    bd: int = DEFAULT_BD,
+    interpret: bool = True,
+):
+    """One-pass filter+signature probe.
+
+    Returns ``(packed, sigs)``: ``packed`` [D, T] uint32 with bit ``l``
+    = survive(pos, len=l+1) (validity AND Bloom survival; validity only
+    when ``use_filter=False``); ``sigs`` is [D, T, max_len, bands]
+    uint32 MinHash band signatures when ``sig_mode == "lsh"``, else
+    ``None``.
+    """
+    assert max_len <= 32, "packed survival bitmap holds at most 32 lengths"
+    D, T = doc_tokens.shape
+    bd = min(bd, D)
+    Dp = -(-D // bd) * bd
+    if Dp != D:
+        doc_tokens = jnp.pad(doc_tokens, ((0, Dp - D), (0, 0)))
+
+    out_shape = [jax.ShapeDtypeStruct((Dp, T), jnp.uint32)]
+    out_specs = [pl.BlockSpec((bd, T), lambda i: (i, 0))]
+    if sig_mode == SIG_MODE_LSH:
+        out_shape.append(
+            jax.ShapeDtypeStruct((Dp, T, max_len, bands), jnp.uint32)
+        )
+        out_specs.append(
+            pl.BlockSpec((bd, T, max_len, bands), lambda i: (i, 0, 0, 0))
+        )
+    elif sig_mode != SIG_MODE_NONE:
+        raise ValueError(f"unknown sig_mode {sig_mode!r}")
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            num_bits=num_bits,
+            num_hashes=num_hashes,
+            max_len=max_len,
+            bands=bands,
+            rows=rows,
+            use_filter=use_filter,
+            sig_mode=sig_mode,
+        ),
+        grid=(Dp // bd,),
+        in_specs=[
+            pl.BlockSpec((bd, T), lambda i: (i, 0)),
+            pl.BlockSpec((bits.shape[0],), lambda i: (0,)),  # grid-invariant
+        ],
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        interpret=interpret,
+    )(doc_tokens, bits)
+    packed = outs[0][:D]
+    sigs = outs[1][:D] if sig_mode == SIG_MODE_LSH else None
+    return packed, sigs
+
+
+# --------------------------------------------------------------------------
+# HBM-traffic accounting (the analytic model the benchmark reports)
+# --------------------------------------------------------------------------
+
+
+def hbm_bytes_unfused(D: int, T: int, max_len: int, max_candidates: int,
+                      sig_width: int) -> int:
+    """Bytes moved by the unfused survival_mask->compact->signatures
+    pipeline: docs read, [D,T,L] int32 base write + probe re-read,
+    [D,T,L] survival write + compaction re-read, compacted [N,L] window
+    gather + [N,S] signature store."""
+    tokens = D * T
+    base = tokens * max_len * 4
+    mask = tokens * max_len  # int8
+    gather = max_candidates * max_len * 4
+    sig = max_candidates * sig_width * 4
+    return tokens * 4 + 2 * base + 2 * mask + 2 * gather + sig
+
+
+def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
+                    bands: int, lsh: bool, sig_width: int = 0) -> int:
+    """Bytes moved by the fused megakernel pipeline: docs read once,
+    packed [D,T] uint32 bitmap write + compaction re-read, compacted
+    [N,L] window gather straight from docs, and either the in-kernel
+    [D,T,L,B] signature store + [N,B] gather (``lsh=True``) or the same
+    post-compaction [N, sig_width] signature store the unfused pipeline
+    pays (``lsh=False``; pass the scheme's ``sig_width`` so the two
+    models stay symmetric)."""
+    tokens = D * T
+    packed = tokens * 4
+    gather = max_candidates * max_len * 4
+    total = tokens * 4 + 2 * packed + 2 * gather
+    if lsh:
+        total += tokens * max_len * bands * 4 + max_candidates * bands * 4
+    else:
+        total += max_candidates * sig_width * 4
+    return total

@@ -26,30 +26,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_C1 = 0x85EBCA6B
-_C2 = 0xC2B2AE35
-_GOLDEN = 0x9E3779B9
-_LSH_SEED_BASE = 7000
+from repro.core.signatures import _LSH_SEED_BASE
+from repro.kernels._hashing import combine as _combine
+from repro.kernels._hashing import hash_seeded as _hash
 
 DEFAULT_BN = 256
-
-
-def _mix(x):
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(_C1)
-    x = x ^ (x >> 13)
-    x = x * jnp.uint32(_C2)
-    x = x ^ (x >> 16)
-    return x
-
-
-def _hash(x, seed: int):
-    off = np.uint32((_GOLDEN * (seed + 1)) & 0xFFFFFFFF)
-    return _mix(x.astype(jnp.uint32) + off)
-
-
-def _combine(h, g):
-    return _mix(h ^ (g + jnp.uint32(_GOLDEN) + (h << 6) + (h >> 2)))
 
 
 def _kernel(tok_ref, valid_ref, out_ref, *, bands: int, rows: int):

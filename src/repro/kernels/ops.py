@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_probe as _fp
 from repro.kernels import jaccard_verify as _jv
 from repro.kernels import minhash as _mh
 from repro.kernels import window_filter as _wf
@@ -70,5 +71,39 @@ def window_filter(doc_tokens, bits, num_bits: int, num_hashes: int, max_len: int
         num_bits=num_bits,
         num_hashes=num_hashes,
         max_len=max_len,
+        interpret=_interpret(),
+    )
+
+
+def fused_probe(
+    doc_tokens,
+    flt: tuple | None,
+    max_len: int,
+    sig_mode: str = _fp.SIG_MODE_NONE,
+    bands: int = 4,
+    rows: int = 2,
+):
+    """One-pass filter+signature megakernel (the use_kernel fast path).
+
+    ``flt`` is (bits, num_bits, num_hashes) or None (validity only).
+    Returns (packed [D, T] uint32 survival bitmap, sigs or None) — see
+    ``fused_probe.fused_probe_pallas``.
+    """
+    if flt is None:
+        bits = jnp.zeros((8,), dtype=jnp.uint32)
+        num_bits, num_hashes, use_filter = 256, 1, False
+    else:
+        bits, num_bits, num_hashes = flt
+        use_filter = True
+    return _fp.fused_probe_pallas(
+        doc_tokens,
+        bits,
+        num_bits=num_bits,
+        num_hashes=num_hashes,
+        max_len=max_len,
+        sig_mode=sig_mode,
+        bands=bands,
+        rows=rows,
+        use_filter=use_filter,
         interpret=_interpret(),
     )

@@ -18,6 +18,12 @@ kernel is validated in interpret mode on CPU per the assignment).
 Tiling: one full document row per grid row ([Bd, T] tiles) so windows
 never straddle a tile edge; the bitmap block is grid-invariant (loaded
 once, reused across steps).
+
+NOTE: the production fast path is ``fused_probe``, which subsumes this
+kernel (packed uint32 survival bitmap instead of the [D, T, L] int8
+mask — L x less output traffic — plus optional in-pass signature
+emission). This standalone version is kept as the minimal reference
+fusion and for the ops/ref parity sweeps.
 """
 from __future__ import annotations
 
@@ -29,26 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_C1 = 0x85EBCA6B
-_C2 = 0xC2B2AE35
-_GOLDEN = 0x9E3779B9
-_BLOOM_SEED_BASE = 9100
+from repro.core.filter import _BLOOM_SEED_BASE
+from repro.kernels._hashing import hash_seeded as _hash
 
 DEFAULT_BD = 8
-
-
-def _mix(x):
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(_C1)
-    x = x ^ (x >> 13)
-    x = x * jnp.uint32(_C2)
-    x = x ^ (x >> 16)
-    return x
-
-
-def _hash(x, seed: int):
-    off = np.uint32((_GOLDEN * (seed + 1)) & 0xFFFFFFFF)
-    return _mix(x.astype(jnp.uint32) + off)
 
 
 def _kernel(doc_ref, bits_ref, out_ref, *, num_bits: int, num_hashes: int, max_len: int):

@@ -9,26 +9,29 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across versions: ``axis_types`` (and
+    ``jax.sharding.AxisType``) only exist on newer jax."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_cpu_mesh(data: int = 1, model: int = 1):
     """Tiny mesh for CPU tests/examples."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def make_extraction_mesh(n_workers: int | None = None):
     """Flat 1-axis mesh for the EE-Join extraction job."""
     n = n_workers or len(jax.devices())
-    return jax.make_mesh(
-        (n,), ("workers",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    return _make_mesh((n,), ("workers",))

@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 
 def quantize(g, axis=None):
     """fp -> (int8, scale). Symmetric per-tensor scaling."""
@@ -55,7 +57,7 @@ def compressed_psum(grads, residual, axis_name: str):
     int8 + local fp32 reduction — the wire bytes are the int8 payload.
     Returns (mean-reduced grads, new residual).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(g, r):
         corrected = g.astype(jnp.float32) + r

@@ -1,6 +1,7 @@
 """Cost model: Lemma 1 monotonicity + §5.2 search optimality (property)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,0 +1,211 @@
+"""Fused filter→signature megakernel vs the unfused jnp pipeline.
+
+Bit-parity contracts (interpret mode, CPU): the packed survival bitmap
+must unpack to exactly ``survival_mask(..., use_kernel=False)``, the
+compacted candidate buffers must equal ``compact_candidates`` field for
+field, and in-kernel LSH band signatures must be bit-identical to
+``core.signatures.window_signatures`` — across PAD-heavy, zero-survivor
+and overflow regimes.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.dictionary import PAD
+from repro.core.signatures import LshParams, window_signatures
+from repro.extraction import engine as E
+from repro.extraction.results import select_nonzero
+from repro.kernels import ops as kops
+
+GAMMA = 0.8
+
+
+def _docs(rng, D, T, vocab=2048, pad_frac=0.1):
+    d = rng.integers(1, vocab, size=(D, T)).astype(np.int32)
+    d[rng.random((D, T)) < pad_frac] = PAD
+    return jnp.asarray(d)
+
+
+def _filter(rng, num_bits=1 << 14, density=0.05):
+    w = (rng.random((num_bits // 32, 32)) < density).astype(np.uint32)
+    bits = (w << np.arange(32, dtype=np.uint32)).sum(axis=1).astype(np.uint32)
+    return (jnp.asarray(bits), num_bits, 3)
+
+
+def _unfused(docs, L, flt, max_candidates):
+    base, surv = E.survival_mask(docs, L, flt, use_kernel=False)
+    return surv, E.compact_candidates(base, surv, max_candidates)
+
+
+def _assert_cands_equal(got, want):
+    for k in ("win_tokens", "win_valid", "doc", "pos", "length",
+              "n_survive", "overflow"):
+        np.testing.assert_array_equal(
+            np.asarray(got[k]), np.asarray(want[k]), err_msg=k
+        )
+
+
+# ---------------------------------------------------------- survival
+@pytest.mark.parametrize("D,T,L", [(3, 32, 4), (16, 128, 8), (9, 64, 5)])
+@pytest.mark.parametrize("pad_frac", [0.0, 0.5])  # incl. PAD-heavy
+def test_packed_survival_matches_unfused(D, T, L, pad_frac):
+    rng = np.random.default_rng(D * T + int(pad_frac * 10))
+    docs = _docs(rng, D, T, pad_frac=pad_frac)
+    flt = _filter(rng)
+    want, _ = _unfused(docs, L, flt, 256)
+    packed, _ = kops.fused_probe(docs, flt, L)
+    got = ((packed[..., None] >> jnp.arange(L, dtype=jnp.uint32)) & 1).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_survival_no_filter_is_validity():
+    rng = np.random.default_rng(0)
+    docs = _docs(rng, 6, 48, pad_frac=0.3)
+    _, want = E.survival_mask(docs, 5, None)
+    packed, _ = kops.fused_probe(docs, None, 5)
+    got = ((packed[..., None] >> jnp.arange(5, dtype=jnp.uint32)) & 1).astype(bool)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------- compaction
+@pytest.mark.parametrize("pad_frac", [0.05, 0.6])
+def test_fused_compact_matches_unfused(pad_frac):
+    rng = np.random.default_rng(int(pad_frac * 100))
+    docs = _docs(rng, 12, 96, pad_frac=pad_frac)
+    flt = _filter(rng)
+    params = E.ExtractParams(gamma=GAMMA, scheme="prefix", max_candidates=1024,
+                             use_kernel=True)
+    _, want = _unfused(docs, 7, flt, 1024)
+    got = E.fused_filter_compact(docs, 7, flt, params)
+    _assert_cands_equal(got, want)
+
+
+def test_fused_compact_zero_survivors():
+    rng = np.random.default_rng(1)
+    docs = _docs(rng, 4, 64, pad_frac=0.0)
+    # empty Bloom filter: nothing probes in, nothing survives
+    flt = (jnp.zeros(((1 << 12) // 32,), jnp.uint32), 1 << 12, 3)
+    params = E.ExtractParams(gamma=GAMMA, scheme="prefix", max_candidates=128,
+                             use_kernel=True)
+    _, want = _unfused(docs, 6, flt, 128)
+    got = E.fused_filter_compact(docs, 6, flt, params)
+    _assert_cands_equal(got, want)
+    assert int(got["n_survive"]) == 0
+    assert not bool(np.asarray(got["win_valid"]).any())
+
+
+def test_fused_compact_overflow_surfaced():
+    rng = np.random.default_rng(2)
+    docs = _docs(rng, 8, 64, pad_frac=0.0)
+    # saturated filter: every window survives -> tiny capacity overflows
+    flt = (jnp.full(((1 << 12) // 32,), 0xFFFFFFFF, jnp.uint32), 1 << 12, 3)
+    params = E.ExtractParams(gamma=GAMMA, scheme="prefix", max_candidates=64,
+                             use_kernel=True)
+    _, want = _unfused(docs, 6, flt, 64)
+    got = E.fused_filter_compact(docs, 6, flt, params)
+    _assert_cands_equal(got, want)
+    assert int(got["overflow"]) > 0
+    assert int(got["n_survive"]) > 64
+
+
+# ---------------------------------------------------------- signatures
+@pytest.mark.parametrize("bands,rows", [(4, 2), (8, 1), (2, 4)])
+@pytest.mark.parametrize("pad_frac", [0.0, 0.5])
+def test_fused_lsh_sigs_bit_identical(bands, rows, pad_frac):
+    rng = np.random.default_rng(bands * 10 + rows)
+    docs = _docs(rng, 10, 80, pad_frac=pad_frac)
+    flt = _filter(rng)
+    lsh = LshParams(bands=bands, rows=rows)
+    params = E.ExtractParams(gamma=GAMMA, scheme="lsh", max_candidates=512,
+                             lsh=lsh, use_kernel=True)
+    got = E.fused_filter_compact(docs, 6, flt, params, sig_mode="lsh")
+    _, ref_c = _unfused(docs, 6, flt, 512)
+    want_sig, want_mask = window_signatures(
+        "lsh", ref_c["win_tokens"], ref_c["win_tokens"] != PAD, GAMMA, lsh
+    )
+    np.testing.assert_array_equal(np.asarray(got["sigs"]), np.asarray(want_sig))
+    np.testing.assert_array_equal(np.asarray(got["sig_mask"]), np.asarray(want_mask))
+
+
+def test_fused_sig_mode_density_heuristic():
+    rng = np.random.default_rng(3)
+    docs = _docs(rng, 4, 32)
+    flt = _filter(rng)
+    sparse = E.ExtractParams(gamma=GAMMA, scheme="lsh", max_candidates=16,
+                             use_kernel=True)
+    dense = E.ExtractParams(gamma=GAMMA, scheme="lsh", max_candidates=4096,
+                            use_kernel=True)
+    assert "sigs" not in E.fused_filter_compact(docs, 4, flt, sparse)
+    assert "sigs" in E.fused_filter_compact(docs, 4, flt, dense)
+
+
+# ---------------------------------------------------------- end-to-end
+@pytest.mark.parametrize("scheme", ["word", "prefix", "lsh", "variant"])
+def test_fused_extraction_equals_unfused(small_corpus, scheme):
+    from repro.core.filter import build_ish_filter
+    from repro.core.signatures import entity_signatures
+
+    c = small_corpus
+    d = c.dictionary
+    flt = build_ish_filter(d, GAMMA)
+    fltt = (jnp.asarray(flt.bits), flt.num_bits, flt.num_hashes)
+    docs = jnp.asarray(c.doc_tokens)
+    ddict = E.DeviceDictionary.from_host(d)
+    table = E.build_sig_table(entity_signatures(scheme, d, GAMMA))
+    outs = {}
+    for use_kernel in (False, True):
+        params = E.ExtractParams(
+            gamma=GAMMA, scheme=scheme, max_candidates=4096,
+            result_capacity=8192, use_kernel=use_kernel,
+        )
+        if use_kernel:
+            cands = E.fused_filter_compact(docs, d.max_len, fltt, params)
+        else:
+            _, cands = _unfused(docs, d.max_len, fltt, 4096)
+        outs[use_kernel] = E.extract_ssjoin_local(cands, table, ddict, params).to_set()
+    assert outs[True] == outs[False]
+
+
+# ---------------------------------------------------------- selection
+@pytest.mark.parametrize("n,density", [(100, 0.0), (1000, 0.01), (5000, 0.5), (333, 1.0)])
+@pytest.mark.parametrize("capacity", [1, 64, 4096])
+def test_select_nonzero_matches_jnp_nonzero(n, density, capacity):
+    rng = np.random.default_rng(n + capacity)
+    mask = jnp.asarray(rng.random(n) < density)
+    got, ok = select_nonzero(mask, capacity)
+    (want,) = jnp.nonzero(mask, size=capacity, fill_value=-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(ok), np.asarray(want) >= 0)
+
+
+def test_build_sig_table_vectorised_fill_matches_loop():
+    """The argsort-over-buckets scatter must place rows exactly where the
+    original insertion-order Python loop did."""
+    from repro.core import hashing
+    from repro.core.signatures import EntitySignatures
+
+    rng = np.random.default_rng(4)
+    n = 500
+    esigs = EntitySignatures(
+        sig=rng.integers(0, 2**32, size=n, dtype=np.uint32),
+        entity_id=rng.integers(0, 100, size=n).astype(np.int32),
+    )
+    t = E.build_sig_table(esigs)
+    # reference loop fill over the same geometry
+    sig = esigs.sig.astype(np.uint32)
+    k2 = hashing.hash_u32(sig, seed=E._SIGKEY_SEED, xp=np)
+    bucket = np.asarray(E._bucket_of(sig, t.n_buckets, xp=np)).astype(np.int64)
+    keys1 = np.zeros((t.n_buckets, t.bucket_cap), dtype=np.uint32)
+    keys2 = np.zeros((t.n_buckets, t.bucket_cap), dtype=np.uint32)
+    ents = np.full((t.n_buckets, t.bucket_cap), -1, dtype=np.int32)
+    fill = np.zeros((t.n_buckets,), dtype=np.int64)
+    for i in range(n):
+        b = bucket[i]
+        keys1[b, fill[b]] = sig[i]
+        keys2[b, fill[b]] = k2[i]
+        ents[b, fill[b]] = esigs.entity_id[i]
+        fill[b] += 1
+    np.testing.assert_array_equal(np.asarray(t.keys1), keys1)
+    np.testing.assert_array_equal(np.asarray(t.keys2), keys2)
+    np.testing.assert_array_equal(np.asarray(t.ents), ents)

@@ -1,5 +1,7 @@
 """Hash parity (numpy vs jnp) and set-hash properties."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

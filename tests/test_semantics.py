@@ -1,6 +1,7 @@
 """Similarity semantics: paper examples, parity, predicate relations."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,5 +1,7 @@
 """Signature-scheme completeness contracts (§3.3)."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
