@@ -85,6 +85,78 @@ def run_fused(smoke: bool = False) -> list[dict]:
     return rows
 
 
+def run_sharded(smoke: bool = False) -> list[dict]:
+    """Sharded streaming driver + in-kernel compaction epilogue.
+
+    Two comparisons per document scale, parity asserted field-for-field
+    before any timing (CI fails on drift):
+
+    * ``compact`` rows: the fused single-call pipeline with the
+      in-kernel compaction epilogue vs the legacy XLA bitmap compaction
+      (``kernel_compact=False``) — the "last full-bitmap pass" the
+      epilogue removes, with the modeled HBM bytes for both.
+    * ``driver`` rows: the sharded streaming driver (shards + double-
+      buffered tile stream + lane merge) vs the unsharded fused call.
+    """
+    from repro.extraction import engine as E
+    from repro.extraction import sharded as SH
+
+    rows = []
+    rng = np.random.default_rng(11)
+    L, NC = 8, 4096
+    w = (rng.random(((1 << 18) // 32, 32)) < 0.05).astype(np.uint32)
+    bits = (w << np.arange(32, dtype=np.uint32)).sum(axis=1).astype(np.uint32)
+    flt = (jnp.asarray(bits), 1 << 18, 3)
+    scales = (
+        ((16, 128, 4, 2),)
+        if smoke
+        else ((64, 256, 16, 8), (128, 512, 32, 8), (256, 512, 32, 16))
+    )
+    for D, T, shard_docs, tile_docs in scales:
+        docs = jnp.asarray(rng.integers(1, 65536, size=(D, T)), jnp.int32)
+        epi = E.ExtractParams(gamma=0.8, scheme="prefix", max_candidates=NC,
+                              use_kernel=True)
+        xla = E.ExtractParams(gamma=0.8, scheme="prefix", max_candidates=NC,
+                              use_kernel=True, kernel_compact=False)
+
+        f_epi = jax.jit(lambda d: E.fused_filter_compact(d, L, flt, epi))
+        f_xla = jax.jit(lambda d: E.fused_filter_compact(d, L, flt, xla))
+        f_drv = lambda d: SH.sharded_filter_compact(
+            d, L, flt, epi, shard_docs=shard_docs, tile_docs=tile_docs
+        )
+        c_epi, c_xla, c_drv = f_epi(docs), f_xla(docs), f_drv(docs)
+        for name, c in (("xla-compact", c_xla), ("sharded-driver", c_drv)):
+            for k in ("win_tokens", "doc", "pos", "length", "n_survive"):
+                assert (np.asarray(c_epi[k]) == np.asarray(c[k])).all(), (
+                    f"parity drift: {name}/{k}"
+                )
+        t_epi, t_xla = timeit(f_epi, docs), timeit(f_xla, docs)
+        t_drv = timeit(f_drv, docs)
+        rows.append({
+            "kernel": "compact_epilogue", "shape": f"D{D}xT{T}",
+            "baseline": "xla-compact", "baseline_s": t_xla,
+            "variant": "epilogue", "variant_s": t_epi,
+            "speedup": t_xla / t_epi,
+            "hbm_bytes_baseline": fp.hbm_bytes_fused(D, T, L, NC, 4, False,
+                                                     sig_width=L),
+            "hbm_bytes_variant": fp.hbm_bytes_fused(D, T, L, NC, 4, False,
+                                                    sig_width=L,
+                                                    kernel_compact=True),
+            "shards": "", "tiles_per_shard": "",
+        })
+        rows.append({
+            "kernel": "sharded_driver",
+            "shape": f"D{D}xT{T}/s{shard_docs}t{tile_docs}",
+            "baseline": "unsharded", "baseline_s": t_epi,
+            "variant": "sharded-stream", "variant_s": t_drv,
+            "speedup": t_epi / t_drv,
+            "hbm_bytes_baseline": "", "hbm_bytes_variant": "",
+            "shards": -(-D // shard_docs),
+            "tiles_per_shard": -(-shard_docs // tile_docs),
+        })
+    return rows
+
+
 def run() -> list[dict]:
     rows = []
     rng = np.random.default_rng(0)
@@ -144,8 +216,9 @@ def run() -> list[dict]:
 
 def main(smoke: bool = False) -> None:
     # smoke rows go to a separate artifact so CI never clobbers the
-    # published full-scale kernels_fused.json evidence
+    # published full-scale kernels_fused.json / sharded.json evidence
     emit("kernels_smoke" if smoke else "kernels_fused", run_fused(smoke=smoke))
+    emit("sharded_smoke" if smoke else "sharded", run_sharded(smoke=smoke))
     if not smoke:
         emit("kernels", run())
 

@@ -25,6 +25,54 @@ except ImportError:  # older jax: experimental module, kwarg is check_rep
         return _exp_shard_map(f, *args, **kwargs)
 
 
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh for jit bodies.
+
+    ``jax.set_mesh`` only exists on newer jax; on older releases the
+    ``Mesh`` object itself is the equivalent context manager (it installs
+    the physical mesh that ``shard_map``/``NamedSharding`` resolve axis
+    names against), so the shim just returns ``mesh``.
+    """
+    import jax
+
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def _make_barrier():
+    # module-scope one-time custom_jvp registration (a per-call wrapper
+    # would defeat jax's function-identity caches and re-register on
+    # every retrace of a scanned layer body)
+    import jax
+
+    @jax.custom_jvp
+    def _barrier(v):
+        return jax.lax.optimization_barrier(v)
+
+    @_barrier.defjvp
+    def _barrier_jvp(primals, tangents):
+        (v,), (t,) = primals, tangents
+        return jax.lax.optimization_barrier(v), t
+
+    return _barrier
+
+
+_BARRIER = _make_barrier()
+
+
+def optimization_barrier(x):
+    """Differentiable ``jax.lax.optimization_barrier``.
+
+    Older jax ships the primitive without a differentiation rule, which
+    breaks ``grad`` through remat'd scan bodies that use the barrier as a
+    scheduling hint. The hint never changes values, so the JVP barriers
+    the primal and passes the tangent through untouched (linear, hence
+    transposable for reverse mode).
+    """
+    return _BARRIER(x)
+
+
 def axis_size(name: str):
     """Size of a named mesh axis from inside a shard_map/pmap body.
 
@@ -38,4 +86,4 @@ def axis_size(name: str):
     return jax.lax.psum(1, name)
 
 
-__all__ = ["shard_map", "axis_size"]
+__all__ = ["shard_map", "axis_size", "set_mesh", "optimization_barrier"]

@@ -193,6 +193,20 @@ class EEJoinOperator:
         return out, diags
 
     # -- execution (single shard; distributed wrapper in extraction/) --------
+    def _side_matches(self, cands: dict, side: PreparedSide) -> Matches:
+        """Probe + verify one prepared side over compacted candidates."""
+        if side.side.algo == ALGO_INDEX:
+            m: Matches | None = None
+            for part in side.index_parts:
+                pm = engine.extract_index_part(cands, part, side.ddict, side.params)
+                m = pm if m is None else merge_matches(
+                    m, pm, self.config.result_capacity
+                )
+            return m
+        return engine.extract_ssjoin_local(
+            cands, side.sig_table, side.ddict, side.params
+        )
+
     def execute(self, prepared: PreparedPlan, doc_tokens) -> Matches:
         cfg = self.config
         out: Matches | None = None
@@ -209,15 +223,45 @@ class EEJoinOperator:
                 cands = engine.compact_candidates(
                     base, surv, side.params.max_candidates
                 )
-            if side.side.algo == ALGO_INDEX:
-                m: Matches | None = None
-                for part in side.index_parts:
-                    pm = engine.extract_index_part(cands, part, side.ddict, side.params)
-                    m = pm if m is None else merge_matches(m, pm, cfg.result_capacity)
-            else:
-                m = engine.extract_ssjoin_local(
-                    cands, side.sig_table, side.ddict, side.params
-                )
+            m = self._side_matches(cands, side)
+            out = m if out is None else merge_matches(out, m, cfg.result_capacity)
+        assert out is not None, "empty plan"
+        return out
+
+    def execute_sharded(
+        self,
+        prepared: PreparedPlan,
+        doc_tokens,
+        mesh=None,
+        axis_name: str = "workers",
+        shard_docs: int | None = None,
+        tile_docs: int | None = None,
+    ) -> Matches:
+        """Streaming execution: the sharded per-device ``fused_probe``
+        driver feeds the candidate front end (documents split into
+        shards, each device streaming its shard's tiles with the
+        in-kernel compaction epilogue), then each plan side verifies
+        over the merged global candidate buffer. Bit-identical to
+        ``execute`` with ``use_kernel=True``; requires it (candidate
+        streaming is a kernel-path feature). With ``mesh=None`` shards
+        stream sequentially on the local device."""
+        from repro.extraction import sharded as S
+
+        assert self.config.use_kernel, "execute_sharded requires use_kernel=True"
+        cfg = self.config
+        out: Matches | None = None
+        for side in prepared.sides:
+            cands = S.sharded_filter_compact(
+                doc_tokens,
+                prepared.max_entity_len,
+                side.flt,
+                side.params,
+                mesh=mesh,
+                axis_name=axis_name,
+                shard_docs=shard_docs,
+                tile_docs=tile_docs,
+            )
+            m = self._side_matches(cands, side)
             out = m if out is None else merge_matches(out, m, cfg.result_capacity)
         assert out is not None, "empty plan"
         return out

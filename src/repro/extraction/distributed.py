@@ -39,7 +39,7 @@ from repro.compat import axis_size, shard_map
 from repro.core import hashing
 from repro.core.dictionary import PAD
 from repro.core.signatures import EntitySignatures, num_window_signatures
-from repro.extraction import engine
+from repro.extraction import engine, sharded
 from repro.extraction.results import Matches, compact_matches, merge_matches
 from repro.extraction.verify import dedup_hits, verify_pairs
 
@@ -92,7 +92,9 @@ def distributed_extract_index(
     def body(docs):
         docs = docs.reshape(dl, -1)
         if params.use_kernel:
-            cands = engine.fused_filter_compact(docs, max_len, side.flt, params)
+            # per-device double-buffered tile stream (same lanes + merge
+            # as the sharded driver; doc ids stay shard-local here)
+            cands = sharded.stream_filter_compact(docs, max_len, side.flt, params)
         else:
             base, surv = engine.survival_mask(docs, max_len, side.flt, False)
             cands = engine.compact_candidates(base, surv, params.max_candidates)
@@ -225,8 +227,9 @@ def distributed_extract_ssjoin(
             entity_offset=table.entity_offset,
         )
         if params.use_kernel:
-            # fused megakernel: survival + (lsh) band sigs in one pass
-            cands = engine.fused_filter_compact(docs, max_len, side.flt, params)
+            # fused megakernel tile stream; window sigs recomputed from
+            # the gathered windows (bit-identical to the in-kernel path)
+            cands = sharded.stream_filter_compact(docs, max_len, side.flt, params)
         else:
             base, surv = engine.survival_mask(docs, max_len, side.flt, False)
             cands = engine.compact_candidates(base, surv, params.max_candidates)

@@ -40,7 +40,12 @@ from repro.core.signatures import (
     window_signatures,
 )
 from repro.core.variants import VARIANT_SEEDS, window_variant_key
-from repro.extraction.results import Matches, compact_matches, select_nonzero
+from repro.extraction.results import (
+    Matches,
+    compact_matches,
+    select_from_tiles,
+    select_nonzero,
+)
 from repro.extraction.substrings import window_base
 from repro.extraction.verify import dedup_hits, verify_pairs
 
@@ -67,6 +72,10 @@ class ExtractParams:
     result_capacity: int = 4096
     lsh: LshParams = LshParams()
     use_kernel: bool = False
+    # use_kernel only: compact candidates inside the fused_probe epilogue
+    # (per-tile count + packed-index lanes). False keeps the legacy XLA
+    # cumsum+searchsorted pass over the packed bitmap as a live fallback.
+    kernel_compact: bool = True
 
 
 @dataclasses.dataclass
@@ -163,6 +172,71 @@ def compact_candidates(base, survive, max_candidates: int):
     )
 
 
+def candidates_from_flat(doc_tokens, flat_idx, ok, n_survive, max_len: int,
+                         max_candidates: int) -> dict:
+    """Build the ``compact_candidates`` dict from selected flat indices.
+
+    ``flat_idx`` [N] are (doc*T + pos)*max_len + (len-1) window indices
+    (already clamped >= 0 where ``ok`` is False); windows are gathered
+    straight from the [D, T] token rows — no [D,T,L] base tensor. Shared
+    tail of the fused single-call, legacy-XLA, and sharded-streaming
+    compaction paths, so they stay field-for-field identical.
+    """
+    D, T = doc_tokens.shape
+    L = max_len
+    safe = jnp.maximum(flat_idx, 0)
+    d = safe // (T * L)
+    rem = safe % (T * L)
+    p = rem // L
+    l = rem % L  # length-1
+    cols = p[:, None] + jnp.arange(L)[None, :]  # [N, L]
+    toks = doc_tokens[d[:, None], jnp.minimum(cols, T - 1)]
+    lens_mask = (jnp.arange(L)[None, :] <= l[:, None]) & (cols < T)
+    toks = jnp.where(lens_mask & ok[:, None], toks, PAD)
+    n = n_survive.astype(jnp.int32)
+    return dict(
+        win_tokens=toks.astype(jnp.int32),
+        win_valid=ok,
+        doc=jnp.where(ok, d, -1).astype(jnp.int32),
+        pos=jnp.where(ok, p, -1).astype(jnp.int32),
+        length=jnp.where(ok, l + 1, -1).astype(jnp.int32),
+        n_survive=n,
+        overflow=jnp.maximum(n - max_candidates, 0).astype(jnp.int32),
+    )
+
+
+def attach_kernel_sigs(cands: dict, kernel_sigs, params: ExtractParams) -> dict:
+    """Gather in-kernel [D,T,L,B] band sigs at the compacted candidates.
+
+    Padded slots carry the all-invalid-window band constants so the
+    tensor stays bit-identical to ``window_signatures`` on them too.
+    """
+    from repro.kernels.fused_probe import empty_band_sigs
+
+    ok = cands["win_valid"]
+    d = jnp.maximum(cands["doc"], 0)
+    p = jnp.maximum(cands["pos"], 0)
+    l = jnp.maximum(cands["length"] - 1, 0)
+    gathered = kernel_sigs[d, p, l]  # [N, B]
+    empty = jnp.asarray(empty_band_sigs(params.lsh.bands, params.lsh.rows))
+    cands["sigs"] = jnp.where(ok[:, None], gathered, empty[None, :])
+    cands["sig_mask"] = jnp.broadcast_to(ok[:, None], gathered.shape)
+    return cands
+
+
+def resolve_sig_mode(params: ExtractParams, D: int, T: int, L: int) -> str:
+    """In-kernel band-sig emission computes minima for every (pos, len)
+    window and stores a [D,T,L,B] tensor — profitable only when the
+    compacted candidate stream covers the whole window grid (then the
+    post-compaction re-gather would move the same bytes); in the
+    filter's target low-density regime, post-compaction signatures over
+    [N, L] windows are far less work."""
+    from repro.kernels.fused_probe import SIG_MODE_LSH, SIG_MODE_NONE
+
+    dense = params.max_candidates >= D * T * L
+    return SIG_MODE_LSH if (params.scheme == SIG_LSH and dense) else SIG_MODE_NONE
+
+
 def fused_filter_compact(
     doc_tokens,
     max_len: int,
@@ -181,9 +255,16 @@ def fused_filter_compact(
     (bit-identical to ``window_signatures``; padded slots carry the
     all-invalid-window band constants). Returns the ``compact_candidates``
     dict, plus ``sigs``/``sig_mask`` when the scheme is ``lsh``.
+
+    Candidate selection runs in the kernel's compaction epilogue by
+    default (per-tile survivor counts + packed-index lanes merged by
+    ``select_from_tiles``; the [D, T] bitmap is never re-read).
+    ``params.kernel_compact=False`` keeps the legacy two-stage XLA
+    compaction over the packed bitmap — same outputs, exercised by tests
+    so the fallback cannot rot.
     """
     from repro.kernels import ops as kops
-    from repro.kernels.fused_probe import SIG_MODE_LSH, SIG_MODE_NONE, empty_band_sigs
+    from repro.kernels.fused_probe import SIG_MODE_LSH
 
     D, T = doc_tokens.shape
     L = max_len
@@ -194,57 +275,37 @@ def fused_filter_compact(
         base, surv = survival_mask(doc_tokens, max_len, flt, use_kernel=True)
         return compact_candidates(base, surv, params.max_candidates)
     if sig_mode is None:
-        # In-kernel band-sig emission computes minima for every (pos, len)
-        # window and stores a [D,T,L,B] tensor — profitable only when the
-        # compacted candidate stream covers the whole window grid (then
-        # the post-compaction re-gather would move the same bytes); in
-        # the filter's target low-density regime, post-compaction
-        # signatures over [N, L] windows are far less work.
-        dense = params.max_candidates >= D * T * L
-        sig_mode = (
-            SIG_MODE_LSH if (params.scheme == SIG_LSH and dense) else SIG_MODE_NONE
-        )
+        sig_mode = resolve_sig_mode(params, D, T, L)
     lsh = sig_mode == SIG_MODE_LSH
-    packed, kernel_sigs = kops.fused_probe(
-        doc_tokens, flt, max_len, sig_mode, params.lsh.bands, params.lsh.rows
-    )
-
-    # two-stage compaction straight off the packed bitmap: nonzero over
-    # the [D*T] word stream, then unpack only the selected words' bits —
-    # the [D,T,L] bool survival tensor is never materialised.
-    shifts = jnp.arange(L, dtype=jnp.uint32)
-    flat_words = packed.reshape(-1)
-    starts, _ = select_nonzero(flat_words != 0, params.max_candidates)
-    words = flat_words[jnp.maximum(starts, 0)] * (starts >= 0)
-    sub = ((words[:, None] >> shifts[None, :]) & jnp.uint32(1)).astype(bool)
-    sel, ok = select_nonzero(sub.reshape(-1), params.max_candidates)
-    ssafe = jnp.maximum(sel, 0)
-    safe = jnp.maximum(starts[ssafe // L], 0) * L + ssafe % L
-    d = safe // (T * L)
-    rem = safe % (T * L)
-    p = rem // L
-    l = rem % L  # length-1
-
-    # gather windows straight from the doc rows (no [D,T,L] base)
-    cols = p[:, None] + jnp.arange(L)[None, :]  # [N, L]
-    toks = doc_tokens[d[:, None], jnp.minimum(cols, T - 1)]
-    lens_mask = (jnp.arange(L)[None, :] <= l[:, None]) & (cols < T)
-    toks = jnp.where(lens_mask & ok[:, None], toks, PAD)
-    n = jax.lax.population_count(packed).sum().astype(jnp.int32)
-    cands = dict(
-        win_tokens=toks.astype(jnp.int32),
-        win_valid=ok,
-        doc=jnp.where(ok, d, -1).astype(jnp.int32),
-        pos=jnp.where(ok, p, -1).astype(jnp.int32),
-        length=jnp.where(ok, l + 1, -1).astype(jnp.int32),
-        n_survive=n,
-        overflow=jnp.maximum(n - params.max_candidates, 0).astype(jnp.int32),
-    )
+    NC = params.max_candidates
+    if params.kernel_compact:
+        # in-kernel compaction epilogue: per-tile survivor counts and
+        # ascending packed-index lanes; the O(G + NC) merge below is the
+        # only XLA-side work — no pass over the [D, T] bitmap.
+        packed, kernel_sigs, counts, tiles = kops.fused_probe_compact(
+            doc_tokens, flt, max_len, NC, sig_mode,
+            params.lsh.bands, params.lsh.rows,
+        )
+        sel, ok, n = select_from_tiles(counts, tiles, NC)
+    else:
+        packed, kernel_sigs = kops.fused_probe(
+            doc_tokens, flt, max_len, sig_mode, params.lsh.bands, params.lsh.rows
+        )
+        # legacy two-stage compaction off the packed bitmap: nonzero over
+        # the [D*T] word stream, then unpack only the selected words' bits
+        # — the [D,T,L] bool survival tensor is never materialised.
+        shifts = jnp.arange(L, dtype=jnp.uint32)
+        flat_words = packed.reshape(-1)
+        starts, _ = select_nonzero(flat_words != 0, NC)
+        words = flat_words[jnp.maximum(starts, 0)] * (starts >= 0)
+        sub = ((words[:, None] >> shifts[None, :]) & jnp.uint32(1)).astype(bool)
+        ssel, ok = select_nonzero(sub.reshape(-1), NC)
+        ssafe = jnp.maximum(ssel, 0)
+        sel = jnp.maximum(starts[ssafe // L], 0) * L + ssafe % L
+        n = jax.lax.population_count(packed).sum().astype(jnp.int32)
+    cands = candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
     if lsh:
-        gathered = kernel_sigs[d, p, l]  # [N, B]
-        empty = jnp.asarray(empty_band_sigs(params.lsh.bands, params.lsh.rows))
-        cands["sigs"] = jnp.where(ok[:, None], gathered, empty[None, :])
-        cands["sig_mask"] = jnp.broadcast_to(ok[:, None], gathered.shape)
+        cands = attach_kernel_sigs(cands, kernel_sigs, params)
     return cands
 
 

@@ -58,6 +58,36 @@ def select_nonzero(mask, capacity: int):
     return jnp.where(ok, idx, -1), ok
 
 
+def select_from_tiles(counts, cands, capacity: int):
+    """Merge per-tile compacted candidate lanes into one global selection.
+
+    ``counts`` [G] int32 are true per-tile survivor counts (may exceed
+    the lane width); ``cands`` [G, C] int32 hold each tile's first C
+    survivors as ascending flat indices (-1 pad), tiles ordered by
+    ascending index range — the layout the ``fused_probe`` compaction
+    epilogue emits. Returns (idx [capacity] int32 -1-padded, ok
+    [capacity] bool, total [] int32), bit-identical to running
+    ``select_nonzero`` over the full bitmap whenever ``C >= capacity``
+    (any candidate inside the global first ``capacity`` has within-tile
+    rank < capacity, so lane truncation can never hide it). Cost is
+    O(G + capacity) — the [D, T] survival bitmap is never touched.
+    """
+    G, C = cands.shape
+    assert C >= capacity, (
+        f"lane width {C} < capacity {capacity}: truncated lanes would be "
+        "re-read silently (see docstring invariant)"
+    )
+    cum = jnp.cumsum(counts.astype(jnp.int32))
+    total = cum[-1]
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    ok = j < jnp.minimum(total, capacity)
+    g = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    gs = jnp.minimum(g, G - 1)
+    within = j - (cum[gs] - counts[gs])
+    idx = cands[gs, jnp.clip(within, 0, C - 1)]
+    return jnp.where(ok, idx, -1), ok, total
+
+
 def compact_matches(hit_mask, doc, pos, length, entity, score, capacity: int) -> Matches:
     """Compact flat hit arrays into a fixed-capacity Matches buffer.
 

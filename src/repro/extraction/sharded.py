@@ -1,0 +1,258 @@
+"""Sharded streaming extraction: the per-device ``fused_probe`` driver.
+
+The paper's operator exists because extraction must scale past one
+machine's memory: documents are split into shards and the filter/verify
+plan is costed per shard. This module is the execution layer for that
+regime — it converts the engine from "one big array per call" into a
+*stream of shards per device pool*:
+
+    corpus [D, T]
+      └─ shards of ``shard_docs`` rows          (host-side split, PAD-padded)
+           └─ wave of ``n_workers`` shards      (shard_map over the mesh axis)
+                └─ tiles of ``tile_docs`` rows  (double-buffered probe stream)
+                     └─ fused_probe epilogue    (per-tile count + index lanes)
+
+Inside a device, tiles stream through the ``fused_probe`` megakernel
+with its in-kernel compaction epilogue; the loop is *double-buffered*:
+the next tile's probe is issued before the current tile's lanes are
+folded into the shard accumulator, so the two have no data dependency
+and a real TPU overlaps the next tile's HBM->VMEM DMA with the current
+tile's epilogue math (in interpret mode the structure is identical, the
+overlap is just not observable). Every combine step — tile lanes ->
+shard lane -> global candidate buffer — runs ``select_from_tiles`` over
+tiny [G, NC] count/index lanes, never over the [D, T] survival bitmap.
+
+Because per-tile and per-shard lanes keep the *first NC* survivors in
+ascending flat order and true totals ride along, the final selection is
+bit-identical to the unsharded ``engine.fused_filter_compact`` fast
+path at any shard geometry (uneven shards, PAD-only shards,
+zero-survivor shards, more shards than devices) — asserted in
+``tests/test_sharded.py`` and re-checked by the sharded smoke bench.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.dictionary import PAD
+from repro.extraction import engine
+from repro.extraction.results import select_from_tiles
+
+#: default rows per streaming tile: big enough to amortise kernel launch
+#: overhead, small enough that two tiles' working sets double-buffer in
+#: VMEM (docs + packed bitmap + candidate lanes per tile).
+DEFAULT_TILE_DOCS = 64
+
+DEFAULT_AXIS = "workers"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Static geometry of one sharded streaming run."""
+
+    total_docs: int  # true corpus rows (pre-padding)
+    shard_docs: int  # rows per shard (last shard PAD-padded up to this)
+    num_shards: int
+    tile_docs: int  # rows per double-buffered probe tile within a shard
+
+    @property
+    def tiles_per_shard(self) -> int:
+        return -(-self.shard_docs // self.tile_docs)
+
+
+def plan_shards(
+    total_docs: int,
+    n_workers: int = 1,
+    shard_docs: int | None = None,
+    tile_docs: int | None = None,
+) -> ShardSpec:
+    """Choose a shard geometry: default one shard per worker per wave."""
+    assert total_docs > 0
+    sd = shard_docs or -(-total_docs // max(n_workers, 1))
+    td = min(tile_docs or DEFAULT_TILE_DOCS, sd)
+    return ShardSpec(
+        total_docs=total_docs,
+        shard_docs=sd,
+        num_shards=-(-total_docs // sd),
+        tile_docs=td,
+    )
+
+
+def stream_probe_tiles(
+    docs,
+    max_len: int,
+    flt: tuple | None,
+    params: engine.ExtractParams,
+    tile_docs: int = DEFAULT_TILE_DOCS,
+    row_offset=0,
+):
+    """Stream a [S, T] doc shard through ``fused_probe`` tile by tile.
+
+    Returns ``(counts [G], cands [G, NC])`` candidate lanes covering the
+    whole shard, with flat indices globalised by ``row_offset`` rows
+    (``row_offset`` may be a traced scalar, e.g. a worker index inside
+    ``shard_map``). The loop is double-buffered: tile i+1's probe is
+    issued before tile i's lanes are globalised, so the probe DMA and
+    the combine arithmetic have no dependency edge between them.
+    """
+    from repro.kernels import ops as kops
+
+    S, T = docs.shape
+    L = max_len
+    NC = params.max_candidates
+    td = min(tile_docs, S)
+    n_tiles = -(-S // td)
+    if n_tiles * td != S:
+        docs = jnp.pad(docs, ((0, n_tiles * td - S), (0, 0)),
+                       constant_values=PAD)
+
+    def probe(i):
+        return kops.fused_probe_compact(docs[i * td:(i + 1) * td], flt, L, NC)
+
+    def globalise(cnt, cd, tile_row):
+        off = (row_offset + tile_row) * T * L
+        return cnt, jnp.where(cd >= 0, cd + off, -1)
+
+    out_counts, out_cands = [], []
+    _, _, cnt, cd = probe(0)
+    cur, cur_row = (cnt, cd), 0
+    for i in range(1, n_tiles):
+        _, _, cnt, cd = probe(i)  # issue next probe (buffer B) ...
+        c, x = globalise(*cur, cur_row)  # ... while current tile combines
+        out_counts.append(c)
+        out_cands.append(x)
+        cur, cur_row = (cnt, cd), i * td
+    c, x = globalise(*cur, cur_row)
+    out_counts.append(c)
+    out_cands.append(x)
+    return jnp.concatenate(out_counts), jnp.concatenate(out_cands, axis=0)
+
+
+def stream_filter_compact(
+    doc_tokens,
+    max_len: int,
+    flt: tuple | None,
+    params: engine.ExtractParams,
+    tile_docs: int = DEFAULT_TILE_DOCS,
+) -> dict:
+    """Single-device streaming equivalent of ``engine.fused_filter_compact``.
+
+    Tiles the doc array through the megakernel (double-buffered) instead
+    of one monolithic ``pallas_call``, then merges the per-tile lanes.
+    Output is bit-identical to the unsharded fast path; LSH schemes get
+    their signatures post-compaction (``window_sigs_for`` recomputes
+    bit-identical band sigs from the gathered windows), so the dict
+    never carries in-kernel ``sigs``. Falls back to the single-call
+    engine path when the epilogue cannot run (L > 32 or
+    ``params.kernel_compact=False``).
+    """
+    if max_len > 32 or not params.kernel_compact:
+        return engine.fused_filter_compact(doc_tokens, max_len, flt, params)
+    NC = params.max_candidates
+    counts, cands = stream_probe_tiles(doc_tokens, max_len, flt, params, tile_docs)
+    sel, ok, n = select_from_tiles(counts, cands, NC)
+    return engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+
+
+def _shard_lane(docs, row_offset, max_len, flt, params, tile_docs):
+    """Per-device body: stream one shard, reduce to a [NC] shard lane.
+
+    Returns ``(cand [1, NC], count [1])`` — the shard's first NC
+    survivors as ascending global flat indices plus its true survivor
+    count, i.e. exactly one row of a ``select_from_tiles`` input, so
+    shard lanes compose across waves the same way tile lanes compose
+    within a shard.
+    """
+    NC = params.max_candidates
+    counts, cands = stream_probe_tiles(
+        docs, max_len, flt, params, tile_docs, row_offset=row_offset
+    )
+    sel, ok, n = select_from_tiles(counts, cands, NC)
+    return jnp.where(ok, sel, -1)[None, :], n[None].astype(jnp.int32)
+
+
+def sharded_filter_compact(
+    doc_tokens,
+    max_len: int,
+    flt: tuple | None,
+    params: engine.ExtractParams,
+    mesh: Mesh | None = None,
+    axis_name: str = DEFAULT_AXIS,
+    shard_docs: int | None = None,
+    tile_docs: int | None = None,
+) -> dict:
+    """Shard-parallel streaming candidate front end.
+
+    Splits the corpus into ``shard_docs``-row shards, maps each wave of
+    ``n_workers`` shards onto the mesh axis with ``shard_map`` (each
+    device streams its shard's tiles through ``fused_probe``), and
+    merges the per-shard candidate lanes into one global
+    ``compact_candidates`` dict — bit-identical to running the
+    unsharded ``engine.fused_filter_compact`` on the whole array. With
+    ``mesh=None`` the wave loop degenerates to a sequential stream on
+    the local device (same lanes, same merge, same outputs). More
+    shards than devices are handled by multiple waves; short corpora
+    and ragged tails are PAD-padded (PAD rows can never survive, so
+    padding never perturbs the selection).
+    """
+    if max_len > 32 or not params.kernel_compact:
+        # no epilogue -> no lanes to shard over; single-call fallback
+        return engine.fused_filter_compact(doc_tokens, max_len, flt, params)
+    D, T = doc_tokens.shape
+    # flat window indices (doc*T + pos)*L + (len-1) are int32 end to end;
+    # past this bound the offsets in stream_probe_tiles would wrap silently
+    assert D * T * max_len < 2**31, (
+        f"flat window index space {D}x{T}x{max_len} overflows int32; "
+        "split the corpus into separate driver calls"
+    )
+    n_workers = int(mesh.shape[axis_name]) if mesh is not None else 1
+    spec = plan_shards(D, n_workers, shard_docs, tile_docs)
+    NC = params.max_candidates
+    n_waves = -(-spec.num_shards // n_workers)
+    rows_padded = n_waves * n_workers * spec.shard_docs
+    padded = doc_tokens
+    if rows_padded != D:
+        padded = jnp.pad(doc_tokens, ((0, rows_padded - D), (0, 0)),
+                         constant_values=PAD)
+
+    lanes, totals = [], []
+    if mesh is None:
+        for s in range(n_waves * n_workers):
+            lane, n = _shard_lane(
+                padded[s * spec.shard_docs:(s + 1) * spec.shard_docs],
+                s * spec.shard_docs,
+                max_len, flt, params, spec.tile_docs,
+            )
+            lanes.append(lane)
+            totals.append(n)
+    else:
+        def wave_body(docs, row_off):
+            return _shard_lane(
+                docs, row_off[0], max_len, flt, params, spec.tile_docs
+            )
+
+        wave_fn = shard_map(
+            wave_body,
+            mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(axis_name), P(axis_name)),
+            check_vma=False,
+        )
+        for w in range(n_waves):
+            block = padded[
+                w * n_workers * spec.shard_docs:(w + 1) * n_workers * spec.shard_docs
+            ]
+            offs = (
+                (w * n_workers + jnp.arange(n_workers)) * spec.shard_docs
+            ).astype(jnp.int32)
+            lane, n = wave_fn(block, offs)
+            lanes.append(lane.reshape(n_workers, NC))
+            totals.append(n.reshape(n_workers))
+
+    counts = jnp.concatenate(totals)
+    cands = jnp.concatenate(lanes, axis=0)
+    sel, ok, n = select_from_tiles(counts, cands, NC)
+    return engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)

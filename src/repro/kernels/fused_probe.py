@@ -40,6 +40,16 @@ Downstream, the engine's fused compaction gathers candidate windows
 straight from the [D, T] token array — ``window_base`` is never
 materialised (see ``extraction.engine.fused_filter_compact``).
 
+With ``candidates > 0`` the kernel also runs a *compaction epilogue*:
+the per-tile survivor count is accumulated in an SMEM scratch cell as
+the length recurrence runs, and the tile's first ``candidates``
+surviving (doc, pos, len) triples are rank-compacted (prefix-sum over
+the register-resident bit expansion) into an ascending [G, candidates]
+flat-index lane. Candidate selection then reads only these lanes — the
+last XLA pass over the full [D, T] bitmap (cumsum + searchsorted in
+``extraction.results.select_nonzero``) disappears, which matters because
+candidate-generation traffic, not verification, dominates at scale.
+
 Tiling: one full document row per grid row ([Bd, T] tiles) so windows
 never straddle a tile edge; the Bloom bitmap block is grid-invariant
 (loaded once, reused across steps). Validated in interpret mode on CPU;
@@ -64,6 +74,18 @@ from repro.kernels._hashing import hash_seeded as _hash
 _MAX_U32 = 0xFFFFFFFF
 
 DEFAULT_BD = 8
+
+
+def compact_tile_height(D: int, T: int, candidates: int) -> int:
+    """Doc-tile height for the compaction epilogue.
+
+    Each grid tile emits a full-width [1 + candidates] lane (parity
+    requires it — the global first-NC could all land in one tile), so
+    lane traffic is G * (1 + NC) * 8 B and only stays well under the
+    bitmap bytes it replaces when bd >= 4 * NC / T. Single source of
+    truth for ``ops.fused_probe_compact`` and ``hbm_bytes_fused``.
+    """
+    return min(max(DEFAULT_BD, -(-4 * candidates // max(T, 1))), max(D, 1))
 
 SIG_MODE_NONE = "none"
 SIG_MODE_LSH = "lsh"
@@ -94,7 +116,7 @@ def _kernel(
     doc_ref,
     bits_ref,
     packed_ref,
-    *sig_refs,
+    *rest_refs,
     num_bits: int,
     num_hashes: int,
     max_len: int,
@@ -102,7 +124,13 @@ def _kernel(
     rows: int,
     use_filter: bool,
     sig_mode: str,
+    cand_cap: int,
 ):
+    # ref layout after packed_ref: [sig_ref] [count_ref, cand_ref] [cnt_scr]
+    refs = list(rest_refs)
+    sig_ref = refs.pop(0) if sig_mode == SIG_MODE_LSH else None
+    if cand_cap:
+        count_ref, cand_ref, cnt_scr = refs
     docs = doc_ref[...]  # [Bd, T] int32
     Bd, T = docs.shape
     real = docs != 0  # PAD == 0
@@ -121,7 +149,6 @@ def _kernel(
 
     lsh = sig_mode == SIG_MODE_LSH
     if lsh:
-        sig_ref = sig_refs[0]
         # per-token row hashes, invalid -> MAX so they never win a min
         hv = [
             jnp.where(real, _hash(docs, _LSH_SEED_BASE + i), jnp.uint32(_MAX_U32))
@@ -136,11 +163,17 @@ def _kernel(
     sh_hv = list(hv) if lsh else []
     zero_row = jnp.zeros((Bd, 1), bool)
     max_row = jnp.full((Bd, 1), _MAX_U32, dtype=jnp.uint32)
+    if cand_cap:
+        cnt_scr[0] = jnp.int32(0)  # scratch persists across grid steps
     for l in range(max_len):
         vand = vand & sh_real
         vor = vor | sh_hit
         surv = vand & vor
         pack = pack | (surv.astype(jnp.uint32) << jnp.uint32(l))
+        if cand_cap:
+            # per-tile survivor count, accumulated in scratch as the
+            # length recurrence runs (feeds the compaction epilogue)
+            cnt_scr[0] += surv.sum().astype(jnp.int32)
         if lsh:
             for i in range(bands * rows):
                 rmin[i] = jnp.minimum(rmin[i], sh_hv[i])
@@ -158,6 +191,36 @@ def _kernel(
                     jnp.concatenate([v[:, 1:], max_row], axis=1) for v in sh_hv
                 ]
     packed_ref[...] = pack
+    if cand_cap:
+        # compaction epilogue: emit the tile's surviving (doc, pos, len)
+        # triples as ascending *global* flat indices, packed to the front
+        # of a fixed [cand_cap] lane — everything VMEM-resident, so the
+        # [D, T] bitmap is never re-read from HBM to compact it.
+        count_ref[0] = cnt_scr[0]
+        L = max_len
+        lane = jax.lax.iota(jnp.int32, cand_cap)  # iota: no captured consts
+        # two-stage (word -> bit) selection, sort- and scatter-free
+        # ("the k-th survivor lives where the prefix sum first reaches
+        # k"): survivor density is low, so first pick the <= cand_cap
+        # tokens with any surviving length (the first cand_cap set bits
+        # always live inside the first cand_cap nonzero words), then
+        # rank only their unpacked bits.
+        nz = (pack != 0).reshape(-1)  # [Bd*T]
+        cw = jnp.cumsum(nz.astype(jnp.int32))
+        wk = jnp.searchsorted(cw, lane + 1, side="left").astype(jnp.int32)
+        wok = lane < jnp.minimum(cw[-1], cand_cap)
+        words = pack.reshape(-1)[jnp.minimum(wk, Bd * T - 1)]
+        words = words * wok.astype(jnp.uint32)  # [cand_cap] u32
+        sub = ((words[:, None] >> jax.lax.iota(jnp.uint32, L))
+               & jnp.uint32(1)) != 0  # [cand_cap, L]
+        cb = jnp.cumsum(sub.reshape(-1).astype(jnp.int32))
+        k = jnp.searchsorted(cb, lane + 1, side="left").astype(jnp.int32)
+        ok = lane < jnp.minimum(cnt_scr[0], cand_cap)
+        flat = jnp.minimum(wk[jnp.minimum(k // L, cand_cap - 1)],
+                           Bd * T - 1) * L + k % L
+        cand_ref[0, :] = jnp.where(
+            ok, pl.program_id(0) * Bd * T * L + flat, -1
+        )
 
 
 @functools.partial(
@@ -171,6 +234,7 @@ def _kernel(
         "rows",
         "use_filter",
         "bd",
+        "candidates",
         "interpret",
     ),
 )
@@ -185,20 +249,31 @@ def fused_probe_pallas(
     rows: int = 2,
     use_filter: bool = True,
     bd: int = DEFAULT_BD,
+    candidates: int = 0,
     interpret: bool = True,
 ):
-    """One-pass filter+signature probe.
+    """One-pass filter+signature probe with optional compaction epilogue.
 
-    Returns ``(packed, sigs)``: ``packed`` [D, T] uint32 with bit ``l``
-    = survive(pos, len=l+1) (validity AND Bloom survival; validity only
-    when ``use_filter=False``); ``sigs`` is [D, T, max_len, bands]
-    uint32 MinHash band signatures when ``sig_mode == "lsh"``, else
-    ``None``.
+    Returns ``(packed, sigs, counts, cands)``: ``packed`` [D, T] uint32
+    with bit ``l`` = survive(pos, len=l+1) (validity AND Bloom survival;
+    validity only when ``use_filter=False``); ``sigs`` is
+    [D, T, max_len, bands] uint32 MinHash band signatures when
+    ``sig_mode == "lsh"``, else ``None``. When ``candidates > 0`` the
+    kernel additionally runs the in-kernel compaction epilogue:
+    ``counts`` [G] int32 holds each grid tile's true survivor count
+    (scratch-accumulated; may exceed ``candidates``) and ``cands``
+    [G, candidates] int32 the tile's first ``candidates`` survivors as
+    ascending global flat (doc*T + pos)*max_len + (len-1) indices, -1
+    padded — downstream compaction reads these tiny per-tile lanes and
+    never re-reads the [D, T] bitmap (see
+    ``extraction.results.select_from_tiles``). Both are ``None`` when
+    ``candidates == 0``.
     """
     assert max_len <= 32, "packed survival bitmap holds at most 32 lengths"
     D, T = doc_tokens.shape
     bd = min(bd, D)
     Dp = -(-D // bd) * bd
+    G = Dp // bd
     if Dp != D:
         doc_tokens = jnp.pad(doc_tokens, ((0, Dp - D), (0, 0)))
 
@@ -213,6 +288,15 @@ def fused_probe_pallas(
         )
     elif sig_mode != SIG_MODE_NONE:
         raise ValueError(f"unknown sig_mode {sig_mode!r}")
+    scratch_shapes = []
+    if candidates:
+        out_shape.append(jax.ShapeDtypeStruct((G,), jnp.int32))
+        out_specs.append(pl.BlockSpec((1,), lambda i: (i,)))
+        out_shape.append(jax.ShapeDtypeStruct((G, candidates), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, candidates), lambda i: (i, 0)))
+        from jax.experimental.pallas import tpu as pltpu
+
+        scratch_shapes = [pltpu.SMEM((1,), jnp.int32)]
 
     outs = pl.pallas_call(
         functools.partial(
@@ -224,6 +308,7 @@ def fused_probe_pallas(
             rows=rows,
             use_filter=use_filter,
             sig_mode=sig_mode,
+            cand_cap=candidates,
         ),
         grid=(Dp // bd,),
         in_specs=[
@@ -232,11 +317,14 @@ def fused_probe_pallas(
         ],
         out_specs=tuple(out_specs),
         out_shape=tuple(out_shape),
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(doc_tokens, bits)
-    packed = outs[0][:D]
-    sigs = outs[1][:D] if sig_mode == SIG_MODE_LSH else None
-    return packed, sigs
+    outs = list(outs)
+    packed = outs.pop(0)[:D]
+    sigs = outs.pop(0)[:D] if sig_mode == SIG_MODE_LSH else None
+    counts, cands = (outs[0], outs[1]) if candidates else (None, None)
+    return packed, sigs, counts, cands
 
 
 # --------------------------------------------------------------------------
@@ -259,18 +347,29 @@ def hbm_bytes_unfused(D: int, T: int, max_len: int, max_candidates: int,
 
 
 def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
-                    bands: int, lsh: bool, sig_width: int = 0) -> int:
+                    bands: int, lsh: bool, sig_width: int = 0,
+                    kernel_compact: bool = False, bd: int | None = None) -> int:
     """Bytes moved by the fused megakernel pipeline: docs read once,
-    packed [D,T] uint32 bitmap write + compaction re-read, compacted
-    [N,L] window gather straight from docs, and either the in-kernel
-    [D,T,L,B] signature store + [N,B] gather (``lsh=True``) or the same
-    post-compaction [N, sig_width] signature store the unfused pipeline
-    pays (``lsh=False``; pass the scheme's ``sig_width`` so the two
-    models stay symmetric)."""
+    packed [D,T] uint32 bitmap write (+ compaction re-read unless the
+    in-kernel epilogue runs), compacted [N,L] window gather straight
+    from docs, and either the in-kernel [D,T,L,B] signature store +
+    [N,B] gather (``lsh=True``) or the same post-compaction
+    [N, sig_width] signature store the unfused pipeline pays
+    (``lsh=False``; pass the scheme's ``sig_width`` so the two models
+    stay symmetric). With ``kernel_compact=True`` the epilogue emits
+    per-tile [G, 1 + max_candidates] count/candidate lanes instead: the
+    bitmap is written once for inspection but never re-read, and the
+    host-side combine touches only the lanes."""
     tokens = D * T
     packed = tokens * 4
     gather = max_candidates * max_len * 4
-    total = tokens * 4 + 2 * packed + 2 * gather
+    if kernel_compact:
+        if bd is None:
+            bd = compact_tile_height(D, T, max_candidates)
+        tiles = -(-D // bd) * (1 + max_candidates) * 4  # write + combine read
+        total = tokens * 4 + packed + 2 * tiles + 2 * gather
+    else:
+        total = tokens * 4 + 2 * packed + 2 * gather
     if lsh:
         total += tokens * max_len * bands * 4 + max_candidates * bands * 4
     else:

@@ -89,6 +89,41 @@ def fused_probe(
     Returns (packed [D, T] uint32 survival bitmap, sigs or None) — see
     ``fused_probe.fused_probe_pallas``.
     """
+    packed, sigs, _, _ = _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, 0)
+    return packed, sigs
+
+
+def fused_probe_compact(
+    doc_tokens,
+    flt: tuple | None,
+    max_len: int,
+    candidates: int,
+    sig_mode: str = _fp.SIG_MODE_NONE,
+    bands: int = 4,
+    rows: int = 2,
+):
+    """``fused_probe`` plus the in-kernel compaction epilogue.
+
+    Returns (packed, sigs, counts [G] int32, cands [G, candidates]
+    int32): per grid tile, the true survivor count and the tile's first
+    ``candidates`` survivors as ascending global flat window indices
+    (-1 pad). Combine across tiles with
+    ``extraction.results.select_from_tiles`` — no pass over ``packed``
+    is needed.
+
+    The doc-tile height grows with the candidate capacity so lane
+    traffic stays well under the bitmap bytes it replaces — see
+    ``fused_probe.compact_tile_height``.
+    """
+    assert candidates > 0
+    D, T = doc_tokens.shape
+    bd = _fp.compact_tile_height(D, T, candidates)
+    return _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
+                  bd=bd)
+
+
+def _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
+           bd: int = _fp.DEFAULT_BD):
     if flt is None:
         bits = jnp.zeros((8,), dtype=jnp.uint32)
         num_bits, num_hashes, use_filter = 256, 1, False
@@ -105,5 +140,7 @@ def fused_probe(
         bands=bands,
         rows=rows,
         use_filter=use_filter,
+        bd=bd,
+        candidates=candidates,
         interpret=_interpret(),
     )

@@ -14,6 +14,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.configs.base import SHAPES  # noqa: E402
 from repro.configs.registry import (  # noqa: E402
     ARCH_IDS, get_config, shape_applicable,
@@ -60,7 +61,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, tuned: bool) -> dict:
 
     t0 = time.time()
     cell = build_cell(cfg, shape, mesh, **knobs)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(
             cell.fn,
             in_shardings=cell.in_shardings,

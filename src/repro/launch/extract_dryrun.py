@@ -17,6 +17,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.core.cost_model import ALGO_INDEX, ALGO_SSJOIN, CostParams  # noqa: E402
 from repro.core.eejoin import EEJoinConfig, EEJoinOperator  # noqa: E402
 from repro.core.plan import PlanSide  # noqa: E402
@@ -73,7 +74,7 @@ def main() -> None:
         return m.count, diag.bytes_shuffled, diag.max_received
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(job, in_shardings=(docs_sh,)).lower(docs)
         compiled = lowered.compile()
     ca = compiled.cost_analysis() or {}

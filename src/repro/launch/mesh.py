@@ -31,7 +31,13 @@ def make_cpu_mesh(data: int = 1, model: int = 1):
     return _make_mesh((data, model), ("data", "model"))
 
 
-def make_extraction_mesh(n_workers: int | None = None):
-    """Flat 1-axis mesh for the EE-Join extraction job."""
+def make_extraction_mesh(n_workers: int | None = None, axis: str = "workers"):
+    """Flat 1-axis worker pool for the EE-Join extraction job.
+
+    This is the device pool the sharded streaming driver
+    (``extraction/sharded.py``) maps document shards onto: one shard per
+    worker per wave, extra shards queueing into later waves. ``axis``
+    must match the driver's ``axis_name`` (default ``"workers"``).
+    """
     n = n_workers or len(jax.devices())
-    return _make_mesh((n,), ("workers",))
+    return _make_mesh((n,), (axis,))

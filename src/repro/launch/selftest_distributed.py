@@ -98,7 +98,25 @@ def main() -> None:
     }
     checks["hybrid_exact"] = got == want
 
-    # 5) distributed token histogram == numpy histogram
+    # 5) sharded streaming driver (kernel path, 1-doc shards -> 16
+    # shards over 8 devices = 2 waves, exercising the wave queue) ==
+    # unsharded fused execute
+    opk = EEJoinOperator(
+        c.dictionary,
+        EEJoinConfig(
+            gamma=gamma, max_candidates=2048, result_capacity=8192, use_kernel=True
+        ),
+    )
+    plan = forced_plan(E, 0, PlanSide("index", "prefix"), PlanSide("ssjoin", "prefix"))
+    prepared = opk.prepare(plan, CostParams(num_devices=N_DEV))
+    want = opk.execute(prepared, docs).to_set()
+    with mesh:
+        got = opk.execute_sharded(
+            prepared, docs, mesh=mesh, shard_docs=1, tile_docs=1
+        ).to_set()
+    checks["sharded_driver_exact"] = got == want
+
+    # 6) distributed token histogram == numpy histogram
     from repro.extraction.distributed import distributed_token_histogram
 
     with mesh:

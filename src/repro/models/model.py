@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -147,7 +148,7 @@ class LM:
             # barrier pins the remat-saved carry to bf16 — without it XLA
             # hoists the next layernorm's f32 convert into the stacked
             # residual buffer, doubling the stash (§Perf iteration #10)
-            x = jax.lax.optimization_barrier(x)
+            x = optimization_barrier(x)
             return x, (aux_g["moe_aux"], aux_g["moe_drop_frac"])
 
         body = group_fn

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import set_mesh
 from repro.models.model import LM, fused_ce_loss
 from repro.train import checkpoint as ckpt_lib
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -124,7 +125,7 @@ def train(
     step_fn = jax.jit(make_train_step(model, opt_cfg, tcfg.microbatches))
     history = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start_step, tcfg.total_steps):
             batch = next(data_iter)
             params, opt_state, metrics = step_fn(params, opt_state, batch)

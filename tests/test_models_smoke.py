@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.configs.registry import ARCH_IDS, get_smoke_config
 from repro.models.model import build_model, lm_loss
 from repro.models.sharding import ShardingRules
+from repro.compat import set_mesh
 
 B, S = 2, 64
 
@@ -37,7 +38,7 @@ def test_forward_and_loss(arch):
     )
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1, cfg.vocab_size)
     ctx = _context(cfg, B)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         logits, aux = jax.jit(model.forward)(params, tokens, ctx)
     assert logits.shape == (B, S, cfg.padded_vocab)
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), f"{arch}: NaN/inf logits"
@@ -62,7 +63,7 @@ def test_train_step_decreases_loss(arch):
         logits, aux = model.forward(p, tokens, ctx)
         return lm_loss(cfg, logits, labels, moe_aux=aux["moe_aux"])[0]
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         l0, g = jax.jit(jax.value_and_grad(loss_fn))(params)
         gnorm = jax.tree.reduce(
             lambda a, b: a + b, jax.tree.map(lambda x: jnp.abs(x.astype(jnp.float32)).sum(), g)
@@ -84,7 +85,7 @@ def test_decode_matches_forward(arch):
     params, _ = model.init(jax.random.PRNGKey(0))
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, n), 1, cfg.vocab_size)
     ctx = _context(cfg, B)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         full_logits, _ = jax.jit(model.forward)(params, tokens, ctx)
         cache = model.init_cache(params, B, max_len=32, kv_splits=2, context=ctx)
         step = jax.jit(model.decode_step)

@@ -23,6 +23,7 @@ from repro.launch.specs import abstract_params, build_cell
 from repro.launch.tuning import default_microbatches, resolve
 from repro.models.model import build_model
 from repro.models.sharding import ShardingRules
+from repro.compat import set_mesh
 
 
 # --------------------------------------------------------------------------
@@ -139,7 +140,7 @@ def test_build_cell_lowers_on_cpu_mesh(mode):
     cfg = get_smoke_config("olmo-1b")
     shape = ShapeConfig("t", seq_len=64, global_batch=4, mode=mode)
     cell = build_cell(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(
             cell.fn,
             in_shardings=cell.in_shardings,

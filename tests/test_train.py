@@ -23,6 +23,7 @@ from repro.train.fault_tolerance import (
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state, lr_schedule
 from repro.train.trainer import TrainerConfig, make_train_step, train
 from repro.train import checkpoint as ckpt_lib
+from repro.compat import set_mesh
 
 
 @pytest.fixture(scope="module")
@@ -70,7 +71,7 @@ def test_microbatching_matches_full_batch(setup):
     batch = next(_data(setup, batch=4))
     s1 = jax.jit(make_train_step(model, opt, microbatches=1))
     s2 = jax.jit(make_train_step(model, opt, microbatches=2))
-    with jax.set_mesh(setup["mesh"]):
+    with set_mesh(setup["mesh"]):
         p1, _, m1 = s1(params, init_opt_state(params), batch)
         p2, _, m2 = s2(params, init_opt_state(params), batch)
     d = jax.tree.map(
@@ -232,7 +233,7 @@ def test_serve_engine_generates(setup):
 
     model = setup["model"]
     params, _ = model.init(jax.random.PRNGKey(0))
-    with jax.set_mesh(setup["mesh"]):
+    with set_mesh(setup["mesh"]):
         eng = ServeEngine(model, params, batch_slots=4, max_len=64)
         reqs = [Request(prompt=[5, 9, 12], max_new_tokens=4) for _ in range(6)]
         for r in reqs:
