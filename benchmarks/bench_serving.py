@@ -1,0 +1,187 @@
+"""Serving-subsystem bench: open-loop load vs latency/throughput.
+
+A seeded Poisson load generator drives the micro-batched probe/verify
+service at several offered loads (docs/s). Arrivals, admission, and
+batch composition run on a **virtual clock** (deterministic run-to-run
+for a given seed — the batcher's deadline flush compares virtual
+stamps only); each flushed batch is then executed for real, its probe
+and verify stage wall-times measured separately. Request latency is
+accounted with the two-stage pipeline schedule model
+(``serving.metrics.pipeline_schedule``) fed with those measured stage
+times — once with the double-buffered probe/verify **overlap enabled**
+(disjoint pools) and once **disabled** (one worker, stages
+back-to-back), so the overlap comparison is controlled: identical
+batches, identical measured stage times, only the schedule differs.
+
+As with the kernel benches, CPU interpret-mode wall-clock carries the
+*pipeline structure* claim, not TPU memory-system effects. Parity of
+the served matches against a one-shot ``eejoin.execute`` over the same
+documents is asserted before any row is emitted (CI fails on drift).
+
+Rows land in ``results/bench/serving.json`` (``serving_smoke.json``
+for the ``--smoke`` CI leg: loadgen N=16, one load level).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.eejoin import EEJoinConfig
+from repro.data.synth import make_corpus
+from repro.serving import (
+    BatcherConfig,
+    ExtractionService,
+    SessionCache,
+    make_pools,
+    one_shot_reference,
+    pipeline_schedule,
+)
+from repro.serving.metrics import percentiles
+from repro.serving.session import pure_plan
+
+from benchmarks.common import emit
+
+SEED = 23
+GAMMA = 0.8
+
+
+class _SimClock:
+    """Mutable virtual clock (the load loop advances ``t``)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _request_stream(corpus, n_requests: int, rate: float, seed: int):
+    """Seeded open-loop arrivals: (arrival_s, doc_id, tokens) tuples."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(16, corpus.doc_tokens.shape[1] + 1, size=n_requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    D = corpus.doc_tokens.shape[0]
+    return [
+        (float(arrivals[i]), i, corpus.doc_tokens[i % D, : lens[i]])
+        for i in range(n_requests)
+    ]
+
+
+def _run_level(cache, sess, stream, batch_docs: int, max_delay_s: float):
+    """Execute one load level (serial workers, virtual arrivals).
+
+    Returns (service, batch_records sorted by batch_id). Serial
+    execution keeps the per-stage timings clean; both overlap schedules
+    are derived from the same records afterwards.
+    """
+    clock = _SimClock()
+    svc = ExtractionService(
+        cache,
+        pools=make_pools(),
+        batcher_config=BatcherConfig(
+            max_batch_docs=batch_docs, max_delay_s=max_delay_s
+        ),
+        queue_capacity=4 * len(stream),
+        overlap=False,
+        clock=clock,
+    )
+    with svc:
+        for arrival, doc_id, toks in stream:
+            clock.t = arrival
+            svc.submit(doc_id, toks, sess.key, now=arrival)
+            svc.tick(now=arrival)
+        svc.drain()
+    records = sorted(svc.metrics.batch_records, key=lambda r: r["batch_id"])
+    return svc, records
+
+
+def _assert_parity(svc, sess, stream) -> int:
+    """Served matches must equal one-shot execute over the same docs."""
+    docs = [toks for _, _, toks in sorted(stream, key=lambda x: x[1])]
+    want = one_shot_reference(sess, docs)
+    got = svc.results_set()
+    assert got == want, (
+        f"serving parity drift: served {len(got)} matches vs one-shot "
+        f"{len(want)}"
+    )
+    assert svc.metrics.overflow_windows == 0, "parity run overflowed"
+    return len(want)
+
+
+def _schedule_rows(level_name, rate, stream, svc, records, n_matches):
+    """One row per overlap mode from the same measured stage times."""
+    ready = [r["flush_s"] for r in records]
+    probe_s = [r["probe_s"] for r in records]
+    verify_s = [r["verify_s"] for r in records]
+    batch_pos = {r["batch_id"]: i for i, r in enumerate(records)}
+    reqs = sorted(svc.completed, key=lambda r: r.req_id)
+    arrivals = {r.req_id: r.arrival_s for r in reqs}
+    first_arrival = min(a for a, _, _ in stream)
+    rows = []
+    for overlap in (True, False):
+        _, done = pipeline_schedule(ready, probe_s, verify_s, overlap=overlap)
+        lat = [done[batch_pos[r.batch_id]] - arrivals[r.req_id] for r in reqs]
+        span = max(done) - first_arrival
+        p = percentiles(lat)
+        rows.append({
+            "section": "serving",
+            "load": level_name,
+            "offered_docs_s": rate,
+            "overlap": overlap,
+            "requests": len(stream),
+            "rejected": svc.metrics.rejected,
+            "batches": len(records),
+            "occupancy_mean": float(np.mean([r["occupancy"] for r in records])),
+            "probe_s_mean": float(np.mean(probe_s)),
+            "verify_s_mean": float(np.mean(verify_s)),
+            "latency_p50_s": p["p50"],
+            "latency_p95_s": p["p95"],
+            "latency_p99_s": p["p99"],
+            "throughput_docs_s": svc.metrics.docs / span,
+            "lanes_per_s": svc.metrics.lanes / span,
+            "matches": n_matches,
+        })
+    return rows
+
+
+def run_serving(smoke: bool = False) -> list[dict]:
+    corpus = make_corpus(
+        num_docs=16 if smoke else 64,
+        doc_len=96,
+        vocab_size=2048,
+        num_entities=32,
+        seed=SEED,
+    )
+    cfg = EEJoinConfig(
+        gamma=GAMMA, max_candidates=8192, result_capacity=16384,
+        use_kernel=True,
+    )
+    cache = SessionCache()
+    sess = cache.get_or_create(corpus.dictionary, cfg,
+                               plan=pure_plan("prefix"))
+    n = 16 if smoke else 64
+    levels = (
+        (("smoke", 120.0),)
+        if smoke
+        else (("low", 40.0), ("med", 120.0), ("high", 360.0))
+    )
+    # warmup: absorb first-touch op compilation so measured stage times
+    # reflect steady-state serving, not cold caches
+    warm = _request_stream(corpus, min(n, 8), levels[0][1], SEED + 7)
+    _run_level(cache, sess, warm, batch_docs=8, max_delay_s=0.02)
+
+    rows = []
+    for name, rate in levels:
+        stream = _request_stream(corpus, n, rate, SEED + 1)
+        svc, records = _run_level(cache, sess, stream, batch_docs=8,
+                                  max_delay_s=0.02)
+        n_matches = _assert_parity(svc, sess, stream)
+        rows.extend(_schedule_rows(name, rate, stream, svc, records, n_matches))
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    emit("serving_smoke" if smoke else "serving", run_serving(smoke=smoke))
+
+
+if __name__ == "__main__":
+    main()

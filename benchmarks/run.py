@@ -12,6 +12,7 @@ Sections:
     signatures   §3.3 signature study (shuffle bytes / skew / recall)
     scaling      §6 dictionary/corpus scaling + plan crossover
     kernels      Pallas kernels vs jnp oracle (interpret mode)
+    serving      async probe/verify serving: load vs latency percentiles
     roofline     deliverable (g) reader over results/dryrun/
 """
 from __future__ import annotations
@@ -28,6 +29,7 @@ from benchmarks import (
     bench_roofline,
     bench_scaling,
     bench_search,
+    bench_serving,
     bench_signatures,
 )
 
@@ -39,6 +41,7 @@ SECTIONS = [
     ("signatures", bench_signatures.main),
     ("scaling", bench_scaling.main),
     ("kernels", bench_kernels.main),
+    ("serving", bench_serving.main),
     ("roofline", bench_roofline.main),
 ]
 
@@ -58,6 +61,9 @@ def main() -> None:
         t0 = time.time()
         bench_kernels.main(smoke=True)
         print(f"# [kernels --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        t0 = time.time()
+        bench_serving.main(smoke=True)
+        print(f"# [serving --smoke] done in {time.time() - t0:.1f}s", flush=True)
         return
     failures = []
     for name, fn in SECTIONS:

@@ -11,10 +11,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # are green since the repro.compat shims landed, so -x gates on everything.
 python -m pytest -x -q
 
-# Benchmark smoke: fused-pipeline parity/drift plus the sharded streaming
+# Benchmark smoke: fused-pipeline parity/drift, the sharded streaming
 # scenario (driver + in-kernel compaction epilogue vs legacy XLA
-# compaction; parity is asserted inside the bench, so drift fails CI).
+# compaction), and the serving loadgen (N=16 seeded open-loop requests
+# through the probe/verify split). Parity is asserted inside each bench,
+# so drift fails CI; serving rows land in results/bench/serving_smoke.json.
 python -m benchmarks.run --smoke
+
+# Serving smoke leg: the real-time (threaded, double-buffered) service
+# end to end via the launch entrypoint; --check asserts bit-parity of
+# the served matches against a one-shot eejoin.execute.
+python -m repro.launch.serve_extract --requests 16 --rate 400 \
+    --plan forced --check
 
 # Docs link check: every relative link in docs/*.md and README.md must
 # resolve inside the repo.

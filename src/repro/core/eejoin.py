@@ -193,8 +193,15 @@ class EEJoinOperator:
         return out, diags
 
     # -- execution (single shard; distributed wrapper in extraction/) --------
-    def _side_matches(self, cands: dict, side: PreparedSide) -> Matches:
-        """Probe + verify one prepared side over compacted candidates."""
+    def side_matches(self, cands: dict, side: PreparedSide) -> Matches:
+        """Probe + verify one prepared side over compacted candidates.
+
+        Public because it is the verify-stage body of the serving
+        pipeline (``repro.serving.service``): any candidate front end
+        that produces the ``compact_candidates`` dict — single-call,
+        sharded streaming, or a served micro-batch lane — feeds the
+        same probe+verify join through here.
+        """
         if side.side.algo == ALGO_INDEX:
             m: Matches | None = None
             for part in side.index_parts:
@@ -223,7 +230,7 @@ class EEJoinOperator:
                 cands = engine.compact_candidates(
                     base, surv, side.params.max_candidates
                 )
-            m = self._side_matches(cands, side)
+            m = self.side_matches(cands, side)
             out = m if out is None else merge_matches(out, m, cfg.result_capacity)
         assert out is not None, "empty plan"
         return out
@@ -261,7 +268,7 @@ class EEJoinOperator:
                 shard_docs=shard_docs,
                 tile_docs=tile_docs,
             )
-            m = self._side_matches(cands, side)
+            m = self.side_matches(cands, side)
             out = m if out is None else merge_matches(out, m, cfg.result_capacity)
         assert out is not None, "empty plan"
         return out

@@ -32,6 +32,7 @@ from repro.core.index import (
 )
 from repro.core.signatures import (
     SIG_LSH,
+    SIG_NAMES,
     SIG_VARIANT,
     EntitySignatures,
     LshParams,
@@ -62,7 +63,13 @@ def _bucket_of(sig, n_buckets: int, *, xp):
 
 @dataclasses.dataclass(frozen=True)
 class ExtractParams:
-    """Static knobs of one extraction sub-job (one side of a plan)."""
+    """Static knobs of one extraction sub-job (one side of a plan).
+
+    Construction validates every cross-field constraint up front (with
+    the failing knob and the fix in the message) so misconfigurations
+    surface here instead of as a shape/assert error deep inside a
+    Pallas kernel.
+    """
 
     gamma: float
     scheme: str  # index kind or signature scheme: word|prefix|lsh|variant
@@ -73,9 +80,67 @@ class ExtractParams:
     lsh: LshParams = LshParams()
     use_kernel: bool = False
     # use_kernel only: compact candidates inside the fused_probe epilogue
-    # (per-tile count + packed-index lanes). False keeps the legacy XLA
-    # cumsum+searchsorted pass over the packed bitmap as a live fallback.
-    kernel_compact: bool = True
+    # (per-tile count + packed-index lanes). None resolves to
+    # ``use_kernel`` (the epilogue lives inside the kernel, so it is the
+    # default exactly when the kernel path is on). False keeps the
+    # legacy XLA cumsum+searchsorted pass over the packed bitmap as a
+    # live fallback.
+    kernel_compact: bool | None = None
+
+    def __post_init__(self):
+        if self.kernel_compact is None:
+            object.__setattr__(self, "kernel_compact", self.use_kernel)
+        if self.scheme not in SIG_NAMES:
+            raise ValueError(
+                f"ExtractParams.scheme={self.scheme!r} is not a known "
+                f"index kind / signature scheme; pick one of {SIG_NAMES}"
+            )
+        if not 0.0 < self.gamma <= 1.0:
+            raise ValueError(
+                f"ExtractParams.gamma={self.gamma} must be in (0, 1]: it is "
+                "the similarity threshold of Def. 1 (1.0 = exact match)"
+            )
+        if self.max_candidates <= 0:
+            raise ValueError(
+                f"ExtractParams.max_candidates={self.max_candidates} must be "
+                "positive: it is the static candidate-buffer capacity (and "
+                "the [G, NC] lane width of ops.fused_probe_compact — the "
+                "select_from_tiles merge requires lane width >= capacity)"
+            )
+        if self.result_capacity <= 0:
+            raise ValueError(
+                f"ExtractParams.result_capacity={self.result_capacity} must "
+                "be positive: it is the static Matches-buffer capacity"
+            )
+        if self.lsh.bands <= 0 or self.lsh.rows <= 0:
+            raise ValueError(
+                f"ExtractParams.lsh bands={self.lsh.bands} rows="
+                f"{self.lsh.rows} must both be positive"
+            )
+        if self.kernel_compact and not self.use_kernel:
+            raise ValueError(
+                "ExtractParams(kernel_compact=True) requires use_kernel=True: "
+                "the compaction epilogue runs inside the fused_probe Pallas "
+                "kernel, so there is no epilogue to enable on the unfused "
+                "path (set use_kernel=True, or leave kernel_compact unset "
+                "to track use_kernel automatically)"
+            )
+
+
+def check_flat_index_space(D: int, T: int, max_len: int) -> None:
+    """Fail fast (and actionably) when flat window indices overflow int32.
+
+    The [G, NC] candidate lanes carry flat (doc*T + pos)*L + (len-1)
+    window indices as int32 end to end; past 2**31 the row offsets in
+    ``sharded.stream_probe_tiles`` would wrap silently. Checked at every
+    lane-producing entry point (sharded driver, serving pipeline).
+    """
+    if D * T * max_len >= 2**31:
+        raise ValueError(
+            f"flat window index space D*T*L = {D}x{T}x{max_len} = "
+            f"{D * T * max_len} overflows int32 lane indices; split the "
+            "corpus into separate driver calls (or shrink shard/batch rows)"
+        )
 
 
 @dataclasses.dataclass

@@ -157,14 +157,31 @@ def stream_filter_compact(
     return engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
 
 
-def _shard_lane(docs, row_offset, max_len, flt, params, tile_docs):
-    """Per-device body: stream one shard, reduce to a [NC] shard lane.
+def shard_lane(docs, row_offset, max_len, flt, params,
+               tile_docs: int = DEFAULT_TILE_DOCS):
+    """Stream one doc shard and reduce it to a single candidate lane —
+    the *wire unit* of every lane-shipping consumer (sharded driver
+    waves, the serving probe→verify handoff).
 
-    Returns ``(cand [1, NC], count [1])`` — the shard's first NC
-    survivors as ascending global flat indices plus its true survivor
-    count, i.e. exactly one row of a ``select_from_tiles`` input, so
-    shard lanes compose across waves the same way tile lanes compose
-    within a shard.
+    Lane wire format (``[G, NC]`` with ``G = 1`` here):
+
+    * ``cand`` — ``[1, NC]`` **int32**: the shard's first ``NC``
+      (``params.max_candidates``) surviving windows as **ascending**
+      global flat indices ``(doc * T + pos) * L + (len - 1)``, where
+      ``doc`` is globalised by ``row_offset`` rows and ``L`` is
+      ``max_len``. Unused slots hold the sentinel ``-1`` (PAD); real
+      indices are always ``>= 0``, so sign is the validity bit.
+    * ``count`` — ``[1]`` **int32**: the shard's *true* survivor total,
+      which may exceed ``NC`` (overflow is surfaced downstream, never
+      silent).
+
+    One ``(cand, count)`` pair is exactly one row of a
+    ``results.select_from_tiles`` input, so lanes compose hierarchically
+    — tile lanes into a shard lane, shard lanes across waves or
+    micro-batches into a global selection — and are cheap enough
+    (``(1 + NC) * 4`` bytes) to ship across hosts or device pools.
+    ``row_offset`` may be a traced scalar (e.g. a worker index inside
+    ``shard_map``).
     """
     NC = params.max_candidates
     counts, cands = stream_probe_tiles(
@@ -202,12 +219,7 @@ def sharded_filter_compact(
         # no epilogue -> no lanes to shard over; single-call fallback
         return engine.fused_filter_compact(doc_tokens, max_len, flt, params)
     D, T = doc_tokens.shape
-    # flat window indices (doc*T + pos)*L + (len-1) are int32 end to end;
-    # past this bound the offsets in stream_probe_tiles would wrap silently
-    assert D * T * max_len < 2**31, (
-        f"flat window index space {D}x{T}x{max_len} overflows int32; "
-        "split the corpus into separate driver calls"
-    )
+    engine.check_flat_index_space(D, T, max_len)
     n_workers = int(mesh.shape[axis_name]) if mesh is not None else 1
     spec = plan_shards(D, n_workers, shard_docs, tile_docs)
     NC = params.max_candidates
@@ -221,7 +233,7 @@ def sharded_filter_compact(
     lanes, totals = [], []
     if mesh is None:
         for s in range(n_waves * n_workers):
-            lane, n = _shard_lane(
+            lane, n = shard_lane(
                 padded[s * spec.shard_docs:(s + 1) * spec.shard_docs],
                 s * spec.shard_docs,
                 max_len, flt, params, spec.tile_docs,
@@ -230,7 +242,7 @@ def sharded_filter_compact(
             totals.append(n)
     else:
         def wave_body(docs, row_off):
-            return _shard_lane(
+            return shard_lane(
                 docs, row_off[0], max_len, flt, params, spec.tile_docs
             )
 

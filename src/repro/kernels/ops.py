@@ -115,7 +115,21 @@ def fused_probe_compact(
     traffic stays well under the bitmap bytes it replaces — see
     ``fused_probe.compact_tile_height``.
     """
-    assert candidates > 0
+    if candidates <= 0:
+        raise ValueError(
+            f"fused_probe_compact(candidates={candidates}): the compaction "
+            "epilogue needs a positive [G, NC] lane width (NC = "
+            "ExtractParams.max_candidates); use fused_probe() if you only "
+            "want the packed survival bitmap"
+        )
+    if max_len > 32:
+        raise ValueError(
+            f"fused_probe_compact(max_len={max_len}): the packed survival "
+            "bitmap holds one window length per uint32 bit, so the epilogue "
+            "supports max_len <= 32; route longer windows through "
+            "engine.fused_filter_compact, which falls back to the "
+            "standalone window_filter kernel + dense compaction"
+        )
     D, T = doc_tokens.shape
     bd = _fp.compact_tile_height(D, T, candidates)
     return _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,

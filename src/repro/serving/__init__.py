@@ -1,0 +1,51 @@
+"""Async extraction serving: the EE-Join operator as an online service.
+
+The paper frames the operator as an offline MapReduce job; this package
+turns the batch pipeline into a request/response system serving a
+stream of documents against cached dictionaries:
+
+    requests ─► queue.AdmissionQueue       (bounded, backpressure)
+                  └─► batcher.MicroBatcher (length buckets, deadline flush)
+                        └─► service.ExtractionService
+                              probe pool  ─ shard_lane ─►  verify pool
+                              (fused_probe,  [G, NC] lane   (sig probe +
+                               compaction     handoff,       jaccard_verify)
+                               epilogue)      depth-2 queue)
+                  session.SessionCache: dictionary fingerprint ->
+                      prepared filter / sig tables / plan (shared
+                      across requests, multiple dictionaries live)
+                  metrics.ServingMetrics: depth, occupancy, p50/p95/p99
+
+Results are bit-identical to a one-shot ``eejoin.execute`` over the
+same documents (asserted in ``tests/test_serving.py`` and re-checked by
+``benchmarks/bench_serving.py``).
+"""
+from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
+from repro.serving.metrics import ServingMetrics, pipeline_schedule
+from repro.serving.pools import DevicePools, make_pools
+from repro.serving.queue import AdmissionQueue, ExtractRequest
+from repro.serving.service import ExtractionService, one_shot_reference
+from repro.serving.session import (
+    DictionarySession,
+    SessionCache,
+    dictionary_fingerprint,
+    pure_plan,
+)
+
+__all__ = [
+    "AdmissionQueue",
+    "BatcherConfig",
+    "DevicePools",
+    "DictionarySession",
+    "ExtractRequest",
+    "ExtractionService",
+    "MicroBatch",
+    "MicroBatcher",
+    "ServingMetrics",
+    "SessionCache",
+    "dictionary_fingerprint",
+    "make_pools",
+    "one_shot_reference",
+    "pipeline_schedule",
+    "pure_plan",
+]

@@ -1,0 +1,170 @@
+"""Micro-batcher: variable-length documents -> [D, T] probe tiles.
+
+Admitted requests are routed into *bins* keyed by (session, length
+bucket): each bucket is a power-of-two-ish tile width T and a document
+joins the smallest bucket that holds it, so PAD waste is bounded by the
+bucket ratio instead of the worst document in the batch. A bin flushes
+into an immutable ``MicroBatch`` when either
+
+* it is **full** (``max_batch_docs`` rows — the [D, T] tile the probe
+  pool consumes), or
+* its **deadline** expires (oldest admitted request waited
+  ``max_delay_s`` — the latency/occupancy trade of every micro-batching
+  serving system).
+
+Flush ordering is deterministic: due bins flush in (session, bucket)
+order and rows within a batch in admission order, so a seeded load
+generator reproduces the exact same batch stream run-to-run (asserted
+in tests; the serving benches depend on it).
+
+Batch geometry reuses the sharded driver's ``plan_shards``: each batch
+carries the ``ShardSpec`` that the probe stage streams tiles with, so
+serving and offline sharding agree on tile heights by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dictionary import PAD
+from repro.extraction.sharded import ShardSpec, plan_shards
+from repro.serving.queue import ExtractRequest
+
+#: default length buckets (tile widths T); docs longer than the last
+#: bucket are rejected at admission — growing this tuple is the knob.
+DEFAULT_BUCKETS = (32, 64, 128, 256, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    """Static micro-batching knobs."""
+
+    max_batch_docs: int = 32  # rows per flushed [D, T] batch
+    max_delay_s: float = 0.005  # deadline from a bin's oldest admission
+    buckets: tuple[int, ...] = DEFAULT_BUCKETS
+    tile_docs: int | None = None  # probe-stream tile rows (None: driver default)
+
+    def __post_init__(self):
+        if self.max_batch_docs <= 0:
+            raise ValueError(
+                f"BatcherConfig.max_batch_docs={self.max_batch_docs} must be "
+                "positive (rows per flushed [D, T] batch)"
+            )
+        if self.max_delay_s < 0:
+            raise ValueError(
+                f"BatcherConfig.max_delay_s={self.max_delay_s} must be >= 0 "
+                "(0 flushes every poll: pure latency mode)"
+            )
+        if not self.buckets or any(
+            b <= 0 or (i and b <= self.buckets[i - 1])
+            for i, b in enumerate(self.buckets)
+        ):
+            raise ValueError(
+                f"BatcherConfig.buckets={self.buckets} must be a non-empty "
+                "strictly ascending tuple of tile widths"
+            )
+
+    def bucket_for(self, n_tokens: int) -> int:
+        """Smallest bucket width holding ``n_tokens`` (admission check)."""
+        for b in self.buckets:
+            if n_tokens <= b:
+                return b
+        raise ValueError(
+            f"document of {n_tokens} tokens exceeds the largest length "
+            f"bucket {self.buckets[-1]}; add a bigger bucket to "
+            "BatcherConfig.buckets or split the document upstream"
+        )
+
+
+@dataclasses.dataclass
+class MicroBatch:
+    """One flushed [D, T] unit of probe work (immutable after flush)."""
+
+    batch_id: int
+    session_key: str
+    bucket: int  # tile width T
+    reqs: list[ExtractRequest]
+    docs: np.ndarray  # [Db, T] int32, PAD-padded rows in admission order
+    spec: ShardSpec  # probe-stream geometry (plan_shards of this batch)
+    flush_s: float
+    capacity: int  # max_batch_docs at flush time
+
+    @property
+    def rows(self) -> int:
+        return len(self.reqs)
+
+    @property
+    def occupancy(self) -> float:
+        return self.rows / self.capacity
+
+
+class MicroBatcher:
+    """Length-bucketed bins with deadline-based flush (single-threaded:
+    the service's ingest loop owns it; threads only see flushed
+    batches)."""
+
+    def __init__(self, config: BatcherConfig = BatcherConfig()):
+        self.config = config
+        self._bins: dict[tuple[str, int], list[ExtractRequest]] = {}
+        self._next_batch = 0
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self._bins.values())
+
+    def add(self, req: ExtractRequest) -> None:
+        bucket = self.config.bucket_for(len(req.tokens))
+        self._bins.setdefault((req.session_key, bucket), []).append(req)
+
+    def _make_batch(self, key: tuple[str, int], reqs: list[ExtractRequest],
+                    now: float) -> MicroBatch:
+        session_key, bucket = key
+        docs = np.full((len(reqs), bucket), PAD, dtype=np.int32)
+        for i, r in enumerate(reqs):
+            docs[i, : len(r.tokens)] = r.tokens
+            r.flush_s = now
+        batch = MicroBatch(
+            batch_id=self._next_batch,
+            session_key=session_key,
+            bucket=bucket,
+            reqs=reqs,
+            docs=docs,
+            spec=plan_shards(
+                len(reqs),
+                n_workers=1,
+                shard_docs=len(reqs),
+                tile_docs=self.config.tile_docs,
+            ),
+            flush_s=now,
+            capacity=self.config.max_batch_docs,
+        )
+        self._next_batch += 1
+        return batch
+
+    def poll(self, now: float) -> list[MicroBatch]:
+        """Flush every due bin: full, or oldest admission past deadline.
+
+        Deterministic order: (session, bucket) ascending; a bin holding
+        more than ``max_batch_docs`` rows (possible when one ``poll``
+        admitted a burst) flushes in admission-order chunks.
+        """
+        return self._flush(now, force=False)
+
+    def flush_all(self, now: float) -> list[MicroBatch]:
+        """Drain every bin regardless of deadline (shutdown / drain)."""
+        return self._flush(now, force=True)
+
+    def _flush(self, now: float, force: bool) -> list[MicroBatch]:
+        out: list[MicroBatch] = []
+        cap = self.config.max_batch_docs
+        for key in sorted(self._bins):
+            reqs = self._bins.pop(key)
+            while len(reqs) >= cap:  # full bins always flush
+                head, reqs = reqs[:cap], reqs[cap:]
+                out.append(self._make_batch(key, head, now))
+            due = reqs and (force or now - reqs[0].arrival_s >= self.config.max_delay_s)
+            if due:
+                out.append(self._make_batch(key, reqs, now))
+            elif reqs:
+                self._bins[key] = reqs
+        return out

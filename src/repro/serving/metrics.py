@@ -1,0 +1,154 @@
+"""Serving metrics: queue depth, batch occupancy, latency percentiles,
+lane throughput — plus the two-stage pipeline schedule model the benches
+use to account latency under overlap.
+
+Everything here is host-side bookkeeping (plain floats/ints, numpy for
+percentiles): recording a sample never touches a device or a jit cache,
+so metrics cannot perturb the pipeline they observe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentiles(xs, ps=PERCENTILES) -> dict[str, float]:
+    """{'p50': ..., 'p95': ..., 'p99': ...} (NaN on empty input)."""
+    if len(xs) == 0:
+        return {f"p{p}": float("nan") for p in ps}
+    arr = np.asarray(xs, dtype=np.float64)
+    vals = np.percentile(arr, ps)
+    return {f"p{p}": float(v) for p, v in zip(ps, vals)}
+
+
+def pipeline_schedule(
+    ready_s,
+    probe_s,
+    verify_s,
+    overlap: bool,
+    buffer_depth: int = 2,
+):
+    """Completion times of batches through the two-stage pipeline.
+
+    ``ready_s[i]`` is when batch i is flushed (available to probe);
+    ``probe_s``/``verify_s`` its measured stage service times. With
+    ``overlap`` the stages run on disjoint pools connected by a
+    ``buffer_depth``-slot handoff queue: probe i starts once probe i-1
+    finished AND verify has started draining batch i-buffer_depth (the
+    double-buffer backpressure), verify i once probe i finished AND
+    verify i-1 finished. Without overlap one worker runs both stages
+    back-to-back. Returns (probe_done, verify_done) float arrays —
+    request latency is ``verify_done[batch] - arrival``.
+    """
+    n = len(ready_s)
+    assert len(probe_s) == n and len(verify_s) == n
+    probe_done = np.zeros(n)
+    verify_done = np.zeros(n)
+    verify_start = np.zeros(n)
+    for i in range(n):
+        if overlap:
+            start_p = max(ready_s[i], probe_done[i - 1] if i else 0.0)
+            if i >= buffer_depth:
+                # handoff queue full until verify pulls batch i - depth
+                start_p = max(start_p, verify_start[i - buffer_depth])
+            probe_done[i] = start_p + probe_s[i]
+            verify_start[i] = max(probe_done[i],
+                                  verify_done[i - 1] if i else 0.0)
+            verify_done[i] = verify_start[i] + verify_s[i]
+        else:
+            start = max(ready_s[i], verify_done[i - 1] if i else 0.0)
+            probe_done[i] = start + probe_s[i]
+            verify_start[i] = probe_done[i]
+            verify_done[i] = verify_start[i] + verify_s[i]
+    return probe_done, verify_done
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    """Mutable counters + samples for one service run."""
+
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    batches: int = 0
+    lanes: int = 0  # [1, NC] probe->verify handoffs (one per batch per side)
+    docs: int = 0
+    overflow_windows: int = 0  # candidate-buffer overflow, summed over batches
+    depth_samples: list = dataclasses.field(default_factory=list)
+    occupancy_samples: list = dataclasses.field(default_factory=list)
+    batch_records: list = dataclasses.field(default_factory=list)  # per-batch rows
+    latencies_s: list = dataclasses.field(default_factory=list)
+    probe_s: list = dataclasses.field(default_factory=list)
+    verify_s: list = dataclasses.field(default_factory=list)
+    first_arrival_s: float = float("nan")
+    last_done_s: float = float("nan")
+
+    def record_submit(self, accepted: bool, depth: int, now: float) -> None:
+        self.submitted += 1
+        if accepted:
+            if np.isnan(self.first_arrival_s):
+                self.first_arrival_s = now
+        else:
+            self.rejected += 1
+        self.depth_samples.append(depth)
+
+    def record_batch(self, batch_id: int, rows: int, occupancy: float,
+                     n_lanes: int, flush_s: float, probe_s: float,
+                     verify_s: float, overflow: int = 0) -> None:
+        self.batches += 1
+        self.docs += rows
+        self.lanes += n_lanes
+        self.occupancy_samples.append(occupancy)
+        self.probe_s.append(probe_s)
+        self.verify_s.append(verify_s)
+        self.overflow_windows += overflow
+        self.batch_records.append({
+            "batch_id": batch_id,
+            "rows": rows,
+            "occupancy": occupancy,
+            "flush_s": flush_s,
+            "probe_s": probe_s,
+            "verify_s": verify_s,
+        })
+
+    def record_done(self, latency_s: float, done_s: float) -> None:
+        self.completed += 1
+        self.latencies_s.append(latency_s)
+        if np.isnan(self.last_done_s) or done_s > self.last_done_s:
+            self.last_done_s = done_s
+
+    @property
+    def elapsed_s(self) -> float:
+        return self.last_done_s - self.first_arrival_s
+
+    def summary(self) -> dict:
+        """Flat dict: the serving bench row / entrypoint report."""
+        lat = percentiles(self.latencies_s)
+        elapsed = self.elapsed_s
+        rate = (lambda x: x / elapsed) if elapsed and elapsed > 0 else (
+            lambda x: float("nan"))
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "completed": self.completed,
+            "batches": self.batches,
+            "queue_depth_mean": float(np.mean(self.depth_samples))
+            if self.depth_samples else 0.0,
+            "queue_depth_max": int(max(self.depth_samples))
+            if self.depth_samples else 0,
+            "occupancy_mean": float(np.mean(self.occupancy_samples))
+            if self.occupancy_samples else 0.0,
+            "latency_p50_s": lat["p50"],
+            "latency_p95_s": lat["p95"],
+            "latency_p99_s": lat["p99"],
+            "probe_s_mean": float(np.mean(self.probe_s))
+            if self.probe_s else 0.0,
+            "verify_s_mean": float(np.mean(self.verify_s))
+            if self.verify_s else 0.0,
+            "docs_per_s": rate(self.docs),
+            "lanes_per_s": rate(self.lanes),
+            "overflow_windows": self.overflow_windows,
+        }

@@ -1,0 +1,69 @@
+"""Disjoint probe / verify device pools.
+
+The two stages of the serving pipeline have opposite resource shapes:
+*probe* is bandwidth-bound (stream doc tiles through ``fused_probe``,
+emit tiny [G, NC] lanes) while *verify* is compute-bound (gather
+windows, signature-table probes, the ``jaccard_verify`` pair join).
+Running them on **disjoint** device pools lets batch i+1's probe overlap
+batch i's verify with no device contention — the [G, NC] lane is the
+only traffic between the pools (see ``extraction.sharded.shard_lane``
+for the wire format).
+
+On a one-device host (CPU CI) both pools degenerate to the same device
+(``shared=True``): the pipeline structure — double-buffered handoff,
+per-stage placement, per-stage timing — is identical, only the physical
+overlap is not observable, exactly like interpret-mode kernel runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class DevicePools:
+    """Probe and verify device pools (disjoint unless ``shared``)."""
+
+    probe: tuple[Any, ...]
+    verify: tuple[Any, ...]
+    shared: bool  # True only on the one-device degenerate host
+
+    def probe_device(self, batch_id: int):
+        """Round-robin probe placement for a batch."""
+        return self.probe[batch_id % len(self.probe)]
+
+    def verify_device(self, batch_id: int):
+        return self.verify[batch_id % len(self.verify)]
+
+    def describe(self) -> str:
+        tag = "shared" if self.shared else "disjoint"
+        return (
+            f"probe pool {len(self.probe)} device(s), verify pool "
+            f"{len(self.verify)} device(s) ({tag})"
+        )
+
+
+def make_pools(
+    devices: Sequence[Any] | None = None,
+    probe_fraction: float = 0.5,
+) -> DevicePools:
+    """Split the visible devices into disjoint probe/verify pools.
+
+    ``probe_fraction`` of the devices (at least one) go to the probe
+    pool, the rest to verify. With a single device both pools alias it —
+    flagged ``shared`` so callers (metrics, benches) can report that
+    overlap is structural only.
+    """
+    devs = tuple(devices if devices is not None else jax.devices())
+    if not devs:
+        raise ValueError("make_pools: no devices visible")
+    if not 0.0 < probe_fraction < 1.0:
+        raise ValueError(
+            f"make_pools(probe_fraction={probe_fraction}) must be in (0, 1)"
+        )
+    if len(devs) == 1:
+        return DevicePools(probe=devs, verify=devs, shared=True)
+    n_probe = min(max(1, round(len(devs) * probe_fraction)), len(devs) - 1)
+    return DevicePools(probe=devs[:n_probe], verify=devs[n_probe:], shared=False)

@@ -1,0 +1,101 @@
+"""Bounded request queue with admission control and backpressure.
+
+The front door of the serving subsystem: producers (load generators,
+RPC handlers) submit variable-length token documents; the service loop
+drains admitted requests into the micro-batcher. The queue is the one
+place load is shed — ``try_submit`` rejects when full (admission
+control, surfaced in metrics as ``rejected``). Backpressure lives one
+level up: ``ExtractionService.submit(block=True)`` makes the producer
+itself drain the queue into the batcher (``tick``) until space frees —
+the ingest thread owns the batcher, so no second thread is needed.
+Everything downstream is therefore bounded: batcher bins cap at one
+un-flushed batch per (session, bucket), and the probe→verify handoff
+holds at most two lanes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ExtractRequest:
+    """One in-flight extraction request (a single document).
+
+    ``tokens`` is the raw variable-length int32 token sequence (PAD-free
+    tail; the batcher pads to its length bucket). ``doc_id`` is the
+    caller's global document id — match tuples are reported against it,
+    so serving results can be compared 1:1 with a one-shot batch run.
+    Timestamps are clock stamps filled in as the request moves through
+    the pipeline (arrival → flush → done).
+    """
+
+    req_id: int
+    doc_id: int
+    tokens: np.ndarray
+    session_key: str
+    arrival_s: float
+    error: str | None = None  # set when the request's batch failed
+    flush_s: float = -1.0
+    done_s: float = -1.0
+    batch_id: int = -1
+    # match tuples (doc_id, pos, length, entity, score) filled at completion
+    matches: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.arrival_s if self.done else float("nan")
+
+
+class AdmissionQueue:
+    """Thread-safe bounded FIFO of admitted requests.
+
+    ``try_submit`` is the admission-control path: reject-and-count when
+    the system is saturated (open-loop producers read ``rejected`` as
+    shed load). Request ids are assigned at admission, in admission
+    order, so downstream tie-breaks (batcher flush ordering) are
+    deterministic for a deterministic producer.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity <= 0:
+            raise ValueError(f"AdmissionQueue capacity={capacity} must be positive")
+        self.capacity = capacity
+        self._q: deque[ExtractRequest] = deque()
+        self._lock = threading.Lock()
+        self._ids = itertools.count()
+        self.accepted = 0
+        self.rejected = 0
+
+    def try_submit(self, doc_id, tokens, session_key: str, now: float
+                   ) -> ExtractRequest | None:
+        """Admit or reject (never block): returns None when full."""
+        with self._lock:
+            if len(self._q) >= self.capacity:
+                self.rejected += 1
+                return None
+            req = ExtractRequest(
+                req_id=next(self._ids),
+                doc_id=doc_id,
+                tokens=np.asarray(tokens, dtype=np.int32).reshape(-1),
+                session_key=session_key,
+                arrival_s=now,
+            )
+            self._q.append(req)
+            self.accepted += 1
+            return req
+
+    def take(self, max_n: int | None = None) -> list[ExtractRequest]:
+        """Pop up to ``max_n`` requests in FIFO order (all when None)."""
+        with self._lock:
+            n = len(self._q) if max_n is None else min(max_n, len(self._q))
+            return [self._q.popleft() for _ in range(n)]
+
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._q)

@@ -1,0 +1,401 @@
+"""Two-stage async extraction service: probe pool -> lanes -> verify pool.
+
+The pipeline splits one request's work exactly where the sharded driver
+splits a shard's: the *probe* stage streams a micro-batch's ``[D, T]``
+tile through ``fused_probe`` (with the in-kernel compaction epilogue)
+and reduces it to one ``[1, NC]`` candidate lane per plan side
+(``extraction.sharded.shard_lane`` — the wire unit, ``(1 + NC) * 4``
+bytes); the *verify* stage re-expands the lane into compacted candidate
+windows and runs the plan's probe+verify join
+(``EEJoinOperator.side_matches``). The stages run on **disjoint device
+pools** connected by a **double-buffered handoff queue** (depth 2):
+while the verify pool joins batch i, the probe pool is already
+streaming batch i+1 — the serving-time analogue of the driver's
+per-tile DMA overlap.
+
+Results are bit-identical to a one-shot ``eejoin.execute`` over the
+same documents (windows never span documents and lane merging is exact,
+so micro-batching cannot change any match) — asserted per scheme and
+geometry in ``tests/test_serving.py``.
+
+Threading model: the caller's thread owns ingest (``submit`` → admission
+queue → ``tick`` → micro-batcher); a probe worker and a verify worker
+own the two stages (one combined worker when ``overlap=False``). All
+queues are bounded, so a slow verify pool backpressures probe, a slow
+probe backpressures the flush queue, and the admission queue sheds or
+blocks producers — nothing in the pipeline can grow without limit.
+"""
+from __future__ import annotations
+
+import queue as _pyqueue
+import threading
+import time
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.extraction import engine
+from repro.extraction.results import Matches, merge_matches, select_from_tiles
+from repro.extraction.sharded import shard_lane
+from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
+from repro.serving.metrics import ServingMetrics
+from repro.serving.pools import DevicePools, make_pools
+from repro.serving.queue import AdmissionQueue, ExtractRequest
+from repro.serving.session import SessionCache
+
+#: probe->verify handoff queue depth: 2 slots double-buffer the pools
+#: (verify drains batch i while probe fills batch i+1).
+HANDOFF_DEPTH = 2
+
+
+def one_shot_reference(session, docs) -> set[tuple[int, int, int, int]]:
+    """The serving parity target: one-shot ``execute`` over ``docs``.
+
+    Pads the variable-length documents into a single [N, T] array (row
+    i = doc_id i) and runs the session's prepared plan in one batch
+    call. ``ExtractionService.results_set()`` over the same documents
+    must equal this set — the single reference implementation used by
+    tests, the serving bench, and ``serve_extract --check``.
+    """
+    from repro.core.dictionary import PAD
+
+    docs = [np.asarray(d, dtype=np.int32).reshape(-1) for d in docs]
+    T = max((len(d) for d in docs), default=1)
+    padded = np.full((len(docs), max(T, 1)), PAD, dtype=np.int32)
+    for i, d in enumerate(docs):
+        padded[i, : len(d)] = d
+    return session.operator.execute(
+        session.prepared, jnp.asarray(padded)
+    ).to_set()
+
+
+class _Handoff:
+    """One probed batch in flight between the pools."""
+
+    __slots__ = ("batch", "lanes", "probe_s")
+
+    def __init__(self, batch: MicroBatch, lanes: list, probe_s: float):
+        self.batch = batch
+        self.lanes = lanes  # per plan side: (count [1] i32, cand [1, NC] i32)
+        self.probe_s = probe_s
+
+
+class ExtractionService:
+    """Online micro-batched EE-Join extraction over device pools."""
+
+    def __init__(
+        self,
+        sessions: SessionCache,
+        pools: DevicePools | None = None,
+        batcher_config: BatcherConfig | None = None,
+        queue_capacity: int = 256,
+        overlap: bool = True,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.sessions = sessions
+        self.pools = pools or make_pools()
+        self.batcher = MicroBatcher(batcher_config or BatcherConfig())
+        self.queue = AdmissionQueue(queue_capacity)
+        self.overlap = overlap
+        self.clock = clock
+        self.metrics = ServingMetrics()
+        self.completed: list[ExtractRequest] = []
+        # fail at config time, not deep inside the kernel: the largest
+        # possible batch must keep flat lane indices inside int32
+        engine.check_flat_index_space(
+            self.batcher.config.max_batch_docs,
+            self.batcher.config.buckets[-1],
+            32,
+        )
+        self._flush_q: _pyqueue.Queue = _pyqueue.Queue()
+        self._handoff_q: _pyqueue.Queue = _pyqueue.Queue(maxsize=HANDOFF_DEPTH)
+        self._workers: list[threading.Thread] = []
+        self._started = False
+        self._lock = threading.Lock()  # completed-list + metrics writes
+        self._ingest_lock = threading.Lock()  # batcher is not thread-safe
+        self.errors: list[tuple[int, Exception]] = []  # (batch_id, exc)
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        """Spawn the stage workers (idempotent)."""
+        if self._started:
+            return
+        self._started = True
+        if self.overlap:
+            targets = [self._probe_worker, self._verify_worker]
+        else:
+            targets = [self._serial_worker]
+        for fn in targets:
+            t = threading.Thread(target=fn, daemon=True, name=fn.__name__)
+            t.start()
+            self._workers.append(t)
+
+    def stop(self) -> None:
+        """Drain and terminate the workers.
+
+        The shutdown sentinel and joins run even when ``drain``
+        re-raises a batch failure — workers never outlive the service.
+        """
+        if not self._started:
+            return
+        try:
+            self.drain()
+        finally:
+            self._flush_q.put(None)
+            for t in self._workers:
+                t.join()
+            self._workers.clear()
+            self._started = False
+
+    def __enter__(self) -> "ExtractionService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---------------------------------------------------------------- ingest
+    def submit(self, doc_id: int, tokens, session_key: str,
+               now: float | None = None,
+               block: bool = False) -> ExtractRequest | None:
+        """Admit one document; None when shed by admission control.
+
+        ``block=True`` switches to backpressure mode: instead of being
+        rejected, the producer itself drains the admission queue into
+        the batcher (``tick``) until space frees — the calling thread
+        owns ingest, so backpressure is "do the flushing work", not
+        "wait for someone else to". Raises ValueError on caller errors —
+        unknown session, document longer than the largest length
+        bucket — rather than shedding them silently.
+        """
+        try:
+            sess = self.sessions.get(session_key)
+        except KeyError:
+            raise ValueError(
+                f"submit: unknown session {session_key!r}; create it first "
+                "with SessionCache.get_or_create(dictionary, ...)"
+            ) from None
+        self.batcher.config.bucket_for(len(np.asarray(tokens).reshape(-1)))
+        now = self.clock() if now is None else now
+        req = self.queue.try_submit(doc_id, tokens, session_key, now)
+        while req is None and block:
+            # one tick always empties the admission queue into the bins,
+            # so a single pass frees space; loop for thread-safety
+            self.tick(now)
+            req = self.queue.try_submit(doc_id, tokens, session_key, now)
+        if req is not None:
+            with self._lock:  # vs the -= in _complete/_fail_batch
+                sess.inflight += 1  # pins the session against LRU eviction
+        self.metrics.record_submit(req is not None, self.queue.depth(), now)
+        return req
+
+    def tick(self, now: float | None = None) -> int:
+        """Move admitted requests into bins and flush due batches.
+
+        Returns the number of batches handed to the probe stage. The
+        ingest loop (or the load generator) calls this between submits;
+        ``drain`` calls it with a forced flush.
+        """
+        now = self.clock() if now is None else now
+        with self._ingest_lock:  # concurrent producers may tick via submit
+            for req in self.queue.take():
+                self.batcher.add(req)
+            return self._dispatch(self.batcher.poll(now))
+
+    def drain(self) -> None:
+        """Force-flush everything pending and wait until it completes.
+
+        Re-raises the first stage-worker failure (with its batch id)
+        after the queues empty: a failed batch marks its requests
+        ``error`` and never hangs the join (see ``_fail_batch``).
+        """
+        if not self._started:
+            self.start()
+        now = self.clock()
+        with self._ingest_lock:
+            for req in self.queue.take():
+                self.batcher.add(req)
+            self._dispatch(self.batcher.flush_all(now))
+        self._flush_q.join()
+        if self.overlap:
+            self._handoff_q.join()
+        if self.errors:
+            errs, self.errors = self.errors, []  # report once, then reset
+            batch_id, exc = errs[0]
+            raise RuntimeError(
+                f"{len(errs)} batch(es) failed in the serving pipeline; "
+                f"first failure on batch {batch_id} (per-request details "
+                "on ExtractRequest.error)"
+            ) from exc
+
+    def _dispatch(self, batches: list[MicroBatch]) -> int:
+        for b in batches:
+            sess = self.sessions.get(b.session_key)
+            sess.requests += b.rows
+            sess.batches += 1
+            self._flush_q.put(b)
+        return len(batches)
+
+    # ---------------------------------------------------------- stage bodies
+    def _probe_batch(self, batch: MicroBatch) -> _Handoff:
+        """Probe stage: stream the batch's tiles, reduce to [1, NC] lanes."""
+        sess = self.sessions.get(batch.session_key)
+        dev = self.pools.probe_device(batch.batch_id)
+        t0 = time.perf_counter()
+        docs = jax.device_put(jnp.asarray(batch.docs), dev)
+        lanes = []
+        for side in sess.prepared.sides:
+            lane, count = shard_lane(
+                docs, 0, sess.max_len, side.flt, side.params,
+                batch.spec.tile_docs,
+            )
+            lanes.append((count, lane))
+        jax.block_until_ready(lanes)
+        return _Handoff(batch, lanes, time.perf_counter() - t0)
+
+    def _verify_batch(self, handoff: _Handoff) -> None:
+        """Verify stage: lanes -> candidate windows -> probe+verify join."""
+        batch = handoff.batch
+        sess = self.sessions.get(batch.session_key)
+        dev = self.pools.verify_device(batch.batch_id)
+        t0 = time.perf_counter()
+        # the handoff traffic: per side one (1 + NC)-int lane, plus the
+        # raw [D, T] tokens the verify pool gathers windows from
+        docs = jax.device_put(jnp.asarray(batch.docs), dev)
+        out: Matches | None = None
+        overflow = 0
+        for side, (count, lane) in zip(sess.prepared.sides, handoff.lanes):
+            count, lane = jax.device_put((count, lane), dev)
+            NC = side.params.max_candidates
+            sel, ok, n = select_from_tiles(count, lane, NC)
+            cands = engine.candidates_from_flat(
+                docs, sel, ok, n, sess.max_len, NC
+            )
+            overflow += int(cands["overflow"])
+            m = sess.operator.side_matches(cands, side)
+            out = m if out is None else merge_matches(
+                out, m, sess.config.result_capacity
+            )
+        jax.block_until_ready(out)
+        verify_s = time.perf_counter() - t0
+        self._complete(batch, out, handoff.probe_s, verify_s, overflow)
+
+    def _complete(self, batch: MicroBatch, matches: Matches,
+                  probe_s: float, verify_s: float, overflow: int) -> None:
+        """Fan the batch's Matches back out to its requests (host side)."""
+        now = self.clock()
+        doc = np.asarray(matches.doc)
+        pos = np.asarray(matches.pos)
+        length = np.asarray(matches.length)
+        ent = np.asarray(matches.entity)
+        score = np.asarray(matches.score)
+        keep = doc >= 0
+        by_row: dict[int, list] = {}
+        for d, p, l, e, s in zip(doc[keep], pos[keep], length[keep],
+                                 ent[keep], score[keep]):
+            by_row.setdefault(int(d), []).append(
+                (int(p), int(l), int(e), float(s))
+            )
+        with self._lock:
+            self.sessions.get(batch.session_key).inflight -= batch.rows
+            for row, req in enumerate(batch.reqs):
+                req.matches = [
+                    (req.doc_id, p, l, e, s)
+                    for (p, l, e, s) in sorted(by_row.get(row, []))
+                ]
+                req.done = True
+                req.done_s = now
+                req.batch_id = batch.batch_id
+                self.completed.append(req)
+                self.metrics.record_done(req.done_s - req.arrival_s, now)
+            self.metrics.record_batch(
+                batch_id=batch.batch_id,
+                rows=batch.rows,
+                occupancy=batch.occupancy,
+                n_lanes=len(self.sessions.get(batch.session_key).prepared.sides),
+                flush_s=batch.flush_s,
+                probe_s=probe_s,
+                verify_s=verify_s,
+                overflow=overflow,
+            )
+
+    def _fail_batch(self, batch: MicroBatch, exc: Exception) -> None:
+        """A stage raised: surface the error, never wedge the pipeline.
+
+        The batch's requests complete with ``error`` set (empty
+        matches), the exception is parked on ``self.errors`` for
+        ``drain`` to re-raise, and the worker loop stays alive so the
+        queue joins always terminate.
+        """
+        now = self.clock()
+        with self._lock:
+            self.errors.append((batch.batch_id, exc))
+            try:
+                self.sessions.get(batch.session_key).inflight -= batch.rows
+            except KeyError:
+                pass  # session evicted while busy is itself the failure
+            for req in batch.reqs:
+                req.error = f"{type(exc).__name__}: {exc}"
+                req.done = True
+                req.done_s = now
+                req.batch_id = batch.batch_id
+                self.completed.append(req)
+
+    # -------------------------------------------------------------- workers
+    def _probe_worker(self) -> None:
+        while True:
+            batch = self._flush_q.get()
+            if batch is None:
+                self._flush_q.task_done()
+                self._handoff_q.put(None)
+                return
+            try:
+                handoff = self._probe_batch(batch)
+            except Exception as exc:  # noqa: BLE001 — parked for drain()
+                self._fail_batch(batch, exc)
+            else:
+                self._handoff_q.put(handoff)
+            finally:
+                self._flush_q.task_done()
+
+    def _verify_worker(self) -> None:
+        while True:
+            handoff = self._handoff_q.get()
+            if handoff is None:
+                self._handoff_q.task_done()
+                return
+            try:
+                self._verify_batch(handoff)
+            except Exception as exc:  # noqa: BLE001 — parked for drain()
+                self._fail_batch(handoff.batch, exc)
+            finally:
+                self._handoff_q.task_done()
+
+    def _serial_worker(self) -> None:
+        """overlap=False: one worker runs both stages back-to-back."""
+        while True:
+            batch = self._flush_q.get()
+            if batch is None:
+                self._flush_q.task_done()
+                return
+            try:
+                self._verify_batch(self._probe_batch(batch))
+            except Exception as exc:  # noqa: BLE001 — parked for drain()
+                self._fail_batch(batch, exc)
+            finally:
+                self._flush_q.task_done()
+
+    # ------------------------------------------------------------ inspection
+    def results_set(self) -> set[tuple[int, int, int, int]]:
+        """Dedup'd (doc_id, pos, length, entity) across completed requests
+        — directly comparable with ``Matches.to_set()`` of a one-shot
+        batch run over the same documents."""
+        with self._lock:
+            return {
+                (d, p, l, e)
+                for req in self.completed
+                for (d, p, l, e, _s) in req.matches
+            }

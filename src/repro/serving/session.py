@@ -1,0 +1,205 @@
+"""Dictionary session cache: fingerprint -> prepared extraction state.
+
+Preparing a dictionary for serving is expensive relative to one request:
+building the ISH/Bloom filter, entity signature tables or index
+partitions, gathering statistics and (optionally) calibrating the cost
+model to choose a plan. A *session* is that prepared state, keyed by a
+content fingerprint of the dictionary (plus the config knobs that shape
+the prepared structures), so
+
+* a stream of requests against the same dictionary pays the build cost
+  once (the cost-based plan choice of the paper amortised across the
+  stream), and
+* multiple dictionaries are served concurrently — the micro-batcher
+  keys its bins by session, so batches never mix dictionaries.
+
+Eviction is LRU over ``max_sessions`` (prepared state is device memory:
+filters + signature tables + dictionary slices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.cost_model import OBJ_JOB, CostParams, SideCost
+from repro.core.dictionary import Dictionary
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator, PreparedPlan
+from repro.core.plan import Plan, PlanSide
+
+
+def dictionary_fingerprint(dictionary: Dictionary,
+                           config: EEJoinConfig) -> str:
+    """Content hash of (dictionary, prepared-structure knobs).
+
+    Two dictionaries with identical token matrices, weights and
+    frequencies — and identical config knobs that shape the prepared
+    filter/signatures/plan — share a session; anything else gets its
+    own. Config is folded in via its dataclass repr (EEJoinConfig is a
+    frozen dataclass of scalars/tuples, so the repr is canonical).
+    """
+    h = hashlib.sha256()
+    for arr in (
+        dictionary.tokens,
+        dictionary.lengths,
+        dictionary.freq,
+        dictionary.token_weight,
+        dictionary.entity_weight,
+    ):
+        a = np.ascontiguousarray(arr)
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    h.update(repr(config).encode())
+    return h.hexdigest()[:16]
+
+
+def pure_plan(scheme: str, algo: str = "ssjoin") -> Plan:
+    """Forced single-algorithm plan (split=0 tail) for stat-less sessions.
+
+    Public: the ``serve_extract --plan forced`` mode, the serving bench
+    and tests all serve against forced pure plans.
+    """
+    z = SideCost(0, 0, 0, 0, 0, 0, 0, 0, 0)
+    return Plan(0, PlanSide(algo, scheme), PlanSide(algo, scheme),
+                OBJ_JOB, 0.0, z, z, 0)
+
+
+@dataclasses.dataclass
+class DictionarySession:
+    """One cached dictionary's serving state (lives on device)."""
+
+    key: str
+    dictionary: Dictionary
+    config: EEJoinConfig
+    operator: EEJoinOperator
+    plan: Plan
+    prepared: PreparedPlan
+    calibrated: bool
+    # serving counters (metrics reads them)
+    requests: int = 0
+    batches: int = 0
+    # admitted-but-not-completed requests: pins the session against LRU
+    # eviction (maintained by ExtractionService.submit/_complete)
+    inflight: int = 0
+
+    @property
+    def max_len(self) -> int:
+        return self.prepared.max_entity_len
+
+
+class SessionCache:
+    """LRU cache of ``DictionarySession`` keyed by dictionary fingerprint."""
+
+    def __init__(self, max_sessions: int = 8):
+        if max_sessions <= 0:
+            raise ValueError(
+                f"SessionCache max_sessions={max_sessions} must be positive"
+            )
+        self.max_sessions = max_sessions
+        self._sessions: OrderedDict[str, DictionarySession] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def get(self, key: str) -> DictionarySession:
+        """Lookup by fingerprint (raises KeyError on unknown sessions)."""
+        sess = self._sessions[key]
+        self._sessions.move_to_end(key)
+        return sess
+
+    def get_or_create(
+        self,
+        dictionary: Dictionary,
+        config: EEJoinConfig | None = None,
+        plan: Plan | None = None,
+        sample_docs: np.ndarray | None = None,
+        cost_params: CostParams | None = None,
+        calibrate: bool = False,
+        default_scheme: str = "prefix",
+    ) -> DictionarySession:
+        """Return the cached session for ``dictionary`` (building it on miss).
+
+        Plan choice on miss, most- to least-informed:
+
+        * ``plan`` given — use it verbatim (tests / forced plans);
+        * ``sample_docs`` given — gather statistics and run the §5 plan
+          search, after rescaling the cost constants to this host when
+          ``calibrate=True`` (``core/calibrate``);
+        * neither — a pure ``ssjoin:default_scheme`` plan (stat-less
+          cold start; the session can be evicted and rebuilt with stats
+          once traffic provides a sample).
+        """
+        cfg = config or EEJoinConfig(use_kernel=True)
+        if not cfg.use_kernel:
+            raise ValueError(
+                "serving sessions require EEJoinConfig(use_kernel=True): the "
+                "probe stage streams batches through fused_probe and hands "
+                "[G, NC] lanes to the verify pool — there is no unfused "
+                "serving path"
+            )
+        if dictionary.max_len > 32:
+            raise ValueError(
+                f"dictionary.max_len={dictionary.max_len} exceeds 32: the "
+                "probe stage's packed survival bitmap holds one window "
+                "length per uint32 bit (ops.fused_probe_compact), so served "
+                "dictionaries must keep entities <= 32 tokens"
+            )
+        key = dictionary_fingerprint(dictionary, cfg)
+        if key in self._sessions:
+            self.hits += 1
+            self._sessions.move_to_end(key)
+            return self._sessions[key]
+        self.misses += 1
+        # make room *before* the expensive build: LRU among *idle*
+        # sessions only — evicting one with admitted or in-flight
+        # requests would strand them (the service's flush/verify would
+        # KeyError mid-pipeline)
+        while len(self._sessions) >= self.max_sessions:
+            victim = next(
+                (k for k, s in self._sessions.items() if s.inflight == 0),
+                None,
+            )
+            if victim is None:
+                raise RuntimeError(
+                    f"SessionCache is full ({self.max_sessions} sessions) "
+                    "and every session has in-flight requests; drain the "
+                    "service before adding dictionaries, or raise "
+                    "max_sessions"
+                )
+            del self._sessions[victim]
+            self.evictions += 1
+        op = EEJoinOperator(dictionary, cfg)
+        cp = cost_params or CostParams(num_devices=1)
+        calibrated = False
+        if plan is None:
+            if sample_docs is not None:
+                if calibrate:
+                    from repro.core.calibrate import calibrate as _calib
+
+                    cp = _calib(op, np.asarray(sample_docs), cp,
+                                scheme=default_scheme)
+                    calibrated = True
+                stats = op.gather_statistics(
+                    np.asarray(sample_docs), total_docs=len(sample_docs)
+                )
+                plan = op.choose_plan(stats, cp)
+            else:
+                plan = pure_plan(default_scheme)
+        prepared = op.prepare(plan, cp)
+        sess = DictionarySession(
+            key=key,
+            dictionary=dictionary,
+            config=cfg,
+            operator=op,
+            plan=plan,
+            prepared=prepared,
+            calibrated=calibrated,
+        )
+        self._sessions[key] = sess
+        return sess
