@@ -13,9 +13,13 @@ python -m pytest -x -q
 
 # Benchmark smoke: fused-pipeline parity/drift, the sharded streaming
 # scenario (driver + in-kernel compaction epilogue vs legacy XLA
-# compaction), and the serving loadgen (N=16 seeded open-loop requests
+# compaction), the variant + adaptive-lane scenario (fused in-kernel
+# variant keys vs window_variant_key, two-pass vs fixed lane bit
+# identity, two-pass lane bytes asserted under the fixed [G, NC]
+# bytes), and the serving loadgen (N=16 seeded open-loop requests
 # through the probe/verify split). Parity is asserted inside each bench,
-# so drift fails CI; serving rows land in results/bench/serving_smoke.json.
+# so drift fails CI; rows land in results/bench/{kernels,sharded,
+# variant,serving}_smoke.json.
 python -m benchmarks.run --smoke
 
 # Serving smoke leg: the real-time (threaded, double-buffered) service

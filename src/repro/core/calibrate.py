@@ -46,14 +46,34 @@ def _time(fn, iters: int = 2) -> float:
     return float(np.median(ts))
 
 
+def measured_lane_density(stats) -> float:
+    """Filter-survivor density (survivors / enumerated windows).
+
+    The density term behind the adaptive lane-width plan
+    (``cost_model.planned_lane_width``): full-dictionary survivors over
+    total candidate windows, both already corpus-scaled in ``EEStats``.
+    """
+    if stats.num_windows <= 0:
+        return 0.0
+    return float(stats.head_survivors(stats.num_entities) / stats.num_windows)
+
+
 def calibrate(op, sample_docs, params: CostParams,
               scheme: str = "variant") -> CostParams:
     """Returns CostParams with per-family constants rescaled to this host.
 
     ``op`` is an EEJoinOperator; ``sample_docs`` a small [D, T] array.
+    The ssjoin timing runs through ``op.execute``, so with
+    ``EEJoinConfig(use_kernel=True)`` the per-scheme signature constants
+    (``c_sig_per_window`` — notably ``"variant"``, whose window keys now
+    come out of the fused megakernel) are rescaled against the *fused*
+    pipeline, not the retired jnp one. The returned params also carry
+    the measured filter-survivor density (``lane_density``) that sizes
+    adaptive candidate lanes.
     """
     stats = op.gather_statistics(sample_docs, total_docs=len(sample_docs))
     E = op.dictionary.num_entities
+    density = measured_lane_density(stats)
 
     # measured seconds per family on the sample
     plan_idx = _forced(E, PlanSide(ALGO_INDEX, scheme),
@@ -84,4 +104,5 @@ def calibrate(op, sample_docs, params: CostParams,
         c_probe=params.c_probe * k_ssj,
         c_verify_pair=params.c_verify_pair * k_ssj,
         c_sig_per_window=sig,
+        lane_density=density,
     )

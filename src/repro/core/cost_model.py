@@ -82,6 +82,11 @@ class CostParams:
     c_verify_index: float = 6e-9
     shuffle_bytes_per_record: float = 4.0 * 8 + 16.0  # window tokens + meta
     dict_prep_per_entity: float = 2e-7  # host-side build, amortised
+    # measured filter-survivor density (survivors / enumerated windows),
+    # filled in by core.calibrate from gathered statistics; 0.0 = unknown
+    # (planning then assumes worst-case [G, NC] candidate lanes). Drives
+    # the adaptive lane-width plan below.
+    lane_density: float = 0.0
 
     def sig_cost(self, scheme: str) -> float:
         d = self.c_sig_per_window or {}
@@ -224,3 +229,73 @@ def objective_value(side: SideCost, objective: str) -> float:
     if objective == OBJ_JOB:
         return side.job_completion
     raise ValueError(f"unknown objective {objective!r}")
+
+
+# --------------------------------------------------------------------------
+# Adaptive lane-width planning (the density term feeding the two-pass
+# compaction in kernels/fused_probe; density measured by core.calibrate)
+# --------------------------------------------------------------------------
+
+
+def planned_lane_width(
+    density: float,
+    windows_per_tile: int,
+    nc: int,
+    slack: float = 2.0,
+    floor: int = 8,
+) -> int:
+    """Predicted emit-pass lane width for a measured survivor density.
+
+    ``density`` is survivors / enumerated windows (``lane_density``);
+    a tile of ``windows_per_tile`` windows then carries ~``density *
+    windows_per_tile`` survivors, padded by ``slack`` for tile-to-tile
+    variance and rounded to the same power-of-two grid the runtime
+    sizing uses (``fused_probe.round_lane_width``) so the planned and
+    measured widths land on comparable values. Clamped to [floor, nc];
+    ``density <= 0`` (unknown) plans the worst-case ``nc`` lanes.
+    """
+    from repro.kernels.fused_probe import round_lane_width
+
+    if density <= 0.0:
+        return int(nc)
+    expect = density * float(max(windows_per_tile, 1)) * slack
+    return round_lane_width(int(math.ceil(expect)), nc, floor)
+
+
+def lane_plan(
+    D: int,
+    T: int,
+    max_len: int,
+    nc: int,
+    density: float,
+    bands: int = 4,
+    variant_keys: bool = False,
+) -> dict:
+    """Cost the two-pass vs fixed lane trade for one probe geometry.
+
+    Evaluates ``fused_probe.hbm_bytes_fused`` at the worst-case one-pass
+    [G, NC] lanes and at the density-planned two-pass width, and
+    recommends whichever moves fewer modeled bytes. Returns a dict with
+    ``width`` (planned emit width), ``two_pass`` (recommendation),
+    ``bytes_fixed`` / ``bytes_two_pass`` and per-pipeline lane bytes —
+    the numbers the kernel bench asserts against its measured lanes.
+    """
+    from repro.kernels.fused_probe import compact_tile_height, hbm_bytes_fused
+
+    bd = compact_tile_height(D, T, nc)
+    G = -(-D // bd)
+    W = planned_lane_width(density, bd * T * max_len, nc)
+    fixed = hbm_bytes_fused(D, T, max_len, nc, bands, False, sig_width=1,
+                            kernel_compact=True, variant_keys=variant_keys)
+    two = hbm_bytes_fused(D, T, max_len, nc, bands, False, sig_width=1,
+                          kernel_compact=True, lane_width=W, two_pass=True,
+                          variant_keys=variant_keys)
+    return {
+        "width": W,
+        "two_pass": two < fixed,
+        "bytes_fixed": fixed,
+        "bytes_two_pass": two,
+        "lane_bytes_fixed": 2 * G * (1 + nc) * 4,
+        "lane_bytes_two_pass": 2 * G * (1 + W) * 4,
+        "tiles": G,
+    }

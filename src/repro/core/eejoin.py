@@ -51,6 +51,12 @@ class EEJoinConfig:
     options: Sequence[tuple[str, str]] = ALL_OPTIONS
     use_kernel: bool = False
     filter_bits: int = 1 << 18
+    # kernel-path lane compaction knobs, forwarded to every side's
+    # ExtractParams (validated there): adaptive two-pass lane sizing,
+    # its emit-width floor, and forced/suppressed in-kernel signatures.
+    adaptive_lanes: bool = False
+    lane_width: int | None = None
+    kernel_sigs: bool | None = None
 
 
 @dataclasses.dataclass
@@ -121,6 +127,9 @@ class EEJoinOperator:
             result_capacity=cfg.result_capacity,
             lsh=cfg.lsh,
             use_kernel=cfg.use_kernel,
+            adaptive_lanes=cfg.adaptive_lanes,
+            lane_width=cfg.lane_width,
+            kernel_sigs=cfg.kernel_sigs,
         )
         prepared = PreparedSide(side=side, params=params, ddict=ddict, flt=flt)
         if side.algo == ALGO_INDEX:

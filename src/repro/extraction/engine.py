@@ -33,7 +33,9 @@ from repro.core.index import (
 from repro.core.signatures import (
     SIG_LSH,
     SIG_NAMES,
+    SIG_PREFIX,
     SIG_VARIANT,
+    SIG_WORD,
     EntitySignatures,
     LshParams,
     entity_signatures,
@@ -44,6 +46,7 @@ from repro.core.variants import VARIANT_SEEDS, window_variant_key
 from repro.extraction.results import (
     Matches,
     compact_matches,
+    gather_from_tiles,
     select_from_tiles,
     select_nonzero,
 )
@@ -86,6 +89,23 @@ class ExtractParams:
     # legacy XLA cumsum+searchsorted pass over the packed bitmap as a
     # live fallback.
     kernel_compact: bool | None = None
+    # kernel_compact only: adaptive two-pass lane compaction — a cheap
+    # count-only probe pass sizes the emit pass's lane width to the
+    # measured per-tile survivor maximum (exact at any density) instead
+    # of paying worst-case [G, NC] lanes. Needs a host sync between the
+    # passes, so it is rejected under jit tracing.
+    adaptive_lanes: bool = False
+    # adaptive_lanes only: floor (and power-of-two rounding base) for
+    # the adaptive emit-pass lane width. None -> fused_probe.MIN_LANE_WIDTH.
+    lane_width: int | None = None
+    # use_kernel only: emit window signatures inside the fused kernel.
+    # None = auto (variant: lane-resident keys whenever the compaction
+    # epilogue runs, dense tensor in the high-density regime; lsh: dense
+    # tensor in the high-density regime — see ``resolve_sig_mode``).
+    # True forces in-kernel emission (rejected for word/prefix, which
+    # have no in-kernel recurrence); False forces the post-compaction
+    # jnp signature path.
+    kernel_sigs: bool | None = None
 
     def __post_init__(self):
         if self.kernel_compact is None:
@@ -124,6 +144,49 @@ class ExtractParams:
                 "kernel, so there is no epilogue to enable on the unfused "
                 "path (set use_kernel=True, or leave kernel_compact unset "
                 "to track use_kernel automatically)"
+            )
+        if self.adaptive_lanes and not self.kernel_compact:
+            raise ValueError(
+                "ExtractParams(adaptive_lanes=True) requires "
+                "kernel_compact=True: the two-pass lane sizing narrows the "
+                "compaction epilogue's [G, NC] lanes, so there are no lanes "
+                "to size on the legacy XLA compaction path (set "
+                "use_kernel=True and leave kernel_compact unset, or drop "
+                "adaptive_lanes)"
+            )
+        if self.lane_width is not None and not self.adaptive_lanes:
+            raise ValueError(
+                f"ExtractParams(lane_width={self.lane_width}) requires "
+                "adaptive_lanes=True: lane_width is the floor of the "
+                "adaptive emit-pass width — a fixed width below "
+                "max_candidates cannot guarantee bit-exact lane merges, so "
+                "the one-pass path always emits full [G, NC] lanes (enable "
+                "adaptive_lanes, or drop lane_width)"
+            )
+        if self.lane_width is not None and not (
+            0 < self.lane_width <= self.max_candidates
+        ):
+            raise ValueError(
+                f"ExtractParams(lane_width={self.lane_width}) must be in "
+                f"(0, max_candidates={self.max_candidates}]: it floors the "
+                "adaptive emit-pass lane width, and lanes wider than the "
+                "select_from_tiles merge capacity are never read"
+            )
+        if self.kernel_sigs and not self.use_kernel:
+            raise ValueError(
+                "ExtractParams(kernel_sigs=True) requires use_kernel=True: "
+                "in-kernel signature emission happens inside the fused_probe "
+                "megakernel (set use_kernel=True, or leave kernel_sigs unset "
+                "to let resolve_sig_mode decide)"
+            )
+        if self.kernel_sigs and self.scheme in (SIG_WORD, SIG_PREFIX):
+            raise ValueError(
+                f"ExtractParams(kernel_sigs=True, scheme={self.scheme!r}): "
+                "the word/prefix schemes have no in-kernel signature "
+                "recurrence — their window-side signatures are plain token "
+                "hashes computed post-compaction, which previously made "
+                "this combination fall back silently; use scheme='lsh' or "
+                "'variant', or leave kernel_sigs unset"
             )
 
 
@@ -290,16 +353,58 @@ def attach_kernel_sigs(cands: dict, kernel_sigs, params: ExtractParams) -> dict:
 
 
 def resolve_sig_mode(params: ExtractParams, D: int, T: int, L: int) -> str:
-    """In-kernel band-sig emission computes minima for every (pos, len)
-    window and stores a [D,T,L,B] tensor — profitable only when the
-    compacted candidate stream covers the whole window grid (then the
-    post-compaction re-gather would move the same bytes); in the
-    filter's target low-density regime, post-compaction signatures over
-    [N, L] windows are far less work."""
-    from repro.kernels.fused_probe import SIG_MODE_LSH, SIG_MODE_NONE
+    """Pick the kernel's in-kernel signature emission mode for a shape.
 
+    * ``lsh`` — band-sig emission computes minima for every (pos, len)
+      window and stores a [D,T,L,B] tensor: profitable only when the
+      compacted candidate stream covers the whole window grid (then the
+      post-compaction re-gather would move the same bytes); in the
+      filter's target low-density regime, post-compaction signatures
+      over [N, L] windows are far less work. ``kernel_sigs=True``
+      forces dense emission regardless.
+    * ``variant`` — with the compaction epilogue the key pairs ride the
+      candidate lanes ([G, NC, 2], no dense tensor), which is cheap at
+      *any* density, so the fused path is the default whenever the
+      epilogue runs; without the epilogue the dense [D,T,L,2] tensor
+      follows the same density rule as lsh (or ``kernel_sigs=True``).
+    * ``kernel_sigs=False`` forces the post-compaction jnp path.
+    """
+    from repro.kernels.fused_probe import (
+        SIG_MODE_LSH,
+        SIG_MODE_NONE,
+        SIG_MODE_VARIANT,
+    )
+
+    if params.kernel_sigs is False:
+        return SIG_MODE_NONE
+    forced = params.kernel_sigs is True
     dense = params.max_candidates >= D * T * L
-    return SIG_MODE_LSH if (params.scheme == SIG_LSH and dense) else SIG_MODE_NONE
+    if params.scheme == SIG_LSH and (dense or forced):
+        return SIG_MODE_LSH
+    if params.scheme == SIG_VARIANT and (
+        params.kernel_compact or dense or forced
+    ):
+        return SIG_MODE_VARIANT
+    return SIG_MODE_NONE
+
+
+def attach_variant_keys(cands: dict, keys) -> dict:
+    """Attach fused variant key pairs [N, 2] to compacted candidates.
+
+    Sets ``sigs``/``sig_mask`` bit-identically to
+    ``window_signatures("variant", ...)`` over the gathered windows
+    (the window-side SSJoin signature is key1) and ``variant_keys`` =
+    (k1, k2) for the variant index probe (``extract_index_part``).
+    Padded slots carry 0 — the ``set_hash`` of an all-PAD window under
+    either seed — so no consumer needs a special case for them.
+    """
+    ok = cands["win_valid"]
+    k1 = jnp.where(ok, keys[:, 0], jnp.uint32(0))
+    k2 = jnp.where(ok, keys[:, 1], jnp.uint32(0))
+    cands["sigs"] = k1[:, None]
+    cands["sig_mask"] = ok[:, None]
+    cands["variant_keys"] = (k1, k2)
+    return cands
 
 
 def fused_filter_compact(
@@ -327,9 +432,27 @@ def fused_filter_compact(
     ``params.kernel_compact=False`` keeps the legacy two-stage XLA
     compaction over the packed bitmap — same outputs, exercised by tests
     so the fallback cannot rot.
+
+    For the ``variant`` scheme the kernel emits both 32-bit set-hash
+    keys in-kernel (lane payload with the epilogue, dense tensor on the
+    legacy path in the high-density regime) — bit-identical to
+    ``core.variants.window_variant_key`` over the gathered windows.
+    ``params.adaptive_lanes`` enables the two-pass lane compaction: a
+    count-only pass measures per-tile survivor maxima, the emit pass
+    then runs with ``round_lane_width``-sized lanes (exact merge at any
+    density). The sizing needs a host sync, so adaptive runs cannot be
+    traced under jit — call un-jitted (every step here is jitted
+    internally) or drop ``adaptive_lanes``.
     """
+    import numpy as _np
+
     from repro.kernels import ops as kops
-    from repro.kernels.fused_probe import SIG_MODE_LSH
+    from repro.kernels.fused_probe import (
+        MIN_LANE_WIDTH,
+        SIG_MODE_LSH,
+        SIG_MODE_VARIANT,
+        round_lane_width,
+    )
 
     D, T = doc_tokens.shape
     L = max_len
@@ -342,16 +465,38 @@ def fused_filter_compact(
     if sig_mode is None:
         sig_mode = resolve_sig_mode(params, D, T, L)
     lsh = sig_mode == SIG_MODE_LSH
+    var = sig_mode == SIG_MODE_VARIANT
     NC = params.max_candidates
+    keys = None
     if params.kernel_compact:
+        lane_w = None
+        if params.adaptive_lanes:
+            if isinstance(doc_tokens, jax.core.Tracer):
+                raise ValueError(
+                    "ExtractParams(adaptive_lanes=True) cannot run under "
+                    "jit tracing: sizing the emit pass's lane width needs "
+                    "a host read of the count pass's per-tile survivor "
+                    "maxima; call fused_filter_compact un-jitted (its "
+                    "kernel passes are jitted internally) or use the "
+                    "fixed worst-case lanes"
+                )
+            counts0 = kops.fused_probe_count(doc_tokens, flt, max_len, NC)
+            mx = int(_np.asarray(counts0).max())
+            lane_w = round_lane_width(
+                mx, NC, params.lane_width or MIN_LANE_WIDTH
+            )
         # in-kernel compaction epilogue: per-tile survivor counts and
         # ascending packed-index lanes; the O(G + NC) merge below is the
         # only XLA-side work — no pass over the [D, T] bitmap.
-        packed, kernel_sigs, counts, tiles = kops.fused_probe_compact(
+        packed, kernel_sigs, counts, tiles, vkeys = kops.fused_probe_compact(
             doc_tokens, flt, max_len, NC, sig_mode,
-            params.lsh.bands, params.lsh.rows,
+            params.lsh.bands, params.lsh.rows, lane_width=lane_w,
         )
-        sel, ok, n = select_from_tiles(counts, tiles, NC)
+        sel, ok, n = select_from_tiles(
+            counts, tiles, NC, complete_tiles=lane_w is not None
+        )
+        if var:
+            keys = gather_from_tiles(counts, vkeys, NC)  # [NC, 2]
     else:
         packed, kernel_sigs = kops.fused_probe(
             doc_tokens, flt, max_len, sig_mode, params.lsh.bands, params.lsh.rows
@@ -368,9 +513,16 @@ def fused_filter_compact(
         ssafe = jnp.maximum(ssel, 0)
         sel = jnp.maximum(starts[ssafe // L], 0) * L + ssafe % L
         n = jax.lax.population_count(packed).sum().astype(jnp.int32)
+        if var:
+            # dense [D, T, L, 2] key tensor: gather at the selection
+            safe = jnp.maximum(sel, 0)
+            d, rem = safe // (T * L), safe % (T * L)
+            keys = kernel_sigs[d, rem // L, rem % L]  # [NC, 2]
     cands = candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
     if lsh:
         cands = attach_kernel_sigs(cands, kernel_sigs, params)
+    if var:
+        cands = attach_variant_keys(cands, keys)
     return cands
 
 
@@ -483,7 +635,12 @@ def extract_index_part(
     """One pass of index lookups + verification over compacted candidates."""
     toks, ok = cands["win_tokens"], cands["win_valid"]
     if part.kind == INDEX_VARIANT:
-        k1, k2 = window_variant_key(toks, toks != PAD, xp=jnp)
+        if "variant_keys" in cands:
+            # fused path: both set-hash keys were computed in-kernel
+            # (bit-identical to window_variant_key, incl. padded slots)
+            k1, k2 = cands["variant_keys"]
+        else:
+            k1, k2 = window_variant_key(toks, toks != PAD, xp=jnp)
         ents = query_variant(part.keys1, part.keys2, part.ents, part.n_buckets, k1, k2)
         ents = jnp.where(ok[:, None], ents, -1)
         hits, scores = verify_pairs(

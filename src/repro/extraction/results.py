@@ -58,7 +58,30 @@ def select_nonzero(mask, capacity: int):
     return jnp.where(ok, idx, -1), ok
 
 
-def select_from_tiles(counts, cands, capacity: int):
+def tile_ranks(counts, capacity: int):
+    """Global rank -> (tile, within-tile rank) map for per-tile lanes.
+
+    ``counts`` [G] int32 are true per-tile survivor counts. Returns
+    ``(g [capacity] int32, within [capacity] int32, ok [capacity] bool,
+    total [] int32)``: the tile index and within-tile rank of each of
+    the global first ``capacity`` survivors (tiles ordered by ascending
+    index range). Shared by ``select_from_tiles`` (index lanes) and
+    ``gather_from_tiles`` (payload lanes, e.g. the fused variant keys)
+    so both gather the *same* survivors. O(G + capacity).
+    """
+    G = counts.shape[0]
+    cum = jnp.cumsum(counts.astype(jnp.int32))
+    total = cum[-1]
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    ok = j < jnp.minimum(total, capacity)
+    g = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    gs = jnp.minimum(g, G - 1)
+    within = j - (cum[gs] - counts[gs])
+    return gs, within, ok, total
+
+
+def select_from_tiles(counts, cands, capacity: int,
+                      complete_tiles: bool = False):
     """Merge per-tile compacted candidate lanes into one global selection.
 
     ``counts`` [G] int32 are true per-tile survivor counts (may exceed
@@ -71,21 +94,38 @@ def select_from_tiles(counts, cands, capacity: int):
     (any candidate inside the global first ``capacity`` has within-tile
     rank < capacity, so lane truncation can never hide it). Cost is
     O(G + capacity) — the [D, T] survival bitmap is never touched.
+
+    ``complete_tiles=True`` relaxes the static ``C >= capacity`` check
+    for the adaptive two-pass emit: the caller guarantees every tile's
+    lane holds *all* of its survivors (``max(counts) <= C``, enforced
+    host-side by sizing C from a count pass), under which the merge is
+    exact at any C.
     """
     G, C = cands.shape
-    assert C >= capacity, (
+    assert complete_tiles or C >= capacity, (
         f"lane width {C} < capacity {capacity}: truncated lanes would be "
-        "re-read silently (see docstring invariant)"
+        "re-read silently (see docstring invariant; pass "
+        "complete_tiles=True only when max(counts) <= lane width)"
     )
-    cum = jnp.cumsum(counts.astype(jnp.int32))
-    total = cum[-1]
-    j = jnp.arange(capacity, dtype=jnp.int32)
-    ok = j < jnp.minimum(total, capacity)
-    g = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
-    gs = jnp.minimum(g, G - 1)
-    within = j - (cum[gs] - counts[gs])
+    gs, within, ok, total = tile_ranks(counts, capacity)
     idx = cands[gs, jnp.clip(within, 0, C - 1)]
     return jnp.where(ok, idx, -1), ok, total
+
+
+def gather_from_tiles(counts, payload, capacity: int, fill=0):
+    """Gather per-lane payload rows for the ``select_from_tiles`` merge.
+
+    ``payload`` [G, C, ...] carries one record per lane slot (e.g. the
+    fused variant key pairs [G, C, 2]); returns the [capacity, ...]
+    records of the globally selected survivors, ``fill`` in padded
+    slots. Must be driven by the same ``counts`` as the index-lane
+    merge so both pick identical survivors.
+    """
+    G, C = payload.shape[:2]
+    gs, within, ok, _ = tile_ranks(counts, capacity)
+    out = payload[gs, jnp.clip(within, 0, C - 1)]
+    mask = ok.reshape(ok.shape + (1,) * (out.ndim - 1))
+    return jnp.where(mask, out, fill)
 
 
 def compact_matches(hit_mask, doc, pos, length, entity, score, capacity: int) -> Matches:

@@ -28,18 +28,32 @@ bit-identical to the unsharded ``engine.fused_filter_compact`` fast
 path at any shard geometry (uneven shards, PAD-only shards,
 zero-survivor shards, more shards than devices) — asserted in
 ``tests/test_sharded.py`` and re-checked by the sharded smoke bench.
+
+Two PR 4 extensions ride the same lanes: the fused *variant* scheme's
+set-hash key pairs travel as a [G, NC, 2] payload next to the index
+lanes (``gather_from_tiles`` keeps payload and index selection in
+lockstep), and ``ExtractParams(adaptive_lanes=True)`` narrows the tile
+lanes to a measured width via a count-only sizing pass
+(``stream_tile_counts`` + ``round_lane_width``; under ``shard_map`` a
+count *wave* runs first and the width is traced in statically).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
+import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.dictionary import PAD
 from repro.extraction import engine
-from repro.extraction.results import select_from_tiles
+from repro.extraction.results import (
+    gather_from_tiles,
+    select_from_tiles,
+)
 
 #: default rows per streaming tile: big enough to amortise kernel launch
 #: overhead, small enough that two tiles' working sets double-buffer in
@@ -88,18 +102,28 @@ def stream_probe_tiles(
     params: engine.ExtractParams,
     tile_docs: int = DEFAULT_TILE_DOCS,
     row_offset=0,
+    lane_width: int | None = None,
+    sig_mode: str | None = None,
 ):
     """Stream a [S, T] doc shard through ``fused_probe`` tile by tile.
 
-    Returns ``(counts [G], cands [G, NC])`` candidate lanes covering the
-    whole shard, with flat indices globalised by ``row_offset`` rows
+    Returns ``(counts [G], cands [G, W], vkeys)`` candidate lanes
+    covering the whole shard (``W = lane_width or NC``; ``vkeys``
+    [G, W, 2] variant key payload when ``sig_mode == "variant"``, else
+    ``None``), with flat indices globalised by ``row_offset`` rows
     (``row_offset`` may be a traced scalar, e.g. a worker index inside
     ``shard_map``). The loop is double-buffered: tile i+1's probe is
     issued before tile i's lanes are globalised, so the probe DMA and
     the combine arithmetic have no dependency edge between them.
+    ``lane_width`` is the adaptive emit width — the sub-tile grid stays
+    NC-derived inside ``ops.fused_probe_compact`` so counts line up
+    with a ``stream_tile_counts`` sizing pass at the same geometry.
     """
     from repro.kernels import ops as kops
+    from repro.kernels.fused_probe import SIG_MODE_NONE, SIG_MODE_VARIANT
 
+    sig_mode = SIG_MODE_NONE if sig_mode is None else sig_mode
+    var = sig_mode == SIG_MODE_VARIANT
     S, T = docs.shape
     L = max_len
     NC = params.max_candidates
@@ -110,25 +134,110 @@ def stream_probe_tiles(
                        constant_values=PAD)
 
     def probe(i):
-        return kops.fused_probe_compact(docs[i * td:(i + 1) * td], flt, L, NC)
+        return kops.fused_probe_compact(
+            docs[i * td:(i + 1) * td], flt, L, NC, sig_mode,
+            params.lsh.bands, params.lsh.rows, lane_width=lane_width,
+        )
 
-    def globalise(cnt, cd, tile_row):
+    def globalise(cnt, cd, vk, tile_row):
         off = (row_offset + tile_row) * T * L
-        return cnt, jnp.where(cd >= 0, cd + off, -1)
+        return cnt, jnp.where(cd >= 0, cd + off, -1), vk
 
-    out_counts, out_cands = [], []
-    _, _, cnt, cd = probe(0)
-    cur, cur_row = (cnt, cd), 0
-    for i in range(1, n_tiles):
-        _, _, cnt, cd = probe(i)  # issue next probe (buffer B) ...
-        c, x = globalise(*cur, cur_row)  # ... while current tile combines
+    out_counts, out_cands, out_keys = [], [], []
+
+    def emit(cur, cur_row):
+        c, x, vk = globalise(*cur, cur_row)
         out_counts.append(c)
         out_cands.append(x)
-        cur, cur_row = (cnt, cd), i * td
-    c, x = globalise(*cur, cur_row)
-    out_counts.append(c)
-    out_cands.append(x)
-    return jnp.concatenate(out_counts), jnp.concatenate(out_cands, axis=0)
+        if var:
+            out_keys.append(vk)
+
+    _, _, cnt, cd, vk = probe(0)
+    cur, cur_row = (cnt, cd, vk), 0
+    for i in range(1, n_tiles):
+        _, _, cnt, cd, vk = probe(i)  # issue next probe (buffer B) ...
+        emit(cur, cur_row)  # ... while current tile combines
+        cur, cur_row = (cnt, cd, vk), i * td
+    emit(cur, cur_row)
+    return (
+        jnp.concatenate(out_counts),
+        jnp.concatenate(out_cands, axis=0),
+        jnp.concatenate(out_keys, axis=0) if var else None,
+    )
+
+
+def stream_tile_counts(
+    docs,
+    max_len: int,
+    flt: tuple | None,
+    params: engine.ExtractParams,
+    tile_docs: int = DEFAULT_TILE_DOCS,
+):
+    """Count-only streaming pass: per-sub-tile survivor counts [G].
+
+    The cheap sizing half of the adaptive two-pass scheme — streams the
+    exact tile/sub-tile grid of ``stream_probe_tiles`` (the emit width
+    never changes the grid) but stores only the SMEM-accumulated
+    counts. ``round_lane_width(counts.max(), NC)`` then sizes the emit
+    pass so every sub-tile's lane holds all of its survivors.
+    """
+    from repro.kernels import ops as kops
+
+    S, T = docs.shape
+    NC = params.max_candidates
+    td = min(tile_docs, S)
+    n_tiles = -(-S // td)
+    if n_tiles * td != S:
+        docs = jnp.pad(docs, ((0, n_tiles * td - S), (0, 0)),
+                       constant_values=PAD)
+    return jnp.concatenate([
+        kops.fused_probe_count(docs[i * td:(i + 1) * td], flt, max_len, NC)
+        for i in range(n_tiles)
+    ])
+
+
+def _adaptive_width(docs, max_len, flt, params, tile_docs) -> int:
+    """Measure per-tile survivor maxima and round to the emit width."""
+    from repro.kernels.fused_probe import MIN_LANE_WIDTH, round_lane_width
+
+    counts = stream_tile_counts(docs, max_len, flt, params, tile_docs)
+    return round_lane_width(
+        int(np.asarray(counts).max()),
+        params.max_candidates,
+        params.lane_width or MIN_LANE_WIDTH,
+    )
+
+
+def _stream_sig_mode(params: engine.ExtractParams, D: int, T: int,
+                     max_len: int) -> str:
+    """Signature mode for the streaming tile lanes.
+
+    Tile lanes carry the variant key payload, but *dense* in-kernel
+    band-sig tensors ([td, T, L, B], lsh) have no lane to ride — the
+    streaming path computes bit-identical band sigs post-compaction
+    instead (``engine.window_sigs_for``), so the lsh mode is coerced to
+    ``none`` here rather than paying a kernel store that would be
+    discarded. An explicit ``kernel_sigs=True`` force for lsh therefore
+    cannot be honored on this path and raises instead of silently
+    falling back.
+    """
+    from repro.kernels.fused_probe import SIG_MODE_LSH, SIG_MODE_NONE
+
+    mode = engine.resolve_sig_mode(params, D, T, max_len)
+    if mode == SIG_MODE_LSH:
+        if params.kernel_sigs:
+            raise ValueError(
+                "ExtractParams(kernel_sigs=True, scheme='lsh') cannot run "
+                "on the sharded/serving streaming path: dense in-kernel "
+                "band sigs do not ride the candidate lanes, so the kernel "
+                "store would be discarded and the sigs recomputed "
+                "post-compaction anyway; use the single-call "
+                "engine.fused_filter_compact for forced in-kernel band "
+                "sigs, or leave kernel_sigs unset (the streaming path "
+                "recomputes bit-identical band sigs post-compaction)"
+            )
+        return SIG_MODE_NONE
+    return mode
 
 
 def stream_filter_compact(
@@ -145,20 +254,43 @@ def stream_filter_compact(
     Output is bit-identical to the unsharded fast path; LSH schemes get
     their signatures post-compaction (``window_sigs_for`` recomputes
     bit-identical band sigs from the gathered windows), so the dict
-    never carries in-kernel ``sigs``. Falls back to the single-call
-    engine path when the epilogue cannot run (L > 32 or
+    never carries in-kernel band ``sigs`` — the *variant* scheme's key
+    pairs, however, ride the tile lanes ([G, W, 2] payload) and arrive
+    attached exactly as on the unsharded path. Honors
+    ``params.adaptive_lanes`` (two-pass: count stream sizes the emit
+    stream's lane width). Falls back to the single-call engine path
+    when the epilogue cannot run (L > 32 or
     ``params.kernel_compact=False``).
     """
+    from repro.kernels.fused_probe import SIG_MODE_VARIANT
+
     if max_len > 32 or not params.kernel_compact:
         return engine.fused_filter_compact(doc_tokens, max_len, flt, params)
+    D, T = doc_tokens.shape
+    sig_mode = _stream_sig_mode(params, D, T, max_len)
     NC = params.max_candidates
-    counts, cands = stream_probe_tiles(doc_tokens, max_len, flt, params, tile_docs)
-    sel, ok, n = select_from_tiles(counts, cands, NC)
-    return engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+    lane_w = None
+    if params.adaptive_lanes:
+        lane_w = _adaptive_width(doc_tokens, max_len, flt, params, tile_docs)
+    counts, cands, vkeys = stream_probe_tiles(
+        doc_tokens, max_len, flt, params, tile_docs,
+        lane_width=lane_w, sig_mode=sig_mode,
+    )
+    sel, ok, n = select_from_tiles(
+        counts, cands, NC, complete_tiles=lane_w is not None
+    )
+    out = engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+    if sig_mode == SIG_MODE_VARIANT:
+        out = engine.attach_variant_keys(
+            out, gather_from_tiles(counts, vkeys, NC)
+        )
+    return out
 
 
 def shard_lane(docs, row_offset, max_len, flt, params,
-               tile_docs: int = DEFAULT_TILE_DOCS):
+               tile_docs: int = DEFAULT_TILE_DOCS,
+               lane_width: int | None = None,
+               sig_mode: str | None = None):
     """Stream one doc shard and reduce it to a single candidate lane —
     the *wire unit* of every lane-shipping consumer (sharded driver
     waves, the serving probe→verify handoff).
@@ -174,21 +306,54 @@ def shard_lane(docs, row_offset, max_len, flt, params,
     * ``count`` — ``[1]`` **int32**: the shard's *true* survivor total,
       which may exceed ``NC`` (overflow is surfaced downstream, never
       silent).
+    * ``keys`` — ``[1, NC, 2]`` **uint32** or ``None``: the lane
+      slots' variant key pairs when the fused variant scheme is on
+      (``sig_mode == "variant"``), 0 in padded slots — the verify side
+      then never recomputes set hashes.
 
-    One ``(cand, count)`` pair is exactly one row of a
-    ``results.select_from_tiles`` input, so lanes compose hierarchically
-    — tile lanes into a shard lane, shard lanes across waves or
-    micro-batches into a global selection — and are cheap enough
-    (``(1 + NC) * 4`` bytes) to ship across hosts or device pools.
-    ``row_offset`` may be a traced scalar (e.g. a worker index inside
-    ``shard_map``).
+    One ``(cand, count[, keys])`` triple is exactly one row of a
+    ``results.select_from_tiles`` (+ ``gather_from_tiles``) input, so
+    lanes compose hierarchically — tile lanes into a shard lane, shard
+    lanes across waves or micro-batches into a global selection — and
+    are cheap enough (``(1 + NC) * 4`` [+ ``8 NC``] bytes) to ship
+    across hosts or device pools. ``row_offset`` may be a traced scalar
+    (e.g. a worker index inside ``shard_map``).
+
+    With ``params.adaptive_lanes`` the internal tile lanes are two-pass
+    sized (the wire lane stays ``NC`` wide — its ``G = 1`` makes it
+    cheap already). Under jit/shard_map tracing the sizing host sync is
+    impossible, so the traced caller must pre-measure and pass
+    ``lane_width`` explicitly (see ``sharded_filter_compact``'s count
+    wave); a traced call with ``adaptive_lanes`` and no ``lane_width``
+    raises rather than silently falling back to worst-case lanes.
     """
+    from repro.kernels.fused_probe import SIG_MODE_VARIANT
+
+    if sig_mode is None:
+        D, T = docs.shape
+        sig_mode = _stream_sig_mode(params, D, T, max_len)
     NC = params.max_candidates
-    counts, cands = stream_probe_tiles(
-        docs, max_len, flt, params, tile_docs, row_offset=row_offset
+    if params.adaptive_lanes and lane_width is None:
+        if isinstance(docs, jax.core.Tracer):
+            raise ValueError(
+                "shard_lane: ExtractParams(adaptive_lanes=True) under "
+                "jit/shard_map tracing needs an explicit lane_width — the "
+                "count-pass host sync cannot run inside a trace; measure "
+                "with stream_tile_counts + round_lane_width outside the "
+                "trace (sharded_filter_compact's count wave does this) "
+                "and pass the width in"
+            )
+        lane_width = _adaptive_width(docs, max_len, flt, params, tile_docs)
+    counts, cands, vkeys = stream_probe_tiles(
+        docs, max_len, flt, params, tile_docs, row_offset=row_offset,
+        lane_width=lane_width, sig_mode=sig_mode,
     )
-    sel, ok, n = select_from_tiles(counts, cands, NC)
-    return jnp.where(ok, sel, -1)[None, :], n[None].astype(jnp.int32)
+    complete = lane_width is not None and lane_width < NC
+    sel, ok, n = select_from_tiles(counts, cands, NC, complete_tiles=complete)
+    keys = None
+    if sig_mode == SIG_MODE_VARIANT:
+        keys = gather_from_tiles(counts, vkeys, NC)[None, :, :]
+    return jnp.where(ok, sel, -1)[None, :], n[None].astype(jnp.int32), keys
 
 
 def sharded_filter_compact(
@@ -215,11 +380,15 @@ def sharded_filter_compact(
     and ragged tails are PAD-padded (PAD rows can never survive, so
     padding never perturbs the selection).
     """
+    from repro.kernels.fused_probe import SIG_MODE_VARIANT
+
     if max_len > 32 or not params.kernel_compact:
         # no epilogue -> no lanes to shard over; single-call fallback
         return engine.fused_filter_compact(doc_tokens, max_len, flt, params)
     D, T = doc_tokens.shape
     engine.check_flat_index_space(D, T, max_len)
+    sig_mode = _stream_sig_mode(params, D, T, max_len)
+    var = sig_mode == SIG_MODE_VARIANT
     n_workers = int(mesh.shape[axis_name]) if mesh is not None else 1
     spec = plan_shards(D, n_workers, shard_docs, tile_docs)
     NC = params.max_candidates
@@ -230,29 +399,65 @@ def sharded_filter_compact(
         padded = jnp.pad(doc_tokens, ((0, rows_padded - D), (0, 0)),
                          constant_values=PAD)
 
-    lanes, totals = [], []
+    lanes, totals, keys = [], [], []
     if mesh is None:
         for s in range(n_waves * n_workers):
-            lane, n = shard_lane(
+            lane, n, vk = shard_lane(
                 padded[s * spec.shard_docs:(s + 1) * spec.shard_docs],
                 s * spec.shard_docs,
-                max_len, flt, params, spec.tile_docs,
+                max_len, flt, params, spec.tile_docs, sig_mode=sig_mode,
             )
             lanes.append(lane)
             totals.append(n)
+            if var:
+                keys.append(vk)
     else:
-        def wave_body(docs, row_off):
-            return shard_lane(
-                docs, row_off[0], max_len, flt, params, spec.tile_docs
+        def wave_body(docs, row_off, lane_width=None):
+            out = shard_lane(
+                docs, row_off[0], max_len, flt, params, spec.tile_docs,
+                lane_width=lane_width, sig_mode=sig_mode,
+            )
+            return out if var else out[:2]
+
+        n_out = 3 if var else 2
+        if params.adaptive_lanes:
+            # adaptive under shard_map: the sizing host sync cannot live
+            # inside the trace, so each wave runs a count-only shard_map
+            # pass first and the measured width is traced in statically
+            # (power-of-two rounding bounds the retrace count).
+            from repro.kernels.fused_probe import (
+                MIN_LANE_WIDTH,
+                round_lane_width,
             )
 
-        wave_fn = shard_map(
-            wave_body,
-            mesh=mesh,
-            in_specs=(P(axis_name), P(axis_name)),
-            out_specs=(P(axis_name), P(axis_name)),
-            check_vma=False,
-        )
+            def count_body(docs):
+                c = stream_tile_counts(
+                    docs, max_len, flt, params, spec.tile_docs
+                )
+                return jnp.max(c)[None]
+
+            count_fn = shard_map(
+                count_body,
+                mesh=mesh,
+                in_specs=(P(axis_name),),
+                out_specs=P(axis_name),
+                check_vma=False,
+            )
+        else:
+            count_fn = None
+        wave_cache: dict = {}
+
+        def wave_fn_for(lane_width):
+            if lane_width not in wave_cache:
+                wave_cache[lane_width] = shard_map(
+                    lambda d, o: wave_body(d, o, lane_width=lane_width),
+                    mesh=mesh,
+                    in_specs=(P(axis_name), P(axis_name)),
+                    out_specs=tuple([P(axis_name)] * n_out),
+                    check_vma=False,
+                )
+            return wave_cache[lane_width]
+
         for w in range(n_waves):
             block = padded[
                 w * n_workers * spec.shard_docs:(w + 1) * n_workers * spec.shard_docs
@@ -260,11 +465,25 @@ def sharded_filter_compact(
             offs = (
                 (w * n_workers + jnp.arange(n_workers)) * spec.shard_docs
             ).astype(jnp.int32)
-            lane, n = wave_fn(block, offs)
-            lanes.append(lane.reshape(n_workers, NC))
-            totals.append(n.reshape(n_workers))
+            lane_w = None
+            if count_fn is not None:
+                lane_w = round_lane_width(
+                    int(np.asarray(count_fn(block)).max()),
+                    NC,
+                    params.lane_width or MIN_LANE_WIDTH,
+                )
+            out = wave_fn_for(lane_w)(block, offs)
+            lanes.append(out[0].reshape(n_workers, NC))
+            totals.append(out[1].reshape(n_workers))
+            if var:
+                keys.append(out[2].reshape(n_workers, NC, 2))
 
     counts = jnp.concatenate(totals)
     cands = jnp.concatenate(lanes, axis=0)
     sel, ok, n = select_from_tiles(counts, cands, NC)
-    return engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+    out = engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+    if var:
+        out = engine.attach_variant_keys(
+            out, gather_from_tiles(counts, jnp.concatenate(keys, axis=0), NC)
+        )
+    return out

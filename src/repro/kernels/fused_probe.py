@@ -15,6 +15,10 @@ tensors through HBM between them; here every per-window quantity is a
     survive[t, l]    = valid[t, l] & OR(hit[t .. t+l])    (running-or)
     rmin_i[t, l]     = MIN(h_i(tok[t .. t+l]))            (running-min, i < B*R)
     sig[t, l, b]     = combine(rmin_{bR} .. rmin_{bR+R-1}, b+1)
+    dup[t, l]        = OR(tok[t+l] == tok[t .. t+l-1])    (shifted compares)
+    fold_i[t, l]     = (SUM, XOR, COUNT) of h_i(tok[t+j]) over the
+                       first-occurrence positions j <= l  (running fold)
+    key_i[t, l]      = mix(sum ^ xor*C1 ^ cnt*GOLDEN)     (set_hash finalise)
 
 The survival mask is emitted *packed*: bit ``l`` of ``packed[d, t]``
 (uint32, so L <= 32) is ``survive[d, t, l]`` — a 4 B/token store instead
@@ -25,6 +29,23 @@ first-occurrence masking the jnp path applies never changes a row
 minimum, and the seeds / murmur3 finaliser / combine below match
 ``core.hashing`` exactly.
 
+The ``variant`` scheme (paper Definition 2) is fused the same way:
+``core.hashing.set_hash`` is a commutative (sum, xor, count) fold over
+per-token hashes, so both 32-bit variant keys extend token by token —
+the only obstacle to streaming is first-occurrence masking, which the
+kernel makes streamable with a *register-resident duplicate mask*:
+token ``t+l`` is a duplicate inside window ``[t, t+l]`` iff it equals
+any of ``tok[t .. t+l-1]``, i.e. iff the current shifted token stream
+matches any of the <= 31 previously shifted streams (all VMEM/register
+resident, no HBM traffic). Masked contributions then feed the running
+fold, and the finalised keys are bit-identical to
+``core.variants.window_variant_key`` at every (pos, len) — including
+PAD-heavy and all-duplicate windows (see ``streaming_first_occurrence``
+for the host-testable reference of the mask). With the compaction
+epilogue on, the keys are not stored densely: they ride the candidate
+lanes as a tiny ``[G, NC, 2]`` payload gathered at the surviving flat
+indices.
+
 HBM-traffic accounting (per document token; L = max_len, K = num_hashes,
 B = bands; see ``hbm_bytes_unfused`` / ``hbm_bytes_fused``):
 
@@ -32,6 +53,8 @@ B = bands; see ``hbm_bytes_unfused`` / ``hbm_bytes_fused``):
              + write L (int8 mask) + read L (compaction scan)
     fused    read 4 (docs) + write 4 (packed bitmap)
              [+ write 4LB (band sigs, lsh mode only)]
+             [+ G*(1+W)*4 lane ints + G*W*8 variant-key payload,
+                epilogue mode; W = NC one-pass, measured two-pass]
 
 For the filter stages alone that is a ~(10L+4)/8 ≈ 10x traffic cut at
 L = 8; the kernel additionally hashes each token K times instead of the
@@ -50,6 +73,18 @@ last XLA pass over the full [D, T] bitmap (cumsum + searchsorted in
 ``extraction.results.select_nonzero``) disappears, which matters because
 candidate-generation traffic, not verification, dominates at scale.
 
+The lane width is *decoupled* from the candidate capacity: a one-pass
+emit must keep ``candidates = NC`` wide lanes for bit parity (the
+global first-NC could all land in one tile), but an **adaptive
+two-pass** run first streams a ``count_only=True`` pass (per-tile SMEM
+counts, no lane store), sizes the emit pass's lane width to the
+measured per-tile survivor maximum (``round_lane_width``), and re-runs
+with ``candidates = W << NC`` — every tile's lane then holds *all* of
+its survivors, so the ``select_from_tiles`` merge stays bit-identical
+while lane traffic drops from ``G*(1+NC)`` to ``G*(1+W)`` ints. Both
+passes share the NC-derived tile height (``compact_tile_height``) so
+their grids — and therefore the per-tile counts — line up exactly.
+
 Tiling: one full document row per grid row ([Bd, T] tiles) so windows
 never straddle a tile edge; the Bloom bitmap block is grid-invariant
 (loaded once, reused across steps). Validated in interpret mode on CPU;
@@ -66,14 +101,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import hashing
 from repro.core.filter import _BLOOM_SEED_BASE  # single source of truth
+from repro.core.hashing import _C1, _GOLDEN
 from repro.core.signatures import _LSH_SEED_BASE
+from repro.core.variants import VARIANT_SEEDS
 from repro.kernels._hashing import combine as _combine
 from repro.kernels._hashing import hash_seeded as _hash
+from repro.kernels._hashing import mix as _mix
 
 _MAX_U32 = 0xFFFFFFFF
 
 DEFAULT_BD = 8
+
+#: smallest adaptive emit-pass lane width: keeps the lane store aligned
+#: and bounds recompiles (widths are rounded up to powers of two).
+MIN_LANE_WIDTH = 8
 
 
 def compact_tile_height(D: int, T: int, candidates: int) -> int:
@@ -84,11 +127,59 @@ def compact_tile_height(D: int, T: int, candidates: int) -> int:
     lane traffic is G * (1 + NC) * 8 B and only stays well under the
     bitmap bytes it replaces when bd >= 4 * NC / T. Single source of
     truth for ``ops.fused_probe_compact`` and ``hbm_bytes_fused``.
+
+    Adaptive two-pass runs keep this NC-derived height for *both* the
+    count pass and the narrower emit pass: the emit width W is chosen
+    from the count pass's per-tile maxima, which is only sound if the
+    two grids tile the documents identically. The narrower lanes then
+    undercut even this conservative geometry (G*(1+W) vs G*(1+NC)
+    ints); see ``hbm_bytes_fused(two_pass=True)`` for the full trade.
     """
     return min(max(DEFAULT_BD, -(-4 * candidates // max(T, 1))), max(D, 1))
 
+
+def round_lane_width(max_count: int, cap: int,
+                     floor: int = MIN_LANE_WIDTH) -> int:
+    """Adaptive emit-pass lane width for a measured per-tile maximum.
+
+    Rounds the measured per-tile survivor maximum up to a power of two
+    (>= ``floor``) so repeated runs at similar densities reuse the same
+    compiled kernel, and caps at ``cap`` (= NC: wider lanes than the
+    merge capacity are never read). Any W >= max_count keeps the merge
+    exact — every tile's lane holds all of its survivors.
+    """
+    w = max(int(max_count), int(floor), 1)
+    w = 1 << (w - 1).bit_length()
+    return max(min(w, int(cap)), 1)
+
+
 SIG_MODE_NONE = "none"
 SIG_MODE_LSH = "lsh"
+SIG_MODE_VARIANT = "variant"
+
+
+def streaming_first_occurrence(tokens, *, xp=np):
+    """First-occurrence mask via the kernel's shifted-compare recurrence.
+
+    Host-testable reference of the in-kernel duplicate mask: position
+    ``j`` of each padded window row is marked iff it is real (non-PAD)
+    and equals none of positions ``0 .. j-1`` — exactly the <= L-1
+    shifted compares the kernel performs against its previously shifted
+    token streams. Bit-identical to
+    ``core.semantics.first_occurrence_mask`` (property-tested); kept
+    next to the kernel so the trick has a readable, testable form.
+    """
+    L = tokens.shape[-1]
+    dup = xp.zeros(tokens.shape, dtype=bool)
+    for j in range(1, L):
+        hit = xp.zeros(tokens.shape[:-1], dtype=bool)
+        for i in range(j):
+            hit = hit | (tokens[..., i] == tokens[..., j])
+        if xp is np:
+            dup[..., j] = hit
+        else:
+            dup = dup.at[..., j].set(hit)
+    return (tokens != 0) & ~dup  # PAD == 0
 
 
 def empty_band_sigs(bands: int, rows: int) -> np.ndarray:
@@ -99,8 +190,6 @@ def empty_band_sigs(bands: int, rows: int) -> np.ndarray:
     non-surviving candidate slots so the fused signature tensor is
     bit-identical to ``window_signatures`` on PAD-only windows too.
     """
-    from repro.core import hashing
-
     row = np.full((1,), _MAX_U32, dtype=np.uint32)
     out = []
     for b in range(bands):
@@ -124,13 +213,19 @@ def _kernel(
     rows: int,
     use_filter: bool,
     sig_mode: str,
+    dense_sigs: bool,
+    count_tiles: bool,
     cand_cap: int,
 ):
-    # ref layout after packed_ref: [sig_ref] [count_ref, cand_ref] [cnt_scr]
+    # ref layout after packed_ref:
+    #   [sig_ref] [count_ref] [cand_ref [vkey_ref]] [cnt_scr]
     refs = list(rest_refs)
-    sig_ref = refs.pop(0) if sig_mode == SIG_MODE_LSH else None
-    if cand_cap:
-        count_ref, cand_ref, cnt_scr = refs
+    sig_ref = refs.pop(0) if dense_sigs else None
+    count_ref = refs.pop(0) if count_tiles else None
+    cand_ref = refs.pop(0) if cand_cap else None
+    var = sig_mode == SIG_MODE_VARIANT
+    vkey_ref = refs.pop(0) if (var and cand_cap) else None
+    cnt_scr = refs.pop(0) if count_tiles else None
     docs = doc_ref[...]  # [Bd, T] int32
     Bd, T = docs.shape
     real = docs != 0  # PAD == 0
@@ -155,22 +250,35 @@ def _kernel(
             for i in range(bands * rows)
         ]
         rmin = [jnp.full(docs.shape, _MAX_U32, dtype=jnp.uint32) for _ in hv]
+    if var:
+        # variant set-hash recurrence: per-window running (sum, xor,
+        # count) folds for both 32-bit keys; first-occurrence masking is
+        # streamed via the duplicate mask below (shifted compares
+        # against the previously shifted token streams — all register
+        # resident), bit-identical to core.variants.window_variant_key.
+        zero = jnp.zeros(docs.shape, dtype=jnp.uint32)
+        vs1, vx1, vs2, vx2, vcnt = zero, zero, zero, zero, zero
+        prev_toks: list = []  # token streams shifted by 0 .. l-1
+        vkeys1: list = []  # per-length finalised keys (lane/dense store)
+        vkeys2: list = []
 
     vand = jnp.ones(docs.shape, bool)
     vor = jnp.zeros(docs.shape, bool)
     pack = jnp.zeros(docs.shape, dtype=jnp.uint32)
     sh_real, sh_hit = real, hit
     sh_hv = list(hv) if lsh else []
+    sh_tok = docs if var else None
     zero_row = jnp.zeros((Bd, 1), bool)
     max_row = jnp.full((Bd, 1), _MAX_U32, dtype=jnp.uint32)
-    if cand_cap:
+    pad_row = jnp.zeros((Bd, 1), dtype=docs.dtype)
+    if count_tiles:
         cnt_scr[0] = jnp.int32(0)  # scratch persists across grid steps
     for l in range(max_len):
         vand = vand & sh_real
         vor = vor | sh_hit
         surv = vand & vor
         pack = pack | (surv.astype(jnp.uint32) << jnp.uint32(l))
-        if cand_cap:
+        if count_tiles:
             # per-tile survivor count, accumulated in scratch as the
             # length recurrence runs (feeds the compaction epilogue)
             cnt_scr[0] += surv.sum().astype(jnp.int32)
@@ -183,6 +291,31 @@ def _kernel(
                     band = _combine(band, rmin[b * rows + r])
                 band = _combine(band, jnp.full_like(band, jnp.uint32(b + 1)))
                 sig_ref[:, :, l, b] = band
+        if var:
+            # duplicate mask: tok[t+l] repeats inside [t, t+l] iff the
+            # current shifted stream equals any earlier shifted stream
+            # (PAD-vs-PAD hits are masked out by sh_real below)
+            dup = jnp.zeros(docs.shape, bool)
+            for pv in prev_toks:
+                dup = dup | (pv == sh_tok)
+            contrib = sh_real & ~dup  # == first_occurrence_mask position
+            h1 = jnp.where(contrib, _hash(sh_tok, VARIANT_SEEDS[0]),
+                           jnp.uint32(0))
+            h2 = jnp.where(contrib, _hash(sh_tok, VARIANT_SEEDS[1]),
+                           jnp.uint32(0))
+            vs1, vx1 = vs1 + h1, vx1 ^ h1
+            vs2, vx2 = vs2 + h2, vx2 ^ h2
+            vcnt = vcnt + contrib.astype(jnp.uint32)
+            # set_hash finalise (core.hashing.set_hash, bit-identical)
+            fin = vcnt * jnp.uint32(_GOLDEN)
+            k1 = _mix(vs1 ^ (vx1 * jnp.uint32(_C1)) ^ fin)
+            k2 = _mix(vs2 ^ (vx2 * jnp.uint32(_C1)) ^ fin)
+            vkeys1.append(k1)
+            vkeys2.append(k2)
+            if dense_sigs:
+                sig_ref[:, :, l, 0] = k1
+                sig_ref[:, :, l, 1] = k2
+            prev_toks.append(sh_tok)
         if l + 1 < max_len:
             sh_real = jnp.concatenate([sh_real[:, 1:], zero_row], axis=1)
             sh_hit = jnp.concatenate([sh_hit[:, 1:], zero_row], axis=1)
@@ -190,13 +323,16 @@ def _kernel(
                 sh_hv = [
                     jnp.concatenate([v[:, 1:], max_row], axis=1) for v in sh_hv
                 ]
+            if var:
+                sh_tok = jnp.concatenate([sh_tok[:, 1:], pad_row], axis=1)
     packed_ref[...] = pack
+    if count_tiles:
+        count_ref[0] = cnt_scr[0]
     if cand_cap:
         # compaction epilogue: emit the tile's surviving (doc, pos, len)
         # triples as ascending *global* flat indices, packed to the front
         # of a fixed [cand_cap] lane — everything VMEM-resident, so the
         # [D, T] bitmap is never re-read from HBM to compact it.
-        count_ref[0] = cnt_scr[0]
         L = max_len
         lane = jax.lax.iota(jnp.int32, cand_cap)  # iota: no captured consts
         # two-stage (word -> bit) selection, sort- and scatter-free
@@ -221,6 +357,18 @@ def _kernel(
         cand_ref[0, :] = jnp.where(
             ok, pl.program_id(0) * Bd * T * L + flat, -1
         )
+        if var:
+            # variant keys ride the lane: gather both finalised keys at
+            # the selected local flat indices — the dense [Bd, T, L, 2]
+            # tensor never leaves registers/VMEM, only the [cand_cap, 2]
+            # payload is stored. Padded slots carry 0, the set_hash of
+            # the empty window (bit-parity with window_variant_key on
+            # all-PAD windows).
+            sel = jnp.clip(flat, 0, Bd * T * L - 1)
+            k1_flat = jnp.stack(vkeys1, axis=-1).reshape(-1)  # [Bd*T*L]
+            k2_flat = jnp.stack(vkeys2, axis=-1).reshape(-1)
+            vkey_ref[0, :, 0] = jnp.where(ok, k1_flat[sel], jnp.uint32(0))
+            vkey_ref[0, :, 1] = jnp.where(ok, k2_flat[sel], jnp.uint32(0))
 
 
 @functools.partial(
@@ -235,6 +383,7 @@ def _kernel(
         "use_filter",
         "bd",
         "candidates",
+        "count_only",
         "interpret",
     ),
 )
@@ -250,53 +399,85 @@ def fused_probe_pallas(
     use_filter: bool = True,
     bd: int = DEFAULT_BD,
     candidates: int = 0,
+    count_only: bool = False,
     interpret: bool = True,
 ):
     """One-pass filter+signature probe with optional compaction epilogue.
 
-    Returns ``(packed, sigs, counts, cands)``: ``packed`` [D, T] uint32
-    with bit ``l`` = survive(pos, len=l+1) (validity AND Bloom survival;
-    validity only when ``use_filter=False``); ``sigs`` is
-    [D, T, max_len, bands] uint32 MinHash band signatures when
-    ``sig_mode == "lsh"``, else ``None``. When ``candidates > 0`` the
-    kernel additionally runs the in-kernel compaction epilogue:
-    ``counts`` [G] int32 holds each grid tile's true survivor count
-    (scratch-accumulated; may exceed ``candidates``) and ``cands``
-    [G, candidates] int32 the tile's first ``candidates`` survivors as
-    ascending global flat (doc*T + pos)*max_len + (len-1) indices, -1
-    padded — downstream compaction reads these tiny per-tile lanes and
-    never re-reads the [D, T] bitmap (see
-    ``extraction.results.select_from_tiles``). Both are ``None`` when
-    ``candidates == 0``.
+    Returns ``(packed, sigs, counts, cands, vkeys)``:
+
+    * ``packed`` [D, T] uint32 with bit ``l`` = survive(pos, len=l+1)
+      (validity AND Bloom survival; validity only when
+      ``use_filter=False``);
+    * ``sigs`` — [D, T, max_len, bands] uint32 MinHash band signatures
+      when ``sig_mode == "lsh"``; [D, T, max_len, 2] uint32 variant key
+      pairs when ``sig_mode == "variant"`` *without* the epilogue
+      (dense mode); else ``None``;
+    * with ``candidates > 0``, the in-kernel compaction epilogue:
+      ``counts`` [G] int32 holds each grid tile's true survivor count
+      (scratch-accumulated; may exceed ``candidates``) and ``cands``
+      [G, candidates] int32 the tile's first ``candidates`` survivors as
+      ascending global flat (doc*T + pos)*max_len + (len-1) indices, -1
+      padded — downstream compaction reads these tiny per-tile lanes and
+      never re-reads the [D, T] bitmap (see
+      ``extraction.results.select_from_tiles``). ``candidates`` is the
+      *lane width*: callers shrink it below the merge capacity after a
+      count pass (adaptive two-pass; see ``round_lane_width``);
+    * ``vkeys`` [G, candidates, 2] uint32 — the variant key pairs of
+      each lane slot (``sig_mode == "variant"`` with the epilogue; the
+      dense ``sigs`` tensor is *not* emitted then), 0 in padded slots;
+    * ``count_only=True`` (with ``candidates > 0``) emits ``counts``
+      but skips the lane (and key) stores — the cheap sizing pass of
+      the adaptive two-pass scheme. ``candidates`` then only sets the
+      tile geometry via the caller's ``bd`` choice.
     """
     assert max_len <= 32, "packed survival bitmap holds at most 32 lengths"
+    assert candidates or not count_only, "count_only needs candidates > 0"
+    assert not (count_only and sig_mode != SIG_MODE_NONE), (
+        "count_only is the sizing pass: signatures belong to the emit pass"
+    )
     D, T = doc_tokens.shape
     bd = min(bd, D)
     Dp = -(-D // bd) * bd
     G = Dp // bd
     if Dp != D:
         doc_tokens = jnp.pad(doc_tokens, ((0, Dp - D), (0, 0)))
+    count_tiles = candidates > 0
+    cand_cap = 0 if count_only else candidates
+    dense_sigs = sig_mode == SIG_MODE_LSH or (
+        sig_mode == SIG_MODE_VARIANT and not cand_cap
+    )
+    sig_depth = {SIG_MODE_LSH: bands, SIG_MODE_VARIANT: 2}
 
     out_shape = [jax.ShapeDtypeStruct((Dp, T), jnp.uint32)]
     out_specs = [pl.BlockSpec((bd, T), lambda i: (i, 0))]
-    if sig_mode == SIG_MODE_LSH:
+    if sig_mode not in (SIG_MODE_NONE, SIG_MODE_LSH, SIG_MODE_VARIANT):
+        raise ValueError(f"unknown sig_mode {sig_mode!r}")
+    if dense_sigs:
+        S = sig_depth[sig_mode]
         out_shape.append(
-            jax.ShapeDtypeStruct((Dp, T, max_len, bands), jnp.uint32)
+            jax.ShapeDtypeStruct((Dp, T, max_len, S), jnp.uint32)
         )
         out_specs.append(
-            pl.BlockSpec((bd, T, max_len, bands), lambda i: (i, 0, 0, 0))
+            pl.BlockSpec((bd, T, max_len, S), lambda i: (i, 0, 0, 0))
         )
-    elif sig_mode != SIG_MODE_NONE:
-        raise ValueError(f"unknown sig_mode {sig_mode!r}")
     scratch_shapes = []
-    if candidates:
+    if count_tiles:
         out_shape.append(jax.ShapeDtypeStruct((G,), jnp.int32))
         out_specs.append(pl.BlockSpec((1,), lambda i: (i,)))
-        out_shape.append(jax.ShapeDtypeStruct((G, candidates), jnp.int32))
-        out_specs.append(pl.BlockSpec((1, candidates), lambda i: (i, 0)))
         from jax.experimental.pallas import tpu as pltpu
 
         scratch_shapes = [pltpu.SMEM((1,), jnp.int32)]
+    if cand_cap:
+        out_shape.append(jax.ShapeDtypeStruct((G, cand_cap), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, cand_cap), lambda i: (i, 0)))
+        if sig_mode == SIG_MODE_VARIANT:
+            out_shape.append(
+                jax.ShapeDtypeStruct((G, cand_cap, 2), jnp.uint32)
+            )
+            out_specs.append(
+                pl.BlockSpec((1, cand_cap, 2), lambda i: (i, 0, 0))
+            )
 
     outs = pl.pallas_call(
         functools.partial(
@@ -308,7 +489,9 @@ def fused_probe_pallas(
             rows=rows,
             use_filter=use_filter,
             sig_mode=sig_mode,
-            cand_cap=candidates,
+            dense_sigs=dense_sigs,
+            count_tiles=count_tiles,
+            cand_cap=cand_cap,
         ),
         grid=(Dp // bd,),
         in_specs=[
@@ -322,9 +505,11 @@ def fused_probe_pallas(
     )(doc_tokens, bits)
     outs = list(outs)
     packed = outs.pop(0)[:D]
-    sigs = outs.pop(0)[:D] if sig_mode == SIG_MODE_LSH else None
-    counts, cands = (outs[0], outs[1]) if candidates else (None, None)
-    return packed, sigs, counts, cands
+    sigs = outs.pop(0)[:D] if dense_sigs else None
+    counts = outs.pop(0) if count_tiles else None
+    cands = outs.pop(0) if cand_cap else None
+    vkeys = outs.pop(0) if (cand_cap and sig_mode == SIG_MODE_VARIANT) else None
+    return packed, sigs, counts, cands, vkeys
 
 
 # --------------------------------------------------------------------------
@@ -348,7 +533,9 @@ def hbm_bytes_unfused(D: int, T: int, max_len: int, max_candidates: int,
 
 def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
                     bands: int, lsh: bool, sig_width: int = 0,
-                    kernel_compact: bool = False, bd: int | None = None) -> int:
+                    kernel_compact: bool = False, bd: int | None = None,
+                    lane_width: int | None = None, two_pass: bool = False,
+                    variant_keys: bool = False) -> int:
     """Bytes moved by the fused megakernel pipeline: docs read once,
     packed [D,T] uint32 bitmap write (+ compaction re-read unless the
     in-kernel epilogue runs), compacted [N,L] window gather straight
@@ -357,21 +544,39 @@ def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
     [N, sig_width] signature store the unfused pipeline pays
     (``lsh=False``; pass the scheme's ``sig_width`` so the two models
     stay symmetric). With ``kernel_compact=True`` the epilogue emits
-    per-tile [G, 1 + max_candidates] count/candidate lanes instead: the
-    bitmap is written once for inspection but never re-read, and the
-    host-side combine touches only the lanes."""
+    per-tile [G, 1 + W] count/candidate lanes instead: the bitmap is
+    written once for inspection but never re-read, and the host-side
+    combine touches only the lanes. ``W = lane_width or
+    max_candidates``: the adaptive two-pass scheme shrinks W to the
+    measured per-tile survivor maximum, paying for it with a count-only
+    sizing pass (``two_pass=True``: docs re-read + bitmap re-write +
+    [G] count round trip). ``variant_keys=True`` models the fused
+    variant scheme: the post-compaction [N, sig_width] signature store
+    is replaced by the [G, W, 2] key-lane payload (write + combine
+    read) riding the candidate lanes."""
     tokens = D * T
     packed = tokens * 4
     gather = max_candidates * max_len * 4
     if kernel_compact:
         if bd is None:
             bd = compact_tile_height(D, T, max_candidates)
-        tiles = -(-D // bd) * (1 + max_candidates) * 4  # write + combine read
+        W = lane_width if lane_width is not None else max_candidates
+        G = -(-D // bd)
+        tiles = G * (1 + W) * 4  # write + combine read
         total = tokens * 4 + packed + 2 * tiles + 2 * gather
+        if two_pass:
+            # count-only sizing pass: docs read + bitmap write again,
+            # plus the [G] per-tile counts' write and host read-back
+            total += tokens * 4 + packed + 2 * G * 4
+        if variant_keys:
+            total += 2 * G * W * 8  # [G, W, 2] u32 key lanes, write+read
     else:
         total = tokens * 4 + 2 * packed + 2 * gather
+        if variant_keys:
+            # dense mode: [D, T, L, 2] key tensor store + [N, 2] gather
+            total += tokens * max_len * 8 + max_candidates * 8
     if lsh:
         total += tokens * max_len * bands * 4 + max_candidates * bands * 4
-    else:
+    elif not variant_keys:
         total += max_candidates * sig_width * 4
     return total

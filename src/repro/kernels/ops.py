@@ -87,9 +87,13 @@ def fused_probe(
 
     ``flt`` is (bits, num_bits, num_hashes) or None (validity only).
     Returns (packed [D, T] uint32 survival bitmap, sigs or None) — see
-    ``fused_probe.fused_probe_pallas``.
+    ``fused_probe.fused_probe_pallas``; ``sigs`` holds [.., bands]
+    MinHash band sigs (``sig_mode="lsh"``) or [.., 2] variant key
+    pairs (``sig_mode="variant"``, dense mode).
     """
-    packed, sigs, _, _ = _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, 0)
+    packed, sigs, _, _, _ = _probe(
+        doc_tokens, flt, max_len, sig_mode, bands, rows, 0
+    )
     return packed, sigs
 
 
@@ -101,19 +105,23 @@ def fused_probe_compact(
     sig_mode: str = _fp.SIG_MODE_NONE,
     bands: int = 4,
     rows: int = 2,
+    lane_width: int | None = None,
 ):
     """``fused_probe`` plus the in-kernel compaction epilogue.
 
-    Returns (packed, sigs, counts [G] int32, cands [G, candidates]
-    int32): per grid tile, the true survivor count and the tile's first
-    ``candidates`` survivors as ascending global flat window indices
-    (-1 pad). Combine across tiles with
+    Returns (packed, sigs, counts [G] int32, cands [G, W] int32, vkeys):
+    per grid tile, the true survivor count and the tile's first ``W``
+    survivors as ascending global flat window indices (-1 pad), where
+    ``W = lane_width or candidates``. With ``sig_mode="variant"`` the
+    survivors' key pairs ride along as ``vkeys`` [G, W, 2] uint32 (and
+    no dense ``sigs`` tensor is emitted). Combine across tiles with
     ``extraction.results.select_from_tiles`` — no pass over ``packed``
     is needed.
 
-    The doc-tile height grows with the candidate capacity so lane
-    traffic stays well under the bitmap bytes it replaces — see
-    ``fused_probe.compact_tile_height``.
+    ``lane_width`` narrows the emitted lanes below the merge capacity
+    (the adaptive two-pass emit pass, sized by ``fused_probe_count``);
+    the tile height stays derived from ``candidates`` so the count and
+    emit passes share one grid — see ``fused_probe.compact_tile_height``.
     """
     if candidates <= 0:
         raise ValueError(
@@ -130,14 +138,52 @@ def fused_probe_compact(
             "engine.fused_filter_compact, which falls back to the "
             "standalone window_filter kernel + dense compaction"
         )
+    if lane_width is not None and not 0 < lane_width <= candidates:
+        raise ValueError(
+            f"fused_probe_compact(lane_width={lane_width}): the emit-pass "
+            f"lane width must be in (0, candidates={candidates}] — wider "
+            "lanes than the merge capacity are never read, and the merge "
+            "is only exact when every tile's survivors fit the lane "
+            "(choose the width with fused_probe.round_lane_width over "
+            "fused_probe_count's per-tile counts)"
+        )
     D, T = doc_tokens.shape
     bd = _fp.compact_tile_height(D, T, candidates)
-    return _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
-                  bd=bd)
+    return _probe(doc_tokens, flt, max_len, sig_mode, bands, rows,
+                  lane_width or candidates, bd=bd)
+
+
+def fused_probe_count(
+    doc_tokens,
+    flt: tuple | None,
+    max_len: int,
+    candidates: int,
+):
+    """Count-only probe pass: per-tile survivor counts, no lane store.
+
+    The cheap first pass of the adaptive two-pass compaction: streams
+    the same tiles as ``fused_probe_compact(..., candidates)`` (same
+    ``compact_tile_height`` grid, so counts line up tile for tile) but
+    emits only the [G] int32 SMEM-accumulated survivor counts. Size the
+    emit pass with ``fused_probe.round_lane_width(counts.max(), NC)``.
+    """
+    if candidates <= 0:
+        raise ValueError(
+            f"fused_probe_count(candidates={candidates}): the count pass "
+            "sizes lanes for a positive merge capacity (NC = "
+            "ExtractParams.max_candidates)"
+        )
+    D, T = doc_tokens.shape
+    bd = _fp.compact_tile_height(D, T, candidates)
+    _, _, counts, _, _ = _probe(
+        doc_tokens, flt, max_len, _fp.SIG_MODE_NONE, 4, 2, candidates,
+        bd=bd, count_only=True,
+    )
+    return counts
 
 
 def _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
-           bd: int = _fp.DEFAULT_BD):
+           bd: int = _fp.DEFAULT_BD, count_only: bool = False):
     if flt is None:
         bits = jnp.zeros((8,), dtype=jnp.uint32)
         num_bits, num_hashes, use_filter = 256, 1, False
@@ -156,5 +202,6 @@ def _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
         use_filter=use_filter,
         bd=bd,
         candidates=candidates,
+        count_only=count_only,
         interpret=_interpret(),
     )

@@ -5,8 +5,10 @@ splits a shard's: the *probe* stage streams a micro-batch's ``[D, T]``
 tile through ``fused_probe`` (with the in-kernel compaction epilogue)
 and reduces it to one ``[1, NC]`` candidate lane per plan side
 (``extraction.sharded.shard_lane`` — the wire unit, ``(1 + NC) * 4``
-bytes); the *verify* stage re-expands the lane into compacted candidate
-windows and runs the plan's probe+verify join
+bytes, plus a ``[1, NC, 2]`` variant-key payload when the fused
+variant scheme is on); the *verify* stage re-expands the lane into
+compacted candidate windows (attaching the shipped variant keys, so
+set hashes are never recomputed) and runs the plan's probe+verify join
 (``EEJoinOperator.side_matches``). The stages run on **disjoint device
 pools** connected by a **double-buffered handoff queue** (depth 2):
 while the verify pool joins batch i, the probe pool is already
@@ -38,7 +40,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.extraction import engine
-from repro.extraction.results import Matches, merge_matches, select_from_tiles
+from repro.extraction.results import (
+    Matches,
+    gather_from_tiles,
+    merge_matches,
+    select_from_tiles,
+)
 from repro.extraction.sharded import shard_lane
 from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
 from repro.serving.metrics import ServingMetrics
@@ -79,7 +86,9 @@ class _Handoff:
 
     def __init__(self, batch: MicroBatch, lanes: list, probe_s: float):
         self.batch = batch
-        self.lanes = lanes  # per plan side: (count [1] i32, cand [1, NC] i32)
+        # per plan side: (count [1] i32, cand [1, NC] i32,
+        #                 keys [1, NC, 2] u32 | None  — fused variant)
+        self.lanes = lanes
         self.probe_s = probe_s
 
 
@@ -248,11 +257,11 @@ class ExtractionService:
         docs = jax.device_put(jnp.asarray(batch.docs), dev)
         lanes = []
         for side in sess.prepared.sides:
-            lane, count = shard_lane(
+            lane, count, keys = shard_lane(
                 docs, 0, sess.max_len, side.flt, side.params,
                 batch.spec.tile_docs,
             )
-            lanes.append((count, lane))
+            lanes.append((count, lane, keys))
         jax.block_until_ready(lanes)
         return _Handoff(batch, lanes, time.perf_counter() - t0)
 
@@ -267,13 +276,21 @@ class ExtractionService:
         docs = jax.device_put(jnp.asarray(batch.docs), dev)
         out: Matches | None = None
         overflow = 0
-        for side, (count, lane) in zip(sess.prepared.sides, handoff.lanes):
+        for side, (count, lane, keys) in zip(sess.prepared.sides,
+                                             handoff.lanes):
             count, lane = jax.device_put((count, lane), dev)
             NC = side.params.max_candidates
             sel, ok, n = select_from_tiles(count, lane, NC)
             cands = engine.candidates_from_flat(
                 docs, sel, ok, n, sess.max_len, NC
             )
+            if keys is not None:
+                # fused variant keys rode the handoff lane: the verify
+                # pool attaches them instead of recomputing set hashes
+                keys = jax.device_put(keys, dev)
+                cands = engine.attach_variant_keys(
+                    cands, gather_from_tiles(count, keys, NC)
+                )
             overflow += int(cands["overflow"])
             m = sess.operator.side_matches(cands, side)
             out = m if out is None else merge_matches(

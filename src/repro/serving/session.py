@@ -78,6 +78,12 @@ class DictionarySession:
     plan: Plan
     prepared: PreparedPlan
     calibrated: bool
+    # the cost constants the plan was chosen/prepared under; after a
+    # calibrated build this carries the measured survivor density
+    # (CostParams.lane_density) that sizes adaptive candidate lanes —
+    # kept on the session so serving dashboards and the bench can
+    # compare planned vs measured lane widths.
+    cost_params: CostParams | None = None
     # serving counters (metrics reads them)
     requests: int = 0
     batches: int = 0
@@ -200,6 +206,7 @@ class SessionCache:
             plan=plan,
             prepared=prepared,
             calibrated=calibrated,
+            cost_params=cp,
         )
         self._sessions[key] = sess
         return sess

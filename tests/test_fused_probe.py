@@ -3,9 +3,12 @@
 Bit-parity contracts (interpret mode, CPU): the packed survival bitmap
 must unpack to exactly ``survival_mask(..., use_kernel=False)``, the
 compacted candidate buffers must equal ``compact_candidates`` field for
-field, and in-kernel LSH band signatures must be bit-identical to
-``core.signatures.window_signatures`` — across PAD-heavy, zero-survivor
-and overflow regimes.
+field, in-kernel LSH band signatures must be bit-identical to
+``core.signatures.window_signatures``, and in-kernel variant keys (the
+streaming set-hash fold + duplicate mask) must be bit-identical to
+``core.variants.window_variant_key`` — across PAD-heavy, duplicate-heavy,
+zero-survivor and overflow regimes. The adaptive two-pass lane
+compaction must match the worst-case one-pass lanes bit for bit.
 """
 import numpy as np
 import pytest
@@ -14,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.dictionary import PAD
 from repro.core.signatures import LshParams, window_signatures
+from repro.core.variants import window_variant_key
 from repro.extraction import engine as E
 from repro.extraction.results import select_nonzero
 from repro.kernels import ops as kops
@@ -138,6 +142,197 @@ def test_fused_sig_mode_density_heuristic():
                             use_kernel=True)
     assert "sigs" not in E.fused_filter_compact(docs, 4, flt, sparse)
     assert "sigs" in E.fused_filter_compact(docs, 4, flt, dense)
+
+
+# ---------------------------------------------------------- variant scheme
+def _variant_refs(docs, L, flt, NC):
+    """Unfused reference: compacted candidates + oracle variant sigs/keys."""
+    _, ref_c = _unfused(docs, L, flt, NC)
+    toks = ref_c["win_tokens"]
+    sig, mask = window_signatures("variant", toks, toks != PAD, GAMMA)
+    k1, k2 = window_variant_key(toks, toks != PAD, xp=jnp)
+    return ref_c, sig, mask, k1, k2
+
+
+@pytest.mark.parametrize(
+    "pad_frac,vocab",
+    [(0.0, 2048), (0.5, 2048), (0.3, 8)],  # incl. PAD- and duplicate-heavy
+)
+def test_fused_variant_keys_bit_identical(pad_frac, vocab):
+    rng = np.random.default_rng(int(pad_frac * 10) + vocab)
+    docs = _docs(rng, 10, 80, vocab=vocab, pad_frac=pad_frac)
+    flt = _filter(rng)
+    params = E.ExtractParams(gamma=GAMMA, scheme="variant",
+                             max_candidates=512, use_kernel=True)
+    got = E.fused_filter_compact(docs, 6, flt, params)
+    _, sig, mask, k1, k2 = _variant_refs(docs, 6, flt, 512)
+    np.testing.assert_array_equal(np.asarray(got["sigs"]), np.asarray(sig))
+    np.testing.assert_array_equal(np.asarray(got["sig_mask"]), np.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got["variant_keys"][0]), np.asarray(k1))
+    np.testing.assert_array_equal(np.asarray(got["variant_keys"][1]), np.asarray(k2))
+
+
+def test_fused_variant_zero_survivors():
+    rng = np.random.default_rng(21)
+    docs = _docs(rng, 4, 64, pad_frac=0.0)
+    flt = (jnp.zeros(((1 << 12) // 32,), jnp.uint32), 1 << 12, 3)  # empty
+    params = E.ExtractParams(gamma=GAMMA, scheme="variant",
+                             max_candidates=128, use_kernel=True)
+    got = E.fused_filter_compact(docs, 6, flt, params)
+    _, sig, mask, k1, k2 = _variant_refs(docs, 6, flt, 128)
+    assert int(got["n_survive"]) == 0
+    np.testing.assert_array_equal(np.asarray(got["sigs"]), np.asarray(sig))
+    np.testing.assert_array_equal(np.asarray(got["variant_keys"][0]), np.asarray(k1))
+    # empty-window set hash is 0 under either seed: padded slots carry it
+    assert not np.asarray(got["variant_keys"][0]).any()
+    assert not np.asarray(got["variant_keys"][1]).any()
+
+
+def test_fused_variant_dense_mode_matches_lane_mode():
+    """The legacy-XLA (kernel_compact=False) dense [D,T,L,2] emission and
+    the epilogue's lane payload must attach identical keys."""
+    rng = np.random.default_rng(22)
+    docs = _docs(rng, 8, 64, pad_frac=0.2)
+    flt = _filter(rng)
+    lane = E.fused_filter_compact(docs, 6, flt, E.ExtractParams(
+        gamma=GAMMA, scheme="variant", max_candidates=256, use_kernel=True))
+    dense = E.fused_filter_compact(docs, 6, flt, E.ExtractParams(
+        gamma=GAMMA, scheme="variant", max_candidates=256, use_kernel=True,
+        kernel_compact=False, kernel_sigs=True))
+    for a, b in zip(lane["variant_keys"], dense["variant_keys"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(lane["sigs"]),
+                                  np.asarray(dense["sigs"]))
+
+
+def test_streaming_first_occurrence_matches_semantics():
+    from repro.core.semantics import first_occurrence_mask
+    from repro.kernels.fused_probe import streaming_first_occurrence
+
+    rng = np.random.default_rng(23)
+    toks = rng.integers(0, 5, size=(300, 7)).astype(np.int32)  # dup-heavy
+    got = streaming_first_occurrence(toks, xp=np)
+    want = np.asarray(first_occurrence_mask(toks, xp=np))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_variant_end_to_end_index_uses_fused_keys(small_corpus):
+    """index:variant over fused candidates (keys from the kernel) must
+    equal the unfused pipeline's matches."""
+    from repro.core.filter import build_ish_filter
+
+    c = small_corpus
+    d = c.dictionary
+    flt = build_ish_filter(d, GAMMA)
+    fltt = (jnp.asarray(flt.bits), flt.num_bits, flt.num_hashes)
+    docs = jnp.asarray(c.doc_tokens)
+    ddict = E.DeviceDictionary.from_host(d)
+    parts = E.build_index_partitions(d, "variant", GAMMA, 1 << 30)
+    outs = {}
+    for use_kernel in (False, True):
+        params = E.ExtractParams(
+            gamma=GAMMA, scheme="variant", max_candidates=4096,
+            result_capacity=8192, use_kernel=use_kernel,
+        )
+        if use_kernel:
+            cands = E.fused_filter_compact(docs, d.max_len, fltt, params)
+            assert "variant_keys" in cands
+        else:
+            _, cands = _unfused(docs, d.max_len, fltt, 4096)
+        m = E.extract_index_part(cands, parts[0], ddict, params)
+        outs[use_kernel] = m.to_set()
+    assert outs[True] == outs[False] and len(outs[True]) > 0
+
+
+# ---------------------------------------------------------- two-pass lanes
+@pytest.mark.parametrize("D,T,L", [(3, 32, 4), (16, 128, 8), (9, 64, 5)])
+@pytest.mark.parametrize("scheme", ["prefix", "variant"])
+def test_two_pass_equals_one_pass(D, T, L, scheme):
+    """Adaptive two-pass lane compaction must be bit-identical to the
+    worst-case one-pass lanes at every geometry."""
+    rng = np.random.default_rng(D + T + L)
+    docs = _docs(rng, D, T, pad_frac=0.2)
+    flt = _filter(rng, density=0.3)
+    one = E.fused_filter_compact(docs, L, flt, E.ExtractParams(
+        gamma=GAMMA, scheme=scheme, max_candidates=256, use_kernel=True))
+    two = E.fused_filter_compact(docs, L, flt, E.ExtractParams(
+        gamma=GAMMA, scheme=scheme, max_candidates=256, use_kernel=True,
+        adaptive_lanes=True))
+    _assert_cands_equal(two, one)
+    if scheme == "variant":
+        for a, b in zip(two["variant_keys"], one["variant_keys"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_two_pass_narrow_lane_is_prefix_of_wide():
+    """Kernel-level: W-wide lanes == the first W slots of the NC lanes,
+    and the count pass reproduces the emit pass's per-tile counts."""
+    from repro.kernels.fused_probe import round_lane_width
+
+    rng = np.random.default_rng(24)
+    docs = _docs(rng, 16, 64, pad_frac=0.1)
+    flt = _filter(rng)  # sparse: per-tile maxima well below NC
+    NC = 512
+    counts = kops.fused_probe_count(docs, flt, 6, NC)
+    w = round_lane_width(int(np.asarray(counts).max()), NC)
+    assert w < NC, "geometry should exercise an actually-narrow lane"
+    _, _, c1, wide, _ = kops.fused_probe_compact(docs, flt, 6, NC)
+    _, _, c2, narrow, _ = kops.fused_probe_compact(docs, flt, 6, NC,
+                                                   lane_width=w)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(counts))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(counts))
+    np.testing.assert_array_equal(np.asarray(narrow),
+                                  np.asarray(wide)[:, :w])
+
+
+def test_adaptive_lanes_rejected_under_jit():
+    import jax
+
+    rng = np.random.default_rng(25)
+    docs = _docs(rng, 4, 32)
+    flt = _filter(rng)
+    params = E.ExtractParams(gamma=GAMMA, scheme="prefix", max_candidates=64,
+                             use_kernel=True, adaptive_lanes=True)
+    with pytest.raises(ValueError, match="host"):
+        jax.jit(lambda d: E.fused_filter_compact(d, 4, flt, params))(docs)
+
+
+# ---------------------------------------------------------- knob validation
+def test_lane_and_sig_knob_validation_messages():
+    base = dict(gamma=GAMMA, scheme="variant", max_candidates=64)
+    with pytest.raises(ValueError, match="kernel_compact=True"):
+        E.ExtractParams(**base, adaptive_lanes=True)
+    with pytest.raises(ValueError, match="adaptive_lanes=True"):
+        E.ExtractParams(**base, use_kernel=True, lane_width=8)
+    with pytest.raises(ValueError, match="max_candidates"):
+        E.ExtractParams(**base, use_kernel=True, adaptive_lanes=True,
+                        lane_width=65)
+    with pytest.raises(ValueError, match="use_kernel=True"):
+        E.ExtractParams(**base, kernel_sigs=True)
+    with pytest.raises(ValueError, match="no in-kernel signature"):
+        E.ExtractParams(gamma=GAMMA, scheme="word", max_candidates=64,
+                        use_kernel=True, kernel_sigs=True)
+    with pytest.raises(ValueError, match="lane_width"):
+        kops.fused_probe_compact(jnp.ones((2, 8), jnp.int32), None, 4, 16,
+                                 lane_width=32)
+    with pytest.raises(ValueError, match="positive"):
+        kops.fused_probe_count(jnp.ones((2, 8), jnp.int32), None, 4, 0)
+
+
+def test_resolve_sig_mode_variant_rules():
+    mk = lambda **kw: E.ExtractParams(gamma=GAMMA, scheme="variant",
+                                      max_candidates=64, **kw)
+    # epilogue on -> lane-resident keys at any density
+    assert E.resolve_sig_mode(mk(use_kernel=True), 64, 512, 8) == "variant"
+    # epilogue off -> dense tensor only in the high-density regime
+    off = mk(use_kernel=True, kernel_compact=False)
+    assert E.resolve_sig_mode(off, 64, 512, 8) == "none"
+    assert E.resolve_sig_mode(off, 2, 4, 4) == "variant"
+    # explicit force / suppress
+    forced = mk(use_kernel=True, kernel_compact=False, kernel_sigs=True)
+    assert E.resolve_sig_mode(forced, 64, 512, 8) == "variant"
+    off2 = mk(use_kernel=True, kernel_sigs=False)
+    assert E.resolve_sig_mode(off2, 2, 4, 4) == "none"
 
 
 # ---------------------------------------------------------- end-to-end

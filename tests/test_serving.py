@@ -393,7 +393,8 @@ def test_check_flat_index_space_message():
 # ------------------------------------------------------- shard_lane format
 def test_shard_lane_public_wire_format(small_corpus):
     """shard_lane is the public wire unit: [1, NC] int32 ascending flat
-    indices, -1 sentinel, count may exceed NC."""
+    indices, -1 sentinel, count may exceed NC; the variant-key payload
+    slot is None for schemes without fused keys."""
     from repro.core.filter import build_ish_filter
     from repro.extraction.sharded import shard_lane
 
@@ -403,7 +404,8 @@ def test_shard_lane_public_wire_format(small_corpus):
     params = E.ExtractParams(gamma=GAMMA, scheme="prefix", use_kernel=True,
                              max_candidates=64)
     docs = jnp.asarray(small_corpus.doc_tokens)
-    lane, count = shard_lane(docs, 0, d.max_len, flt, params)
+    lane, count, keys = shard_lane(docs, 0, d.max_len, flt, params)
+    assert keys is None, "prefix scheme ships no key payload"
     lane, count = np.asarray(lane), np.asarray(count)
     assert lane.shape == (1, 64) and lane.dtype == np.int32
     assert count.shape == (1,) and count.dtype == np.int32
@@ -411,6 +413,55 @@ def test_shard_lane_public_wire_format(small_corpus):
     assert (np.diff(valid) > 0).all(), "lane indices must ascend"
     assert (lane[0][len(valid):] == -1).all(), "-1 sentinel pads the tail"
     assert int(count[0]) >= len(valid)
+
+
+def test_shard_lane_variant_key_payload(small_corpus):
+    """Fused variant keys ride the wire as a [1, NC, 2] uint32 payload,
+    0 in padded slots, bit-identical to window_variant_key over the
+    lane's decoded windows."""
+    from repro.core.filter import build_ish_filter
+    from repro.core.variants import window_variant_key
+    from repro.extraction.sharded import shard_lane
+
+    d = small_corpus.dictionary
+    f = build_ish_filter(d, GAMMA)
+    flt = (jnp.asarray(f.bits), f.num_bits, f.num_hashes)
+    params = E.ExtractParams(gamma=GAMMA, scheme="variant", use_kernel=True,
+                             max_candidates=64)
+    docs = jnp.asarray(small_corpus.doc_tokens)
+    lane, count, keys = shard_lane(docs, 0, d.max_len, flt, params)
+    assert keys is not None and keys.shape == (1, 64, 2)
+    assert np.asarray(keys).dtype == np.uint32
+    lane, keys = np.asarray(lane)[0], np.asarray(keys)[0]
+    T, L = docs.shape[1], d.max_len
+    docs_np = np.asarray(docs)
+    for j, flat in enumerate(lane):
+        if flat < 0:
+            assert keys[j, 0] == 0 and keys[j, 1] == 0
+            continue
+        dd, rem = divmod(flat, T * L)
+        p, l = divmod(rem, L)
+        win = np.zeros((1, L), np.int32)
+        n = min(l + 1, T - p)
+        win[0, :n] = docs_np[dd, p:p + n]
+        k1, k2 = window_variant_key(win, win != 0, xp=np)
+        assert keys[j, 0] == k1[0] and keys[j, 1] == k2[0]
+
+
+@pytest.mark.parametrize("overlap", [True, False])
+def test_serving_parity_variant_adaptive_lanes(small_corpus, overlap):
+    """Serving with adaptive two-pass lane sizing (probe stage is eager,
+    so the per-batch count pass runs live) must stay bit-identical to
+    the one-shot reference for the fused variant scheme."""
+    cache = SessionCache()
+    sess = cache.get_or_create(
+        small_corpus.dictionary,
+        _config(adaptive_lanes=True),
+        plan=pure_plan("variant"),
+    )
+    docs = _var_docs(small_corpus, seed=41, n=7)
+    svc = _serve(cache, sess, docs, overlap)
+    assert svc.results_set() == _one_shot(sess, docs)
 
 
 # ---------------------------------------------------------------- metrics
