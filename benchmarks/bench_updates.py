@@ -1,0 +1,263 @@
+"""Live-updates bench: delta absorb vs full rebuild + epoch-swap serving.
+
+Two questions, parity asserted in-bench so drift fails CI:
+
+* **Maintenance**: how much cheaper is absorbing a delta (segment build
+  + Bloom bit-union, O(delta)) than the from-scratch rebuild it
+  replaces (filter + tables over every live entity, O(|E|))? The
+  subsystem's reason to exist is this gap — the acceptance bar is
+  ``>= 5x`` at ``<= 10%`` churn on the standard geometry. Every row
+  also re-checks the oracle: extraction over the absorbed state must
+  equal the rebuild, match for match.
+* **Serving swap**: apply a delta to a *live* session between two
+  served streams and check both streams against their own epoch's
+  one-shot reference (the no-drain hot-swap contract), reporting the
+  swap latency next to the full session-rebuild latency it replaces.
+
+Rows land in ``results/bench/updates{,_smoke}.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.cost_model import CostParams
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.extraction import engine
+from repro.data.synth import make_corpus
+from repro.serving import (
+    BatcherConfig,
+    ExtractionService,
+    SessionCache,
+    make_pools,
+    one_shot_reference,
+    session_cache_summary,
+)
+from repro.serving.session import pure_plan
+from repro import updates as U
+
+
+def _best_time(fn, iters: int = 5) -> float:
+    """Min wall seconds over ``iters`` runs: host-side build timing is
+    noise-above-floor (GC, page faults, co-running work), so the
+    minimum estimates the true cost far more stably than the median —
+    and the absorb-vs-rebuild assertion must not flake under CI load."""
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def _churn_delta(rng, version, corpus, churn: float) -> U.DictionaryDelta:
+    """~churn * |E| changed entities, half adds (noisy copies of real
+    entities, so they match documents) and half tombstones."""
+    d = version.base
+    n = max(int(round(churn * d.num_entities)), 2)
+    n_add, n_dead = n - n // 2, n // 2
+    adds = []
+    for _ in range(n_add):
+        i = int(rng.integers(0, d.num_entities))
+        toks = [int(t) for t in d.tokens[i, : int(d.lengths[i])]]
+        if len(toks) > 1:
+            toks = toks[:-1]
+        # perturb one token so adds are distinct entities
+        toks[0] = int(rng.integers(1, d.vocab_size))
+        adds.append(tuple(dict.fromkeys(toks)))
+    live = np.nonzero(version.live_mask())[0]
+    tombs = rng.choice(live, size=min(n_dead, len(live) - 1), replace=False)
+    return U.DictionaryDelta(
+        added=tuple(adds), tombstones=tuple(int(t) for t in tombs)
+    )
+
+
+def run_delta_vs_rebuild(smoke: bool = False) -> list[dict]:
+    """Absorb-vs-rebuild timing + oracle parity per scheme x churn."""
+    E = 96 if smoke else 512
+    D, T = (8, 128) if smoke else (16, 256)
+    # variant over word for the second full leg: the bench times
+    # *builds*, and the word scheme's skewed buckets make its verify
+    # gather explode at lossless NC (GBs of [N, S*cap] temporaries on
+    # CPU) while variant keeps verify tiny and builds expensive —
+    # exactly the axis under test
+    schemes = ("prefix",) if smoke else ("prefix", "variant")
+    churns = (0.05, 0.10) if smoke else (0.02, 0.05, 0.10)
+    corpus = make_corpus(
+        num_docs=D, doc_len=T, vocab_size=4096, num_entities=E, seed=0
+    )
+    docs = jnp.asarray(corpus.doc_tokens)
+    # capacities sized so neither path overflows (checked below): the
+    # union filter admits a superset of the rebuild's survivors, and
+    # truncation (surfaced as cands["overflow"]) breaks exact parity —
+    # the timing target is the O(delta)-vs-O(|E|) *build* gap, so the
+    # probed corpus stays small enough to verify losslessly
+    nc = 8192 if smoke else 32768
+    cfg = EEJoinConfig(
+        gamma=0.8, max_candidates=nc, result_capacity=2 * nc, use_kernel=True
+    )
+    rows = []
+    for scheme in schemes:
+        plan = pure_plan(scheme)
+        op = EEJoinOperator(corpus.dictionary, cfg)
+        prepared = op.prepare(plan)
+        state0 = U.initial_epoch(corpus.dictionary, plan, prepared)
+        # untimed warmup: first-call dispatch/allocator costs hit both
+        # paths once, not the first timed churn row
+        warm = _churn_delta(np.random.default_rng(99), state0.version,
+                            corpus, 0.05)
+        U.rebuild_oracle(
+            U.absorb_delta(state0, warm, cfg).version, cfg, plan
+        )
+        for churn in churns:
+            rng = np.random.default_rng(int(churn * 1000))
+            delta = _churn_delta(rng, state0.version, corpus, churn)
+
+            t_delta = _best_time(
+                lambda: U.absorb_delta(state0, delta, cfg)
+            )
+            state1 = U.absorb_delta(state0, delta, cfg)
+
+            def rebuild():
+                op2, prep2, _ = U.rebuild_oracle(state1.version, cfg, plan)
+                return op2, prep2
+
+            t_rebuild = _best_time(rebuild)
+
+            es = state1.sides[-1]
+            probe = engine.fused_filter_compact(
+                docs, state1.max_len, es.flt, es.params
+            )
+            assert int(probe["overflow"]) == 0, (
+                f"bench geometry overflows the candidate buffer "
+                f"({int(probe['n_survive'])} survivors > {cfg.max_candidates}"
+                "): truncation order differs between the delta and rebuild "
+                "paths, so exact parity needs a lossless probe — shrink "
+                "D/T or raise max_candidates"
+            )
+            got = U.epoch_matches(state1, docs, cfg)
+            want = U.oracle_matches(state1.version, cfg, plan, docs)
+            assert got == want, (
+                f"delta-vs-rebuild parity broke: scheme={scheme} "
+                f"churn={churn}: {len(got)} vs {len(want)} matches"
+            )
+            speedup = t_rebuild / max(t_delta, 1e-12)
+            # the >=5x acceptance bar holds on the standard geometry
+            # (E=512, where O(delta) vs O(|E|) dominates); the smoke
+            # dictionary is small enough that fixed device-put costs
+            # blunt the ratio, so it gates on a softer regression bar
+            floor = 1.5 if smoke else 5.0
+            if churn <= 0.10:
+                assert speedup >= floor, (
+                    f"delta absorb only {speedup:.1f}x faster than rebuild "
+                    f"at churn {churn} (scheme={scheme}, E={E}) — below "
+                    f"the >={floor}x bar"
+                )
+            from repro.core.cost_model import maintenance_plan
+
+            decision = maintenance_plan(
+                CostParams(num_devices=1),
+                live_entities=state1.version.num_live,
+                delta_entities=delta.num_added,
+                open_segments=1,
+                dead_entities=int(state1.version.tombstones.sum()),
+                total_entities=state1.version.total_entities,
+                probes_per_batch=float(cfg.max_candidates),
+                horizon_batches=64.0,
+            )
+            rows.append({
+                "scheme": scheme,
+                "entities": E,
+                "churn": churn,
+                "added": delta.num_added,
+                "tombstoned": delta.num_tombstoned,
+                "t_delta_s": t_delta,
+                "t_rebuild_s": t_rebuild,
+                "speedup": speedup,
+                "matches": len(got),
+                "planned_action": decision.action,
+            })
+    emit("updates_smoke" if smoke else "updates", rows)
+    return rows
+
+
+def run_serving_swap(smoke: bool = False) -> list[dict]:
+    """Hot-swap a live session between two served streams; parity per
+    epoch + swap latency vs the session rebuild it replaces."""
+    E = 48 if smoke else 128
+    n_docs = 8 if smoke else 24
+    corpus = make_corpus(
+        num_docs=max(n_docs, 8), doc_len=96, vocab_size=2048,
+        num_entities=E, seed=1,
+    )
+    cfg = EEJoinConfig(
+        gamma=0.8, max_candidates=8192, result_capacity=16384, use_kernel=True
+    )
+    cache = SessionCache()
+    sess = cache.get_or_create(corpus.dictionary, cfg,
+                               plan=pure_plan("prefix"))
+    rng = np.random.default_rng(2)
+    lens = rng.integers(24, 97, size=n_docs)
+    docs = [np.asarray(corpus.doc_tokens[i % 8, : lens[i]])
+            for i in range(n_docs)]
+
+    def serve():
+        svc = ExtractionService(
+            cache, pools=make_pools(),
+            batcher_config=BatcherConfig(max_batch_docs=4, max_delay_s=0.0),
+        )
+        with svc:
+            for i, d in enumerate(docs):
+                assert svc.submit(i, d, sess.key, block=True) is not None
+                svc.tick()
+            svc.drain()
+        return svc
+
+    svc0 = serve()
+    assert svc0.results_set() == one_shot_reference(sess, docs), \
+        "epoch-0 serving parity broke"
+
+    delta = _churn_delta(rng, sess.current_state.version, corpus, 0.10)
+    t0 = time.perf_counter()
+    sess.apply_delta(delta, force_action="absorb")
+    t_swap = time.perf_counter() - t0
+    # the eviction+rebuild the swap replaces: a fresh operator prepare
+    t0 = time.perf_counter()
+    op2 = EEJoinOperator(sess.dictionary, cfg)
+    op2.prepare(pure_plan("prefix"))
+    t_rebuild = time.perf_counter() - t0
+
+    svc1 = serve()
+    assert svc1.results_set() == one_shot_reference(sess, docs), \
+        "post-swap serving parity broke"
+    cs = session_cache_summary(cache)
+    row = cs["per_session"][sess.key]
+    return [{
+        "entities": E,
+        "docs": n_docs,
+        "epoch": row["epoch"],
+        "open_segments": row["open_segments"],
+        "t_swap_s": t_swap,
+        "t_session_rebuild_s": t_rebuild,
+        "swap_speedup": t_rebuild / max(t_swap, 1e-12),
+        "epoch0_matches": len(svc0.results_set()),
+        "epoch1_matches": len(svc1.results_set()),
+    }]
+
+
+def main(smoke: bool = False) -> None:
+    rows = run_delta_vs_rebuild(smoke=smoke)
+    rows_swap = run_serving_swap(smoke=smoke)
+    emit("updates_serving_smoke" if smoke else "updates_serving", rows_swap)
+    best = max(r["speedup"] for r in rows)
+    print(f"# updates: delta absorb up to {best:.1f}x faster than rebuild; "
+          f"swap {rows_swap[0]['swap_speedup']:.1f}x faster than session "
+          "rebuild (parity asserted)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ Sections:
     scaling      §6 dictionary/corpus scaling + plan crossover
     kernels      Pallas kernels vs jnp oracle (interpret mode)
     serving      async probe/verify serving: load vs latency percentiles
+    updates      live dictionary deltas: absorb vs rebuild + epoch swap
     roofline     deliverable (g) reader over results/dryrun/
 """
 from __future__ import annotations
@@ -31,6 +32,7 @@ from benchmarks import (
     bench_search,
     bench_serving,
     bench_signatures,
+    bench_updates,
 )
 
 SECTIONS = [
@@ -42,6 +44,7 @@ SECTIONS = [
     ("scaling", bench_scaling.main),
     ("kernels", bench_kernels.main),
     ("serving", bench_serving.main),
+    ("updates", bench_updates.main),
     ("roofline", bench_roofline.main),
 ]
 
@@ -64,6 +67,9 @@ def main() -> None:
         t0 = time.time()
         bench_serving.main(smoke=True)
         print(f"# [serving --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        t0 = time.time()
+        bench_updates.main(smoke=True)
+        print(f"# [updates --smoke] done in {time.time() - t0:.1f}s", flush=True)
         return
     failures = []
     for name, fn in SECTIONS:

@@ -237,6 +237,104 @@ def objective_value(side: SideCost, objective: str) -> float:
 # --------------------------------------------------------------------------
 
 
+# --------------------------------------------------------------------------
+# Maintenance planning (live dictionary updates, ``repro.updates``):
+# the paper's "choice among execution plans" applied to the *maintenance*
+# axis — absorb a delta as an open segment, compact segments + tombstones
+# into a fresh base, or fully rebuild (re-sort + re-run the §5 search).
+# --------------------------------------------------------------------------
+
+MAINT_ABSORB = "absorb"
+MAINT_COMPACT = "compact"
+MAINT_REBUILD = "rebuild"
+MAINT_ACTIONS = (MAINT_ABSORB, MAINT_COMPACT, MAINT_REBUILD)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePlan:
+    """Chosen maintenance action + the cost terms behind it (seconds)."""
+
+    action: str
+    absorb_s: float  # build the delta's segment structures (O(delta))
+    compact_s: float  # rebuild prepared structures over live entities
+    overhead_per_batch_s: float  # extra probe/verify cost of the open
+    # segments + tombstones after absorbing, per served batch
+    horizon_batches: float  # expected future batches amortising either
+    stat_drift: float  # measured-stats drift vs the current plan's
+
+
+def maintenance_overhead_per_batch(
+    params: CostParams,
+    probes_per_batch: float,
+    open_segments: int,
+    dead_entities: int,
+    total_entities: int,
+) -> float:
+    """Per-batch serving overhead of the delta state vs a compacted base.
+
+    Two terms, both straight out of Def. 4's per-record constants:
+
+    * every open segment is one more table/bucket probe per window
+      signature (the LSM read amplification) — ``probes_per_batch *
+      c_probe`` each;
+    * tombstoned entities still occupy the base structures, so the
+      dead fraction of probe hits is verified and then masked —
+      modeled as that fraction of the batch's pair verifications.
+    """
+    seg = probes_per_batch * params.c_probe * max(open_segments, 0)
+    dead_frac = dead_entities / max(total_entities, 1)
+    dead = probes_per_batch * params.c_verify_pair * dead_frac
+    return seg + dead
+
+
+def maintenance_plan(
+    params: CostParams,
+    *,
+    live_entities: int,
+    delta_entities: int,
+    open_segments: int,
+    dead_entities: int,
+    total_entities: int,
+    probes_per_batch: float,
+    horizon_batches: float,
+    stat_drift: float = 0.0,
+    drift_threshold: float = 0.5,
+) -> MaintenancePlan:
+    """Absorb vs compact vs rebuild for one incoming delta.
+
+    ``open_segments`` counts the segments *after* absorbing this delta.
+    Decision structure (the maintenance analogue of §5's plan choice):
+
+    * **rebuild** when measured statistics drifted past
+      ``drift_threshold`` — the plan itself is stale, so paying the
+      re-sort + §5 search beats serving a mis-ranked plan;
+    * else **compact** when the one-time fold
+      (``live_entities * dict_prep_per_entity``) undercuts the open-
+      segment + tombstone overhead accumulated over the expected
+      horizon — amortised rebuild beats LSM read amplification;
+    * else **absorb** (O(delta) build, one more open segment).
+    """
+    absorb_s = max(delta_entities, 0) * params.dict_prep_per_entity
+    compact_s = max(live_entities, 0) * params.dict_prep_per_entity
+    overhead = maintenance_overhead_per_batch(
+        params, probes_per_batch, open_segments, dead_entities, total_entities
+    )
+    if stat_drift > drift_threshold:
+        action = MAINT_REBUILD
+    elif absorb_s + horizon_batches * overhead > compact_s:
+        action = MAINT_COMPACT
+    else:
+        action = MAINT_ABSORB
+    return MaintenancePlan(
+        action=action,
+        absorb_s=absorb_s,
+        compact_s=compact_s,
+        overhead_per_batch_s=overhead,
+        horizon_batches=horizon_batches,
+        stat_drift=stat_drift,
+    )
+
+
 def planned_lane_width(
     density: float,
     windows_per_tile: int,

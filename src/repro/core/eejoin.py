@@ -78,6 +78,26 @@ class PreparedPlan:
     max_entity_len: int
 
 
+def side_matches(cands: dict, side: PreparedSide, result_capacity: int) -> Matches:
+    """Probe + verify one prepared side over compacted candidates.
+
+    Module-level so state that outlives (or never had) an operator can
+    execute it — the live-updates subsystem probes base and delta-
+    segment ``PreparedSide``s of *pinned past epochs* through here
+    (``updates.builders.epoch_side_matches``) while the session's
+    operator has already moved on to a compacted base.
+    """
+    if side.side.algo == ALGO_INDEX:
+        m: Matches | None = None
+        for part in side.index_parts:
+            pm = engine.extract_index_part(cands, part, side.ddict, side.params)
+            m = pm if m is None else merge_matches(m, pm, result_capacity)
+        return m
+    return engine.extract_ssjoin_local(
+        cands, side.sig_table, side.ddict, side.params
+    )
+
+
 class EEJoinOperator:
     def __init__(self, dictionary: Dictionary, config: EEJoinConfig = EEJoinConfig()):
         self.dictionary = dictionary
@@ -211,17 +231,20 @@ class EEJoinOperator:
         sharded streaming, or a served micro-batch lane — feeds the
         same probe+verify join through here.
         """
-        if side.side.algo == ALGO_INDEX:
-            m: Matches | None = None
-            for part in side.index_parts:
-                pm = engine.extract_index_part(cands, part, side.ddict, side.params)
-                m = pm if m is None else merge_matches(
-                    m, pm, self.config.result_capacity
-                )
-            return m
-        return engine.extract_ssjoin_local(
-            cands, side.sig_table, side.ddict, side.params
-        )
+        return side_matches(cands, side, self.config.result_capacity)
+
+    def execute_epoch(self, state, doc_tokens) -> Matches:
+        """Versioned execution against one live-updates epoch.
+
+        ``state`` is an ``updates.builders.EpochState``: every plan
+        side probes its base structures plus the open delta segments
+        over one shared candidate pass, and tombstoned entities are
+        masked after the merge. Epoch 0 of an unchanged dictionary is
+        bit-identical to ``execute``.
+        """
+        from repro.updates.builders import execute_epoch as _exec
+
+        return _exec(state, doc_tokens, self.config)
 
     def execute(self, prepared: PreparedPlan, doc_tokens) -> Matches:
         cfg = self.config

@@ -145,6 +145,24 @@ def compact_matches(hit_mask, doc, pos, length, entity, score, capacity: int) ->
     )
 
 
+def filter_matches(m: Matches, entity_live, capacity: int) -> Matches:
+    """Drop matches whose entity is tombstoned (live-updates emit mask).
+
+    ``entity_live`` is a [total_entities] bool device mask (True =
+    live). Tombstoned entities stay inside prepared filter/table/index
+    structures — deletes are logical — so their matches are produced
+    normally and masked here, after verification, before results leave
+    the device. ``count`` becomes the number of *live* matches; like
+    every fixed-capacity buffer, matches truncated by an upstream
+    overflow are gone before masking (overflow stays surfaced via the
+    producing buffer's count).
+    """
+    keep = (m.doc >= 0) & entity_live[jnp.maximum(m.entity, 0)]
+    return compact_matches(
+        keep, m.doc, m.pos, m.length, m.entity, m.score, capacity
+    )
+
+
 def merge_matches(a: Matches, b: Matches, capacity: int) -> Matches:
     """Merge two buffers into one of ``capacity`` (dedup NOT performed)."""
     doc = jnp.concatenate([a.doc, b.doc])

@@ -356,6 +356,83 @@ def shard_lane(docs, row_offset, max_len, flt, params,
     return jnp.where(ok, sel, -1)[None, :], n[None].astype(jnp.int32), keys
 
 
+def shard_lane_steady(docs, row_offset, max_len, flt, params,
+                      tile_docs: int = DEFAULT_TILE_DOCS,
+                      width_hint: int | None = None,
+                      sig_mode: str | None = None):
+    """``shard_lane`` with steady-state adaptive sizing for serving.
+
+    The adaptive two-pass scheme pays a count-only probe pass per call
+    to size the emit lanes; on steady serving traffic consecutive
+    batches of the same (session, bucket) see near-identical survivor
+    densities, so the previous batch's measured per-tile maximum
+    (``width_hint``) sizes this batch's emit width directly and the
+    count pass is amortised away. Correctness never depends on the
+    hint: the emit pass's SMEM counts are *true* totals, so an
+    undersized hint is detected (``max(counts) > width``) and the emit
+    re-runs at the measured width — still no count pass.
+
+    Returns ``(lane, count, keys, tile_max, sizing)``: the ``shard_lane``
+    wire triple plus the measured per-tile survivor max (the next
+    batch's hint; ``-1`` on the non-adaptive path) and the sizing mode
+    actually used (``fixed`` | ``count_pass`` | ``hint`` | ``refit``).
+    """
+    from repro.kernels.fused_probe import (
+        MIN_LANE_WIDTH,
+        SIG_MODE_VARIANT,
+        round_lane_width,
+    )
+
+    if sig_mode is None:
+        D, T = docs.shape
+        sig_mode = _stream_sig_mode(params, D, T, max_len)
+    NC = params.max_candidates
+    if not params.adaptive_lanes:
+        lane, n, keys = shard_lane(
+            docs, row_offset, max_len, flt, params, tile_docs,
+            sig_mode=sig_mode,
+        )
+        return lane, n, keys, -1, "fixed"
+    if isinstance(docs, jax.core.Tracer):
+        raise ValueError(
+            "shard_lane_steady cannot run under jit/shard_map tracing: "
+            "both the hint-overflow check and the count-pass fallback "
+            "need host reads of the per-tile counts; serving calls it "
+            "un-traced (the kernel passes are jitted internally)"
+        )
+    floor = params.lane_width or MIN_LANE_WIDTH
+    if width_hint is not None and width_hint >= 0:
+        W, sizing = round_lane_width(width_hint, NC, floor), "hint"
+    else:
+        counts = stream_tile_counts(docs, max_len, flt, params, tile_docs)
+        W = round_lane_width(int(np.asarray(counts).max()), NC, floor)
+        sizing = "count_pass"
+
+    def emit(width):
+        return stream_probe_tiles(
+            docs, max_len, flt, params, tile_docs, row_offset=row_offset,
+            lane_width=width, sig_mode=sig_mode,
+        )
+
+    counts, cands, vkeys = emit(W)
+    tile_max = int(np.asarray(counts).max())
+    if tile_max > W and W < NC:
+        # stale hint undersized the lanes: the emit pass's counts are
+        # true totals, so refit straight to the measured maximum — the
+        # fallback costs one extra emit pass, never a count pass. At
+        # W == NC there is nothing to refit (lanes never exceed the
+        # merge capacity, and the select below is exact regardless).
+        W = round_lane_width(tile_max, NC, floor)
+        counts, cands, vkeys = emit(W)
+        sizing = "refit"
+    sel, ok, n = select_from_tiles(counts, cands, NC, complete_tiles=W < NC)
+    keys = None
+    if sig_mode == SIG_MODE_VARIANT:
+        keys = gather_from_tiles(counts, vkeys, NC)[None, :, :]
+    return (jnp.where(ok, sel, -1)[None, :], n[None].astype(jnp.int32),
+            keys, tile_max, sizing)
+
+
 def sharded_filter_compact(
     doc_tokens,
     max_len: int,

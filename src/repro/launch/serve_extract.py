@@ -29,6 +29,7 @@ from repro.serving import (
     SessionCache,
     make_pools,
     one_shot_reference,
+    session_cache_summary,
 )
 from repro.serving.session import pure_plan
 
@@ -132,6 +133,15 @@ def main(argv=None) -> int:
     print(f"[serve_extract] latency p50/p95/p99 = {s['latency_p50_s']:.4f}/"
           f"{s['latency_p95_s']:.4f}/{s['latency_p99_s']:.4f} s; "
           f"{s['docs_per_s']:.1f} docs/s, {s['lanes_per_s']:.1f} lanes/s")
+    cs = session_cache_summary(cache)
+    row = cs["per_session"][sess.key]
+    print(f"[serve_extract] session cache: {cs['sessions']}/"
+          f"{cs['max_sessions']} sessions, hits {cs['hits']}, misses "
+          f"{cs['misses']}, evictions {cs['evictions']}")
+    print(f"[serve_extract] session {sess.key}: epoch {row['epoch']}, "
+          f"{row['open_segments']} open segment(s), "
+          f"{row['live_entities']} live / {row['tombstoned']} tombstoned "
+          f"entities, maintenance {row['maintenance'] or '[]'}")
 
     if args.check:
         want = one_shot_reference(sess, docs)

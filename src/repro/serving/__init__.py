@@ -21,7 +21,11 @@ same documents (asserted in ``tests/test_serving.py`` and re-checked by
 ``benchmarks/bench_serving.py``).
 """
 from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
-from repro.serving.metrics import ServingMetrics, pipeline_schedule
+from repro.serving.metrics import (
+    ServingMetrics,
+    pipeline_schedule,
+    session_cache_summary,
+)
 from repro.serving.pools import DevicePools, make_pools
 from repro.serving.queue import AdmissionQueue, ExtractRequest
 from repro.serving.service import ExtractionService, one_shot_reference
@@ -48,4 +52,5 @@ __all__ = [
     "one_shot_reference",
     "pipeline_schedule",
     "pure_plan",
+    "session_cache_summary",
 ]

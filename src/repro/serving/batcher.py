@@ -89,6 +89,10 @@ class MicroBatch:
     spec: ShardSpec  # probe-stream geometry (plan_shards of this batch)
     flush_s: float
     capacity: int  # max_batch_docs at flush time
+    # dictionary epoch the batch executes under, stamped at dispatch
+    # (ExtractionService._dispatch pins it): the whole batch runs on one
+    # epoch's prepared state even if the session hot-swaps mid-flight
+    epoch: int = -1
 
     @property
     def rows(self) -> int:

@@ -72,8 +72,15 @@ class ServingMetrics:
 
     submitted: int = 0
     rejected: int = 0
+    rejected_quota: int = 0  # of which: per-session admission quota
+    rejected_by_session: dict = dataclasses.field(default_factory=dict)
     completed: int = 0
     batches: int = 0
+    # steady-state lane sizing: how each probed side sized its emit
+    # lanes (fixed | count_pass | hint | refit) — 'hint' is the
+    # amortised steady state, 'count_pass' the cold/stale fallback,
+    # 'refit' the undersized-hint recovery (one extra emit pass)
+    lane_sizing: dict = dataclasses.field(default_factory=dict)
     lanes: int = 0  # [1, NC] probe->verify handoffs (one per batch per side)
     docs: int = 0
     overflow_windows: int = 0  # candidate-buffer overflow, summed over batches
@@ -86,18 +93,31 @@ class ServingMetrics:
     first_arrival_s: float = float("nan")
     last_done_s: float = float("nan")
 
-    def record_submit(self, accepted: bool, depth: int, now: float) -> None:
+    def record_submit(self, accepted: bool, depth: int, now: float,
+                      quota: bool = False,
+                      session_key: str | None = None) -> None:
         self.submitted += 1
         if accepted:
             if np.isnan(self.first_arrival_s):
                 self.first_arrival_s = now
         else:
             self.rejected += 1
+            if quota:
+                self.rejected_quota += 1
+                if session_key is not None:
+                    self.rejected_by_session[session_key] = (
+                        self.rejected_by_session.get(session_key, 0) + 1
+                    )
         self.depth_samples.append(depth)
+
+    def record_sizing(self, sizing: str) -> None:
+        """One probed side sized its lanes via ``sizing`` (see field doc)."""
+        self.lane_sizing[sizing] = self.lane_sizing.get(sizing, 0) + 1
 
     def record_batch(self, batch_id: int, rows: int, occupancy: float,
                      n_lanes: int, flush_s: float, probe_s: float,
-                     verify_s: float, overflow: int = 0) -> None:
+                     verify_s: float, overflow: int = 0,
+                     epoch: int = 0) -> None:
         self.batches += 1
         self.docs += rows
         self.lanes += n_lanes
@@ -112,6 +132,7 @@ class ServingMetrics:
             "flush_s": flush_s,
             "probe_s": probe_s,
             "verify_s": verify_s,
+            "epoch": epoch,
         })
 
     def record_done(self, latency_s: float, done_s: float) -> None:
@@ -151,4 +172,41 @@ class ServingMetrics:
             "docs_per_s": rate(self.docs),
             "lanes_per_s": rate(self.lanes),
             "overflow_windows": self.overflow_windows,
+            "rejected_quota": self.rejected_quota,
+            "lane_sizing": dict(self.lane_sizing),
         }
+
+
+def session_cache_summary(cache) -> dict:
+    """SessionCache + per-session serving state, one flat report dict.
+
+    The cache-level counters (hit/miss/eviction) say whether dictionary
+    churn is thrashing the LRU; the per-session rows surface what the
+    live-updates subsystem is doing — current epoch, open delta
+    segments, live/tombstoned entity counts and the maintenance actions
+    taken — next to the serving counters. Consumed by the
+    ``serve_extract --check`` report and the updates bench.
+    """
+    sessions = {}
+    for key, s in cache._sessions.items():
+        state = s.current_state
+        sessions[key] = {
+            "epoch": s.epoch,
+            "requests": s.requests,
+            "batches": s.batches,
+            "inflight": s.inflight,
+            "open_segments": state.open_segments,
+            "live_entities": state.version.num_live,
+            "tombstoned": int(state.version.tombstones.sum()),
+            "pinned_epochs": sorted(s.epochs),
+            "calibrated": s.calibrated,
+            "maintenance": [m["action"] for m in s.maintenance_log],
+        }
+    return {
+        "sessions": len(cache),
+        "max_sessions": cache.max_sessions,
+        "hits": cache.hits,
+        "misses": cache.misses,
+        "evictions": cache.evictions,
+        "per_session": sessions,
+    }

@@ -4,7 +4,9 @@ The front door of the serving subsystem: producers (load generators,
 RPC handlers) submit variable-length token documents; the service loop
 drains admitted requests into the micro-batcher. The queue is the one
 place load is shed — ``try_submit`` rejects when full (admission
-control, surfaced in metrics as ``rejected``). Backpressure lives one
+control, surfaced in metrics as ``rejected``) and, with a
+``session_quota``, when one dictionary's in-flight count hits its cap
+(per-session shed, counted in ``rejected_by_session``). Backpressure lives one
 level up: ``ExtractionService.submit(block=True)`` makes the producer
 itself drain the queue into the batcher (``tick``) until space frees —
 the ingest thread owns the batcher, so no second thread is needed.
@@ -62,20 +64,54 @@ class AdmissionQueue:
     deterministic for a deterministic producer.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, session_quota: int | None = None):
         if capacity <= 0:
             raise ValueError(f"AdmissionQueue capacity={capacity} must be positive")
+        if session_quota is not None and session_quota <= 0:
+            raise ValueError(
+                f"AdmissionQueue session_quota={session_quota} must be "
+                "positive (or None to disable per-session admission caps)"
+            )
         self.capacity = capacity
+        self.session_quota = session_quota
         self._q: deque[ExtractRequest] = deque()
         self._lock = threading.Lock()
         self._ids = itertools.count()
         self.accepted = 0
         self.rejected = 0
+        self.rejected_quota = 0
+        # per dictionary-fingerprint quota rejections (serving metrics
+        # surface these: one hot dictionary shedding must be visible
+        # separately from global queue saturation)
+        self.rejected_by_session: dict[str, int] = {}
 
-    def try_submit(self, doc_id, tokens, session_key: str, now: float
-                   ) -> ExtractRequest | None:
-        """Admit or reject (never block): returns None when full."""
+    def try_submit(self, doc_id, tokens, session_key: str, now: float,
+                   session_inflight: int = 0) -> ExtractRequest | None:
+        """Admit or reject (never block): returns None when full.
+
+        ``session_inflight`` is the session's admitted-but-not-completed
+        count (``DictionarySession.inflight``); with a ``session_quota``
+        configured, a session at or past its quota is rejected even when
+        the global queue has room — per-dictionary admission control, so
+        one hot watchlist cannot monopolise the pipeline. Quota
+        rejections are counted globally (``rejected_quota``) and per
+        session (``rejected_by_session``), on top of ``rejected``.
+
+        Counter semantics: the queue counts *admission attempts* (one
+        per call); ``ServingMetrics`` counts one outcome per
+        ``ExtractionService.submit`` call. The service's blocking
+        backpressure loop therefore waits out a quota without
+        re-attempting, so the two stay comparable.
+        """
         with self._lock:
+            if (self.session_quota is not None
+                    and session_inflight >= self.session_quota):
+                self.rejected += 1
+                self.rejected_quota += 1
+                self.rejected_by_session[session_key] = (
+                    self.rejected_by_session.get(session_key, 0) + 1
+                )
+                return None
             if len(self._q) >= self.capacity:
                 self.rejected += 1
                 return None

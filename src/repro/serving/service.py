@@ -46,7 +46,7 @@ from repro.extraction.results import (
     merge_matches,
     select_from_tiles,
 )
-from repro.extraction.sharded import shard_lane
+from repro.extraction.sharded import shard_lane_steady
 from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
 from repro.serving.metrics import ServingMetrics
 from repro.serving.pools import DevicePools, make_pools
@@ -58,24 +58,31 @@ from repro.serving.session import SessionCache
 HANDOFF_DEPTH = 2
 
 
-def one_shot_reference(session, docs) -> set[tuple[int, int, int, int]]:
+def one_shot_reference(session, docs, epoch: int | None = None
+                       ) -> set[tuple[int, int, int, int]]:
     """The serving parity target: one-shot ``execute`` over ``docs``.
 
     Pads the variable-length documents into a single [N, T] array (row
-    i = doc_id i) and runs the session's prepared plan in one batch
-    call. ``ExtractionService.results_set()`` over the same documents
-    must equal this set — the single reference implementation used by
-    tests, the serving bench, and ``serve_extract --check``.
+    i = doc_id i) and runs the session's current (or a pinned past)
+    epoch in one batch call — for an epoch-0 session this is exactly
+    the frozen-dictionary ``execute`` of the prepared plan; with live
+    deltas applied it probes base + open segments and masks tombstones,
+    identically to the served pipeline. ``ExtractionService.
+    results_set()`` over the same documents must equal this set — the
+    single reference implementation used by tests, the serving bench,
+    and ``serve_extract --check``.
     """
     from repro.core.dictionary import PAD
+    from repro.updates.builders import execute_epoch
 
     docs = [np.asarray(d, dtype=np.int32).reshape(-1) for d in docs]
     T = max((len(d) for d in docs), default=1)
     padded = np.full((len(docs), max(T, 1)), PAD, dtype=np.int32)
     for i, d in enumerate(docs):
         padded[i, : len(d)] = d
-    return session.operator.execute(
-        session.prepared, jnp.asarray(padded)
+    state = session.state_for(epoch if epoch is not None else session.epoch)
+    return execute_epoch(
+        state, jnp.asarray(padded), session.config
     ).to_set()
 
 
@@ -103,11 +110,12 @@ class ExtractionService:
         queue_capacity: int = 256,
         overlap: bool = True,
         clock: Callable[[], float] = time.monotonic,
+        session_quota: int | None = None,
     ):
         self.sessions = sessions
         self.pools = pools or make_pools()
         self.batcher = MicroBatcher(batcher_config or BatcherConfig())
-        self.queue = AdmissionQueue(queue_capacity)
+        self.queue = AdmissionQueue(queue_capacity, session_quota=session_quota)
         self.overlap = overlap
         self.clock = clock
         self.metrics = ServingMetrics()
@@ -189,16 +197,38 @@ class ExtractionService:
             ) from None
         self.batcher.config.bucket_for(len(np.asarray(tokens).reshape(-1)))
         now = self.clock() if now is None else now
-        req = self.queue.try_submit(doc_id, tokens, session_key, now)
+
+        def _quota_limited() -> bool:
+            return (self.queue.session_quota is not None
+                    and sess.inflight >= self.queue.session_quota)
+
+        req = self.queue.try_submit(doc_id, tokens, session_key, now,
+                                    session_inflight=sess.inflight)
         while req is None and block:
             # one tick always empties the admission queue into the bins,
-            # so a single pass frees space; loop for thread-safety
-            self.tick(now)
-            req = self.queue.try_submit(doc_id, tokens, session_key, now)
+            # so a single pass frees *queue* space. The tick reads a
+            # fresh clock: deadline flushes must keep firing while the
+            # producer spins here, or a quota-limited session whose
+            # last batch sits in an unflushed bin would never complete
+            # and the loop would never exit.
+            self.tick()
+            if _quota_limited():
+                # quota frees only when the stage workers complete this
+                # session's batches — yield so they can, and do not
+                # re-attempt (each attempt would count another
+                # rejection in the queue's admission stats)
+                time.sleep(1e-4)
+                continue
+            req = self.queue.try_submit(doc_id, tokens, session_key, now,
+                                        session_inflight=sess.inflight)
         if req is not None:
             with self._lock:  # vs the -= in _complete/_fail_batch
                 sess.inflight += 1  # pins the session against LRU eviction
-        self.metrics.record_submit(req is not None, self.queue.depth(), now)
+        quota = req is None and _quota_limited()
+        self.metrics.record_submit(
+            req is not None, self.queue.depth(), now,
+            quota=quota, session_key=session_key if quota else None,
+        )
         return req
 
     def tick(self, now: float | None = None) -> int:
@@ -245,30 +275,60 @@ class ExtractionService:
             sess = self.sessions.get(b.session_key)
             sess.requests += b.rows
             sess.batches += 1
+            # epoch stamp + pin: the batch executes on the dictionary
+            # epoch current at dispatch, even if apply_delta hot-swaps
+            # the session before its probe/verify runs (the swap
+            # protocol: in-flight work finishes on its admitted epoch).
+            # Read-and-pin is one atomic step under the session lock —
+            # a separate read could see an epoch that a concurrent
+            # apply_delta garbage-collects before the pin lands.
+            b.epoch = sess.pin_current()
             self._flush_q.put(b)
         return len(batches)
 
     # ---------------------------------------------------------- stage bodies
     def _probe_batch(self, batch: MicroBatch) -> _Handoff:
-        """Probe stage: stream the batch's tiles, reduce to [1, NC] lanes."""
+        """Probe stage: stream the batch's tiles, reduce to [1, NC] lanes.
+
+        Versioned: each plan side probes with its epoch's (possibly
+        delta-unioned) Bloom filter. Adaptive lane widths are sized
+        steady-state — the previous batch's measured per-tile survivor
+        max for the same (side, bucket, epoch) skips the count pass
+        (``shard_lane_steady``; sizing decisions land in metrics).
+        """
         sess = self.sessions.get(batch.session_key)
+        state = sess.state_for(batch.epoch)
         dev = self.pools.probe_device(batch.batch_id)
         t0 = time.perf_counter()
         docs = jax.device_put(jnp.asarray(batch.docs), dev)
         lanes = []
-        for side in sess.prepared.sides:
-            lane, count, keys = shard_lane(
-                docs, 0, sess.max_len, side.flt, side.params,
+        for i, eside in enumerate(state.sides):
+            lane, count, keys, tile_max, sizing = shard_lane_steady(
+                docs, 0, state.max_len, eside.flt, eside.params,
                 batch.spec.tile_docs,
+                width_hint=sess.lane_hint(i, batch.bucket, batch.epoch),
             )
+            sess.update_lane_hint(i, batch.bucket, batch.epoch, tile_max)
+            with self._lock:
+                self.metrics.record_sizing(sizing)
             lanes.append((count, lane, keys))
         jax.block_until_ready(lanes)
         return _Handoff(batch, lanes, time.perf_counter() - t0)
 
     def _verify_batch(self, handoff: _Handoff) -> None:
-        """Verify stage: lanes -> candidate windows -> probe+verify join."""
+        """Verify stage: lanes -> candidate windows -> probe+verify join.
+
+        Versioned: every side verifies against its epoch's base
+        structures plus each open delta segment (same candidate dict,
+        matches merged), then tombstoned entities are masked before
+        results fan back out.
+        """
+        from repro.extraction.results import filter_matches
+        from repro.updates.builders import epoch_side_matches
+
         batch = handoff.batch
         sess = self.sessions.get(batch.session_key)
+        state = sess.state_for(batch.epoch)
         dev = self.pools.verify_device(batch.batch_id)
         t0 = time.perf_counter()
         # the handoff traffic: per side one (1 + NC)-int lane, plus the
@@ -276,13 +336,12 @@ class ExtractionService:
         docs = jax.device_put(jnp.asarray(batch.docs), dev)
         out: Matches | None = None
         overflow = 0
-        for side, (count, lane, keys) in zip(sess.prepared.sides,
-                                             handoff.lanes):
+        for eside, (count, lane, keys) in zip(state.sides, handoff.lanes):
             count, lane = jax.device_put((count, lane), dev)
-            NC = side.params.max_candidates
+            NC = eside.params.max_candidates
             sel, ok, n = select_from_tiles(count, lane, NC)
             cands = engine.candidates_from_flat(
-                docs, sel, ok, n, sess.max_len, NC
+                docs, sel, ok, n, state.max_len, NC
             )
             if keys is not None:
                 # fused variant keys rode the handoff lane: the verify
@@ -292,10 +351,12 @@ class ExtractionService:
                     cands, gather_from_tiles(count, keys, NC)
                 )
             overflow += int(cands["overflow"])
-            m = sess.operator.side_matches(cands, side)
+            m = epoch_side_matches(cands, eside, sess.config.result_capacity)
             out = m if out is None else merge_matches(
                 out, m, sess.config.result_capacity
             )
+        if state.has_tombstones:
+            out = filter_matches(out, state.live, sess.config.result_capacity)
         jax.block_until_ready(out)
         verify_s = time.perf_counter() - t0
         self._complete(batch, out, handoff.probe_s, verify_s, overflow)
@@ -317,7 +378,10 @@ class ExtractionService:
                 (int(p), int(l), int(e), float(s))
             )
         with self._lock:
-            self.sessions.get(batch.session_key).inflight -= batch.rows
+            sess = self.sessions.get(batch.session_key)
+            sess.inflight -= batch.rows
+            n_lanes = len(sess.state_for(batch.epoch).sides)
+            sess.unpin_epoch(batch.epoch)
             for row, req in enumerate(batch.reqs):
                 req.matches = [
                     (req.doc_id, p, l, e, s)
@@ -332,11 +396,12 @@ class ExtractionService:
                 batch_id=batch.batch_id,
                 rows=batch.rows,
                 occupancy=batch.occupancy,
-                n_lanes=len(self.sessions.get(batch.session_key).prepared.sides),
+                n_lanes=n_lanes,
                 flush_s=batch.flush_s,
                 probe_s=probe_s,
                 verify_s=verify_s,
                 overflow=overflow,
+                epoch=batch.epoch,
             )
 
     def _fail_batch(self, batch: MicroBatch, exc: Exception) -> None:
@@ -351,7 +416,10 @@ class ExtractionService:
         with self._lock:
             self.errors.append((batch.batch_id, exc))
             try:
-                self.sessions.get(batch.session_key).inflight -= batch.rows
+                sess = self.sessions.get(batch.session_key)
+                sess.inflight -= batch.rows
+                if batch.epoch >= 0:
+                    sess.unpin_epoch(batch.epoch)
             except KeyError:
                 pass  # session evicted while busy is itself the failure
             for req in batch.reqs:

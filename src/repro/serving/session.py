@@ -20,14 +20,26 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.cost_model import OBJ_JOB, CostParams, SideCost
+from repro.core.cost_model import (
+    MAINT_ABSORB,
+    MAINT_COMPACT,
+    MAINT_REBUILD,
+    OBJ_JOB,
+    CostParams,
+    MaintenancePlan,
+    SideCost,
+    maintenance_plan,
+)
 from repro.core.dictionary import Dictionary
 from repro.core.eejoin import EEJoinConfig, EEJoinOperator, PreparedPlan
 from repro.core.plan import Plan, PlanSide
+from repro.updates import builders as _upd
+from repro.updates.delta import DictionaryDelta
 
 
 def dictionary_fingerprint(dictionary: Dictionary,
@@ -90,10 +102,232 @@ class DictionarySession:
     # admitted-but-not-completed requests: pins the session against LRU
     # eviction (maintained by ExtractionService.submit/_complete)
     inflight: int = 0
+    # ---- live updates (repro.updates): epoch-versioned hot swap ----
+    # epoch number -> executable state; ``epoch`` is the current one.
+    # Past epochs stay alive while batches are pinned to them (see
+    # pin_epoch/unpin_epoch) and are dropped at the last unpin — no
+    # drain, no eviction on apply_delta.
+    epochs: dict = dataclasses.field(default_factory=dict)
+    epoch: int = 0
+    maintenance_log: list = dataclasses.field(default_factory=list)
+    # steady-state lane sizing hints: (side_idx, bucket) -> (epoch,
+    # measured per-tile survivor max of the last batch). A hint from
+    # another epoch is stale (density may have shifted with the delta)
+    # and falls back to a count pass.
+    lane_hints: dict = dataclasses.field(default_factory=dict)
+    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    # serializes whole apply_delta calls (read chain -> build -> install).
+    # Separate from _lock on purpose: the segment build is slow and must
+    # not block dispatch's pin_current, which only needs _lock briefly.
+    _apply_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock
+    )
 
     @property
     def max_len(self) -> int:
         return self.prepared.max_entity_len
+
+    # ------------------------------------------------------------- epochs
+    @property
+    def current_state(self) -> _upd.EpochState:
+        with self._lock:
+            return self.epochs[self.epoch]
+
+    def state_for(self, epoch: int) -> _upd.EpochState:
+        """The executable state of one (possibly past, pinned) epoch."""
+        with self._lock:
+            return self.epochs[epoch]
+
+    def pin_current(self) -> int:
+        """Atomically pin the current epoch and return its number.
+
+        Dispatch must use this rather than reading ``epoch`` and then
+        pinning: between the two steps a concurrent ``apply_delta``
+        could swap and garbage-collect the epoch just read.
+        """
+        with self._lock:
+            self.epochs[self.epoch].pins += 1
+            return self.epoch
+
+    def unpin_epoch(self, epoch: int) -> None:
+        """Batch finished: release, GC non-current epochs at zero pins."""
+        with self._lock:
+            state = self.epochs[epoch]
+            state.pins -= 1
+            if state.pins <= 0 and epoch != self.epoch:
+                del self.epochs[epoch]
+
+    def lane_hint(self, side_idx: int, bucket: int, epoch: int) -> int | None:
+        """Previous batch's per-tile survivor max for (side, bucket)."""
+        got = self.lane_hints.get((side_idx, bucket))
+        if got is None or got[0] != epoch:
+            return None  # never measured, or stale (other epoch)
+        return got[1]
+
+    def update_lane_hint(self, side_idx: int, bucket: int, epoch: int,
+                         tile_max: int) -> None:
+        if tile_max >= 0:
+            self.lane_hints[(side_idx, bucket)] = (epoch, int(tile_max))
+
+    def plan_maintenance(
+        self,
+        delta: DictionaryDelta,
+        horizon_batches: float | None = None,
+        stat_drift: float = 0.0,
+        drift_threshold: float = 0.5,
+    ) -> MaintenancePlan:
+        """Cost the absorb/compact/rebuild choice for ``delta``.
+
+        The probe-volume estimate is the candidate-lane capacity (the
+        static upper bound on windows a batch probes). Overestimating
+        it inflates the open-segment overhead term, which sits on the
+        absorb side of the comparison — so the bias is toward *earlier
+        compaction*, trading some redundant fold work for never
+        under-accounting LSM read amplification. The horizon defaults
+        to the batches served so far (the past predicts the next
+        window).
+        """
+        cur = self.current_state
+        cp = self.cost_params or CostParams(num_devices=1)
+        return maintenance_plan(
+            cp,
+            live_entities=cur.version.num_live + delta.num_added
+            - delta.num_tombstoned,
+            delta_entities=delta.num_added,
+            open_segments=cur.open_segments + (1 if delta.num_added else 0),
+            dead_entities=int(cur.version.tombstones.sum())
+            + delta.num_tombstoned,
+            total_entities=cur.version.total_entities + delta.num_added,
+            probes_per_batch=float(self.config.max_candidates),
+            horizon_batches=(
+                horizon_batches
+                if horizon_batches is not None
+                else float(max(self.batches, 1))
+            ),
+            stat_drift=stat_drift,
+            drift_threshold=drift_threshold,
+        )
+
+    def apply_delta(
+        self,
+        delta: DictionaryDelta,
+        sample_docs: np.ndarray | None = None,
+        horizon_batches: float | None = None,
+        drift_threshold: float = 0.5,
+        force_action: str | None = None,
+    ) -> _upd.EpochState:
+        """Hot-swap to a new epoch with ``delta`` applied — no drain.
+
+        The cost model's maintenance terms pick the action (absorb an
+        open segment / compact / full rebuild) unless ``force_action``
+        overrides; ``sample_docs`` lets the session measure stat drift
+        (survivor-density shift vs the density the plan was calibrated
+        under) — the only trigger for a re-plan, per the carry-the-
+        warm-plan-forward contract. In-flight batches pinned to earlier
+        epochs keep executing against their state; admissions after
+        this call see the new epoch. Returns the new current state.
+
+        Whole calls serialize on ``_apply_lock`` (chain read → build →
+        install is one critical section): two concurrent deltas applied
+        against the same parent would otherwise silently drop one.
+        """
+        if force_action == MAINT_REBUILD and sample_docs is None:
+            raise ValueError(
+                "apply_delta(force_action='rebuild') requires sample_docs: "
+                "a re-plan gathers statistics and re-runs the plan search "
+                "over them — pass a document sample, or use "
+                "force_action='compact' to fold without re-planning"
+            )
+        with self._apply_lock:
+            return self._apply_delta_locked(
+                delta, sample_docs, horizon_batches, drift_threshold,
+                force_action,
+            )
+
+    def _apply_delta_locked(
+        self, delta, sample_docs, horizon_batches, drift_threshold,
+        force_action,
+    ) -> _upd.EpochState:
+        drift, new_density = 0.0, None
+        if sample_docs is not None:
+            from repro.core.calibrate import measured_lane_density
+
+            stats = self.operator.gather_statistics(
+                np.asarray(sample_docs), total_docs=len(sample_docs)
+            )
+            new_density = measured_lane_density(stats)
+            old = (self.cost_params.lane_density
+                   if self.cost_params is not None else 0.0)
+            if old > 0.0:
+                drift = abs(new_density - old) / old
+        decision = self.plan_maintenance(
+            delta, horizon_batches, stat_drift=drift,
+            drift_threshold=drift_threshold,
+        )
+        action = force_action or decision.action
+        if action == MAINT_REBUILD and sample_docs is None:
+            # planner-chosen (never forced — apply_delta validates that):
+            # without a sample there are no statistics to re-plan over,
+            # so fold the drift-suspect state and keep serving
+            action = MAINT_COMPACT
+        cur = self.current_state
+        cp = self.cost_params or CostParams(num_devices=1)
+        new_op = None
+        if action == MAINT_ABSORB:
+            state = _upd.absorb_delta(cur, delta, self.config, cp)
+        else:
+            # fold the delta in version-space first (O(delta)), then
+            # compact/rebuild the whole live set in one build pass —
+            # never build segment structures that are about to fold
+            applied = dataclasses.replace(
+                cur, version=cur.version.apply(delta)
+            )
+            if action == MAINT_COMPACT:
+                state, new_op = _upd.compact_epoch(applied, self.config, cp)
+            elif action == MAINT_REBUILD:
+                state, new_op = _upd.rebuild_epoch(
+                    applied, self.config, cp, np.asarray(sample_docs)
+                )
+            else:
+                raise ValueError(f"unknown maintenance action {action!r}")
+        with self._lock:
+            old_epoch = self.epoch
+            self.epochs[state.epoch] = state
+            self.epoch = state.epoch
+            if self.epochs[old_epoch].pins <= 0:
+                del self.epochs[old_epoch]
+            if new_op is not None:
+                # the compacted/re-planned base becomes the session's
+                # frozen-path view (one_shot_reference, future deltas)
+                self.operator = new_op
+                self.dictionary = new_op.dictionary
+                self.plan = state.plan
+                self.prepared = PreparedPlan(
+                    plan=state.plan,
+                    sides=[es.base for es in state.sides],
+                    max_entity_len=state.max_len,
+                )
+            if action == MAINT_REBUILD and new_density is not None:
+                # the re-plan resolved the drift: reset the baseline so
+                # the *next* delta is measured against the density this
+                # plan was chosen under, not the stale pre-drift value
+                # (which would re-trigger a full rebuild on every delta)
+                self.cost_params = dataclasses.replace(
+                    self.cost_params or CostParams(num_devices=1),
+                    lane_density=new_density,
+                )
+        self.maintenance_log.append({
+            "epoch": state.epoch,
+            "action": action,
+            "added": delta.num_added,
+            "tombstoned": delta.num_tombstoned,
+            "open_segments": state.open_segments,
+            "absorb_s": decision.absorb_s,
+            "compact_s": decision.compact_s,
+            "overhead_per_batch_s": decision.overhead_per_batch_s,
+            "stat_drift": decision.stat_drift,
+        })
+        return state
 
 
 class SessionCache:
@@ -207,6 +441,7 @@ class SessionCache:
             prepared=prepared,
             calibrated=calibrated,
             cost_params=cp,
+            epochs={0: _upd.initial_epoch(dictionary, plan, prepared)},
         )
         self._sessions[key] = sess
         return sess

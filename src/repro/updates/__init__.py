@@ -1,0 +1,55 @@
+"""Live dictionary updates: delta builders + epoch-versioned state.
+
+The frozen-dictionary assumption of the paper (build once per session)
+meets real extraction traffic here: ``delta`` models updates (adds +
+tombstones) over an epoch-numbered ``DictionaryVersion`` chain;
+``builders`` turns each epoch into executable prepared state — Bloom
+bit-unions for adds, LSM-style delta segments probed beside the base,
+tombstone masks at emit — and folds segments away when the cost model's
+maintenance terms (``core.cost_model.maintenance_plan``) say the open-
+segment probe overhead outweighs an amortised rebuild. Serving sessions
+(``serving.session.DictionarySession.apply_delta``) hot-swap epochs with
+no drain: in-flight batches finish on the epoch they were admitted
+under, new admissions see the new epoch.
+"""
+from repro.updates.delta import (
+    DictionaryDelta,
+    DictionaryVersion,
+    random_delta,
+    segment_dictionary,
+)
+from repro.updates.builders import (
+    EpochSide,
+    EpochState,
+    absorb_delta,
+    build_segment_side,
+    compact_epoch,
+    epoch_matches,
+    epoch_side_matches,
+    execute_epoch,
+    initial_epoch,
+    oracle_matches,
+    rebuild_epoch,
+    rebuild_oracle,
+    union_filter_words,
+)
+
+__all__ = [
+    "DictionaryDelta",
+    "DictionaryVersion",
+    "EpochSide",
+    "EpochState",
+    "absorb_delta",
+    "build_segment_side",
+    "compact_epoch",
+    "epoch_matches",
+    "epoch_side_matches",
+    "execute_epoch",
+    "initial_epoch",
+    "oracle_matches",
+    "random_delta",
+    "rebuild_epoch",
+    "rebuild_oracle",
+    "segment_dictionary",
+    "union_filter_words",
+]

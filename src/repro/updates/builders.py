@@ -1,0 +1,403 @@
+"""Incremental (delta) builders + epoch-versioned prepared state.
+
+The build side of live dictionary updates: given a ``DictionaryVersion``
+chain (``updates.delta``), produce *prepared* extraction state for each
+epoch **without touching the base structures**:
+
+* **Bloom filter** — adds absorb by bit-union: a segment filter is
+  built over just the added entities' prefix tokens and OR-ed into the
+  side's serving bitmap. Because a Bloom build is a deterministic OR of
+  per-token bit patterns, the union over (base ∪ adds) is bit-identical
+  to a from-scratch build over the merged entity set. Deletes never
+  rebuild the filter (bits cannot be unset) — tombstoned entities are
+  masked at emit, and the filter merely keeps a few soundness-preserving
+  false positives.
+* **Signature tables / indexes** — LSM-style delta segments: each
+  absorbed delta gets its own small ``SigTable`` or index partitions
+  (entity ids offset into the global id space), probed alongside the
+  base with the *same* compacted candidate dict; per-segment ``Matches``
+  merge through the existing ``results.merge_matches`` path.
+* **Tombstones** — a device-resident live mask applied to the merged
+  matches (``results.filter_matches``) after verification.
+
+``EpochState`` is one epoch's complete executable view: per plan side
+the base ``PreparedSide``, the open segment sides, and the unioned
+filter; plus the live mask. ``execute_epoch`` runs it one-shot (the
+versioned analogue of ``EEJoinOperator.execute``); the serving pipeline
+streams the same sides through ``shard_lane`` (``serving/service.py``).
+
+Epoch swap protocol: ``absorb_delta`` shares every pre-existing
+structure with the previous epoch (O(delta) build work), so multiple
+epochs coexist cheaply — in-flight batches pinned to epoch *n* keep
+executing against its state while new admissions see *n+1*.
+``compact_epoch`` / ``rebuild_epoch`` fold segments + tombstones into a
+fresh base (the cost-model ``maintenance_plan`` decides when); only
+then do entity ids renumber, surfaced through ``EpochState.id_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import ALGO_INDEX, ALGO_SSJOIN, CostParams
+from repro.core.dictionary import Dictionary
+from repro.core.eejoin import (
+    EEJoinConfig,
+    EEJoinOperator,
+    PreparedPlan,
+    PreparedSide,
+    side_matches,
+)
+from repro.core.filter import BloomFilter, build_ish_filter
+from repro.core.plan import Plan
+from repro.core.signatures import entity_signatures
+from repro.extraction import engine
+from repro.extraction.results import Matches, filter_matches, merge_matches
+from repro.updates.delta import DictionaryDelta, DictionaryVersion
+
+
+@dataclasses.dataclass
+class EpochSide:
+    """One plan side of one epoch: base + open delta segments + filter.
+
+    ``filter_words`` is the host-side union bitmap (base | segments) the
+    next absorb ORs into; ``flt`` its device tuple, in the same
+    ``(bits, num_bits, num_hashes)`` wire format every probe consumes.
+    Segments carry no own ``flt`` — the side-level union is the filter.
+    """
+
+    base: PreparedSide
+    segments: list[PreparedSide]
+    filter_words: np.ndarray | None
+    flt: tuple | None
+
+    @property
+    def params(self) -> engine.ExtractParams:
+        return self.base.params
+
+    def all_sides(self) -> list[PreparedSide]:
+        return [self.base, *self.segments]
+
+
+@dataclasses.dataclass
+class EpochState:
+    """One epoch's complete executable extraction state."""
+
+    epoch: int
+    version: DictionaryVersion
+    plan: Plan
+    sides: list[EpochSide]
+    live: jnp.ndarray  # [total_entities] bool device mask
+    has_tombstones: bool
+    # set on compact/rebuild epochs: id_map[new_global_id] = the id the
+    # same entity had in the *previous* epoch (adds renumber only here)
+    id_map: np.ndarray | None = None
+    # in-flight batches executing on this epoch (serving pin refcount)
+    pins: int = 0
+
+    @property
+    def max_len(self) -> int:
+        return self.version.max_len
+
+    @property
+    def open_segments(self) -> int:
+        return self.version.num_segments
+
+
+def _side_filter(
+    dictionary: Dictionary, config: EEJoinConfig
+) -> tuple[BloomFilter | None, np.ndarray | None, tuple | None]:
+    """(host BloomFilter, host words, device flt tuple) for one side."""
+    if not config.use_filter:
+        return None, None, None
+    f = build_ish_filter(dictionary, config.gamma, num_bits=config.filter_bits)
+    return f, f.bits, (jnp.asarray(f.bits), f.num_bits, f.num_hashes)
+
+
+def build_segment_side(
+    segment: Dictionary,
+    entity_offset: int,
+    template: PreparedSide,
+    config: EEJoinConfig,
+    hbm_budget: float,
+) -> PreparedSide:
+    """Prepared structures for one delta segment under a side's spec.
+
+    The mirror of ``EEJoinOperator._prepare_side`` for an append
+    segment: same (algo, scheme) and ``ExtractParams`` as the side it
+    rides with (candidate dicts are shared, so the params must agree),
+    entity ids offset to the segment's global range, no own filter (the
+    side-level union covers it).
+    """
+    side = template.side
+    ddict = engine.DeviceDictionary.from_host(segment, entity_offset=entity_offset)
+    prepared = PreparedSide(
+        side=side, params=template.params, ddict=ddict, flt=None
+    )
+    if side.algo == ALGO_INDEX:
+        prepared.index_parts = engine.build_index_partitions(
+            segment, side.scheme, config.gamma, int(hbm_budget),
+            entity_offset=entity_offset,
+        )
+    elif side.algo == ALGO_SSJOIN:
+        esig = entity_signatures(side.scheme, segment, config.gamma, config.lsh)
+        prepared.sig_table = engine.build_sig_table(
+            esig, entity_offset=entity_offset
+        )
+    else:
+        raise ValueError(side.algo)
+    return prepared
+
+
+def union_filter_words(
+    words: np.ndarray | None, segment_filter: BloomFilter | None
+) -> np.ndarray | None:
+    """OR a segment's Bloom bitmap into the side union (host uint32)."""
+    if words is None or segment_filter is None:
+        return words
+    return words | segment_filter.bits
+
+
+def initial_epoch(
+    dictionary: Dictionary, plan: Plan, prepared: PreparedPlan
+) -> EpochState:
+    """Epoch 0: the frozen-dictionary state every session starts from."""
+    version = DictionaryVersion.initial(dictionary)
+    sides = []
+    for s in prepared.sides:
+        words = np.asarray(s.flt[0]) if s.flt is not None else None
+        sides.append(
+            EpochSide(base=s, segments=[], filter_words=words, flt=s.flt)
+        )
+    return EpochState(
+        epoch=0,
+        version=version,
+        plan=plan,
+        sides=sides,
+        live=jnp.ones((dictionary.num_entities,), dtype=bool),
+        has_tombstones=False,
+    )
+
+
+def absorb_delta(
+    state: EpochState,
+    delta: DictionaryDelta,
+    config: EEJoinConfig,
+    cost_params: CostParams | None = None,
+) -> EpochState:
+    """Next epoch with the delta absorbed as an open segment.
+
+    O(delta) build work: the base sides (and every previously absorbed
+    segment) are *shared by reference* with the prior epoch — only the
+    new segment's structures, the filter union, and the live mask are
+    built. Adds ride the plan's **tail** side (the last prepared side):
+    appended entities have no frequency history, which is exactly the
+    tail of the frequency-sorted order.
+    """
+    cp = cost_params or CostParams(num_devices=1)
+    offset = state.version.total_entities
+    version = state.version.apply(delta)
+    sides = [
+        EpochSide(
+            base=es.base,
+            segments=list(es.segments),
+            filter_words=es.filter_words,
+            flt=es.flt,
+        )
+        for es in state.sides
+    ]
+    if version.num_segments > state.version.num_segments:
+        segment = version.segments[-1]
+        tail = sides[-1]
+        tail.segments.append(
+            build_segment_side(
+                segment, offset, tail.base, config, cp.hbm_budget_bytes
+            )
+        )
+        if config.use_filter and tail.filter_words is not None:
+            segf = build_ish_filter(
+                segment, config.gamma, num_bits=config.filter_bits
+            )
+            tail.filter_words = union_filter_words(tail.filter_words, segf)
+            tail.flt = (jnp.asarray(tail.filter_words), segf.num_bits,
+                        segf.num_hashes)
+    return EpochState(
+        epoch=version.epoch,
+        version=version,
+        plan=state.plan,
+        sides=sides,
+        live=jnp.asarray(version.live_mask()),
+        has_tombstones=bool(version.tombstones.any()),
+    )
+
+
+def compact_epoch(
+    state: EpochState,
+    config: EEJoinConfig,
+    cost_params: CostParams | None = None,
+    plan: Plan | None = None,
+) -> tuple[EpochState, EEJoinOperator]:
+    """Fold segments + tombstones into a fresh single-base epoch.
+
+    The plan (and any calibration in ``cost_params``) carries forward:
+    the head split is re-anchored to the live id space
+    (``DictionaryVersion.effective_split``) but no plan search runs —
+    that is ``rebuild_epoch``. Entity ids renumber densely;
+    ``EpochState.id_map`` records new → old.
+    """
+    cp = cost_params or CostParams(num_devices=1)
+    version, id_map = state.version.compact()
+    op = EEJoinOperator(version.base, config)
+    plan = plan or dataclasses.replace(
+        state.plan, split=state.version.effective_split(state.plan.split)
+    )
+    prepared = op.prepare(plan, cp)
+    out = initial_epoch(version.base, plan, prepared)
+    out.epoch = version.epoch
+    out.version = version
+    out.id_map = id_map
+    return out, op
+
+
+def rebuild_epoch(
+    state: EpochState,
+    config: EEJoinConfig,
+    cost_params: CostParams,
+    sample_docs: np.ndarray,
+    total_docs: int | None = None,
+) -> tuple[EpochState, EEJoinOperator]:
+    """Full rebuild: compact, re-sort by frequency, re-run the §5 search.
+
+    The maintenance action for *stat drift*: absorbed adds and
+    tombstones eventually invalidate the frequency-descending order
+    that Lemma 1's monotonic plan search needs, and the measured
+    statistics the plan was chosen under. Ids renumber (twice removed
+    from the pre-compaction space); ``id_map`` maps straight back to
+    the previous epoch's global ids.
+    """
+    version, id_map = state.version.compact()
+    order = np.argsort(-version.base.freq, kind="stable")
+    base = Dictionary(
+        tokens=version.base.tokens[order],
+        lengths=version.base.lengths[order],
+        freq=version.base.freq[order],
+        token_weight=version.base.token_weight,
+        entity_weight=version.base.entity_weight[order],
+    )
+    id_map = id_map[order]
+    op = EEJoinOperator(base, config)
+    stats = op.gather_statistics(
+        np.asarray(sample_docs), total_docs=total_docs or len(sample_docs)
+    )
+    plan = op.choose_plan(stats, cost_params)
+    prepared = op.prepare(plan, cost_params)
+    out = initial_epoch(base, plan, prepared)
+    out.epoch = version.epoch
+    out.version = dataclasses.replace(version, base=base)
+    out.id_map = id_map
+    return out, op
+
+
+# --------------------------------------------------------------------------
+# Execution over an epoch
+# --------------------------------------------------------------------------
+
+
+def epoch_side_matches(
+    cands: dict, eside: EpochSide, result_capacity: int
+) -> Matches:
+    """Probe + verify one epoch side: base, then every open segment.
+
+    All structures consume the *same* compacted candidate dict (they
+    share scheme and params by construction), so the delta path pays
+    one probe per open structure but never re-enumerates, re-filters or
+    re-compacts — the LSM read path of the subsystem.
+    """
+    out: Matches | None = None
+    for prepared in eside.all_sides():
+        m = side_matches(cands, prepared, result_capacity)
+        out = m if out is None else merge_matches(out, m, result_capacity)
+    return out
+
+
+def execute_epoch(state: EpochState, doc_tokens, config: EEJoinConfig) -> Matches:
+    """One-shot extraction against an epoch (versioned ``execute``).
+
+    Bit-equal in result *set* to a from-scratch rebuild over the
+    epoch's effective dictionary: the union filter admits a superset of
+    the rebuild's survivors (extra candidates die at probe/verify), and
+    tombstoned entities' matches are masked after the merge — asserted
+    property-based in ``tests/test_updates.py``.
+    """
+    out: Matches | None = None
+    for eside in state.sides:
+        if config.use_kernel:
+            cands = engine.fused_filter_compact(
+                doc_tokens, state.max_len, eside.flt, eside.params
+            )
+        else:
+            base, surv = engine.survival_mask(
+                doc_tokens, state.max_len, eside.flt, False
+            )
+            cands = engine.compact_candidates(
+                base, surv, eside.params.max_candidates
+            )
+        m = epoch_side_matches(cands, eside, config.result_capacity)
+        out = m if out is None else merge_matches(
+            out, m, config.result_capacity
+        )
+    assert out is not None, "empty plan"
+    if state.has_tombstones:
+        out = filter_matches(out, state.live, config.result_capacity)
+    return out
+
+
+# --------------------------------------------------------------------------
+# From-scratch rebuild oracle (the parity target of the whole subsystem)
+# --------------------------------------------------------------------------
+
+
+def rebuild_oracle(
+    version: DictionaryVersion,
+    config: EEJoinConfig,
+    plan: Plan,
+    cost_params: CostParams | None = None,
+) -> tuple[EEJoinOperator, PreparedPlan, np.ndarray]:
+    """From-scratch prepared state over the live entities of ``version``.
+
+    Builds a plain ``Dictionary`` of exactly the live entities (global-
+    id order, see ``effective_dictionary``), re-anchors the plan split
+    to it, and runs the ordinary frozen-dictionary ``prepare`` — no
+    segments, no tombstones, no unions. Returns ``(operator, prepared,
+    id_map)``; oracle match entity ids map back through ``id_map``.
+    """
+    eff, id_map = version.effective_dictionary()
+    plan = dataclasses.replace(plan, split=version.effective_split(plan.split))
+    op = EEJoinOperator(eff, config)
+    prepared = op.prepare(plan, cost_params or CostParams(num_devices=1))
+    return op, prepared, id_map
+
+
+def oracle_matches(
+    version: DictionaryVersion,
+    config: EEJoinConfig,
+    plan: Plan,
+    doc_tokens,
+    cost_params: CostParams | None = None,
+) -> set[tuple[int, int, int, int]]:
+    """(doc, pos, len, global-entity) set of the from-scratch rebuild."""
+    op, prepared, id_map = rebuild_oracle(version, config, plan, cost_params)
+    got = op.execute(prepared, doc_tokens)
+    return {
+        (d, p, length, int(id_map[e])) for (d, p, length, e) in got.to_set()
+    }
+
+
+def epoch_matches(
+    state: EpochState, doc_tokens, config: EEJoinConfig
+) -> set[tuple[int, int, int, int]]:
+    """(doc, pos, len, global-entity) set of the delta-served epoch."""
+    return execute_epoch(state, doc_tokens, config).to_set()

@@ -1,0 +1,332 @@
+"""Dictionary deltas and the epoch-versioned dictionary chain.
+
+The paper's operator — and this repo up to PR 4 — freezes the
+dictionary per ``DictionarySession``: filter, signature tables, indexes
+and the calibrated plan are built once and never change. Live
+extraction workloads (watchlist screening: Budur 2017 in PAPERS.md)
+churn continuously, and a full rebuild + session eviction per update
+both costs O(|E|) host work and drops the warm plan/calibration.
+
+This module is the *data* layer of live updates:
+
+* ``DictionaryDelta`` — one update: entities to add (token lists) plus
+  entity ids to *tombstone* (logical delete).
+* ``DictionaryVersion`` — one epoch of the versioned dictionary: the
+  compacted **base** ``Dictionary``, a list of append-only **segments**
+  (one per absorbed delta, LSM-style), and a **tombstone mask** over the
+  whole global id space. ``apply`` produces the next epoch without
+  touching the base; ``compact`` folds segments + tombstones into a new
+  base (renumbering ids — the epoch bump makes that visible).
+
+Global entity ids are positional: base entities keep their frequency-
+sorted ids ``0..E-1``; each segment's entities are appended after
+everything before it, in insertion order. Ids are therefore stable
+across ``apply`` (an entity never moves until a ``compact``), which is
+what lets in-flight batches finish on the epoch they were admitted
+under while new admissions see the new epoch.
+
+Deletes are tombstones, not structure edits: a Bloom filter cannot
+unset bits and signature tables cannot cheaply shrink, so a tombstoned
+entity stays in the prepared structures and its matches are masked at
+the verify/emit stage (``extraction.results.filter_matches``). The
+cost-model maintenance terms (``core.cost_model.maintenance_plan``)
+decide when accumulated segments + tombstones are worth folding away.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dictionary import PAD, Dictionary
+
+
+@dataclasses.dataclass(frozen=True)
+class DictionaryDelta:
+    """One live update: entities to add + global entity ids to delete.
+
+    ``added`` are per-entity token-id lists (duplicates dropped with set
+    semantics, like ``build_dictionary``); ``added_freq`` optional
+    estimated mention frequencies (default 1.0 — adds have no history).
+    ``tombstones`` are *global* entity ids valid in the version the
+    delta is applied to. Both halves may be empty (an empty delta is a
+    legal no-op that still bumps the epoch).
+    """
+
+    added: tuple[tuple[int, ...], ...] = ()
+    tombstones: tuple[int, ...] = ()
+    added_freq: tuple[float, ...] | None = None
+
+    def __post_init__(self):
+        if self.added_freq is not None and len(self.added_freq) != len(self.added):
+            raise ValueError(
+                f"DictionaryDelta: added_freq has {len(self.added_freq)} "
+                f"entries for {len(self.added)} added entities"
+            )
+
+    @property
+    def num_added(self) -> int:
+        return len(self.added)
+
+    @property
+    def num_tombstoned(self) -> int:
+        return len(self.tombstones)
+
+    @property
+    def empty(self) -> bool:
+        return not self.added and not self.tombstones
+
+
+def segment_dictionary(
+    delta: DictionaryDelta, base: Dictionary
+) -> Dictionary | None:
+    """Build the delta's add-segment as a ``Dictionary`` (None if no adds).
+
+    Unlike ``build_dictionary`` the segment preserves **insertion
+    order** (no frequency sort): global ids are positional and must be
+    deterministic across hosts applying the same delta stream. The
+    segment shares the base's token-weight table and max_len, so every
+    prepared structure built from it composes with the base's (same
+    static shapes, same hashing).
+    """
+    if not delta.added:
+        return None
+    L = base.max_len
+    V = base.vocab_size
+    dedup: list[list[int]] = []
+    for ent in delta.added:
+        seen: list[int] = []
+        for t in ent:
+            t = int(t)
+            if t == PAD:
+                raise ValueError("delta entity contains PAD (token id 0)")
+            if not 0 < t < V:
+                raise ValueError(
+                    f"delta entity token {t} out of vocab range [1, {V})"
+                )
+            if t not in seen:
+                seen.append(t)
+        if not seen:
+            raise ValueError("delta contains an empty entity")
+        if len(seen) > L:
+            raise ValueError(
+                f"delta entity has {len(seen)} distinct tokens > base "
+                f"max_len {L}: prepared structures are static-shape, so "
+                "added entities must fit the base width (rebuild with a "
+                "larger max_len to grow it)"
+            )
+        dedup.append(seen)
+    E = len(dedup)
+    toks = np.zeros((E, L), dtype=np.int32)
+    lens = np.zeros((E,), dtype=np.int32)
+    for i, ent in enumerate(dedup):
+        toks[i, : len(ent)] = ent
+        lens[i] = len(ent)
+    freq = (
+        np.asarray(delta.added_freq, dtype=np.float32)
+        if delta.added_freq is not None
+        else np.ones((E,), dtype=np.float32)
+    )
+    ent_w = base.token_weight[toks].sum(axis=1).astype(np.float32)
+    return Dictionary(toks, lens, freq, base.token_weight, ent_w)
+
+
+@dataclasses.dataclass(frozen=True)
+class DictionaryVersion:
+    """One epoch of the versioned dictionary chain.
+
+    ``base`` holds entities ``[0, base.num_entities)``; ``segments[i]``
+    holds ``segment_offsets[i] .. + segments[i].num_entities`` (offsets
+    ascend, segments are contiguous after the base). ``tombstones`` is a
+    bool mask over the whole ``[0, total_entities)`` id space.
+    """
+
+    epoch: int
+    base: Dictionary
+    segments: tuple[Dictionary, ...]
+    segment_offsets: tuple[int, ...]
+    tombstones: np.ndarray  # [total_entities] bool
+
+    @classmethod
+    def initial(cls, base: Dictionary) -> "DictionaryVersion":
+        return cls(
+            epoch=0,
+            base=base,
+            segments=(),
+            segment_offsets=(),
+            tombstones=np.zeros((base.num_entities,), dtype=bool),
+        )
+
+    @property
+    def total_entities(self) -> int:
+        return int(self.tombstones.shape[0])
+
+    @property
+    def num_live(self) -> int:
+        return int((~self.tombstones).sum())
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def max_len(self) -> int:
+        return self.base.max_len
+
+    def live_mask(self) -> np.ndarray:
+        """[total_entities] bool, True where the entity is live."""
+        return ~self.tombstones
+
+    def apply(self, delta: DictionaryDelta) -> "DictionaryVersion":
+        """Next epoch: append the delta's adds, extend the tombstones.
+
+        Never touches the base or earlier segments (their prepared
+        structures stay shared across epochs); O(delta) host work.
+        Tombstoning an already-dead id raises — callers see the current
+        epoch, so a double-delete is a protocol error worth surfacing.
+        """
+        total = self.total_entities
+        tombs = self.tombstones.copy()
+        for tid in delta.tombstones:
+            tid = int(tid)
+            if not 0 <= tid < total:
+                raise ValueError(
+                    f"tombstone id {tid} out of range [0, {total}) at "
+                    f"epoch {self.epoch}"
+                )
+            if tombs[tid]:
+                raise ValueError(
+                    f"tombstone id {tid} is already dead at epoch "
+                    f"{self.epoch} (double delete)"
+                )
+            tombs[tid] = True
+        seg = segment_dictionary(delta, self.base)
+        if seg is None:
+            return dataclasses.replace(
+                self, epoch=self.epoch + 1, tombstones=tombs
+            )
+        return DictionaryVersion(
+            epoch=self.epoch + 1,
+            base=self.base,
+            segments=self.segments + (seg,),
+            segment_offsets=self.segment_offsets + (total,),
+            tombstones=np.concatenate(
+                [tombs, np.zeros((seg.num_entities,), dtype=bool)]
+            ),
+        )
+
+    def entity_rows(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(tokens [N, L], lengths [N], freq [N]) over the full id space."""
+        toks = [self.base.tokens]
+        lens = [self.base.lengths]
+        freq = [self.base.freq]
+        for seg in self.segments:
+            toks.append(seg.tokens)
+            lens.append(seg.lengths)
+            freq.append(seg.freq)
+        return (
+            np.concatenate(toks, axis=0),
+            np.concatenate(lens),
+            np.concatenate(freq),
+        )
+
+    def effective_dictionary(self) -> tuple[Dictionary, np.ndarray]:
+        """(live dictionary in global-id order, id_map [N_live] -> global).
+
+        The from-scratch rebuild target: a plain ``Dictionary`` holding
+        exactly the live entities, rows ordered by ascending global id
+        (NOT re-sorted by frequency — id stability is the point; a full
+        re-plan that re-sorts is the ``rebuild`` maintenance action).
+        ``id_map[local]`` maps the rebuilt dictionary's row ids back to
+        this version's global ids, so oracle matches compare 1:1 with
+        delta-served matches.
+        """
+        toks, lens, freq = self.entity_rows()
+        live = self.live_mask()
+        if not live.any():
+            raise ValueError(
+                f"epoch {self.epoch} has no live entities: an all-"
+                "tombstoned dictionary cannot be rebuilt (retire the "
+                "session instead)"
+            )
+        id_map = np.nonzero(live)[0].astype(np.int32)
+        toks = toks[live]
+        ent_w = self.base.token_weight[toks].sum(axis=1).astype(np.float32)
+        d = Dictionary(
+            tokens=toks,
+            lengths=lens[live],
+            freq=freq[live],
+            token_weight=self.base.token_weight,
+            entity_weight=ent_w,
+        )
+        return d, id_map
+
+    def effective_split(self, base_split: int) -> int:
+        """Plan head split against the live id space.
+
+        The base plan splits the frequency-sorted base at ``base_split``
+        (head = index side, tail = ssjoin side, or vice versa). Rebuilt
+        over the effective dictionary, head entities are the live base
+        entities below the split: the split shrinks by the tombstones
+        inside it. Added entities (appended after the base) always land
+        in the tail, matching the delta path where segments adopt the
+        tail side's (algo, scheme).
+        """
+        if int(base_split) >= self.base.num_entities:
+            # pure-head plan: the head keeps covering everything,
+            # including appended segments
+            return self.num_live
+        s = max(int(base_split), 0)
+        return s - int(self.tombstones[:s].sum())
+
+    def compact(self) -> tuple["DictionaryVersion", np.ndarray]:
+        """Fold segments + tombstones into a fresh single-base version.
+
+        Returns ``(version, id_map)``: the new epoch's base is the
+        effective dictionary (live entities, global-id order preserved,
+        ids renumbered densely) and ``id_map[new_id] = old global id``.
+        The epoch bump is what makes the renumbering safe: in-flight
+        batches pinned to the old epoch keep reporting old ids, new
+        admissions report new ones.
+        """
+        d, id_map = self.effective_dictionary()
+        return (
+            DictionaryVersion(
+                epoch=self.epoch + 1,
+                base=d,
+                segments=(),
+                segment_offsets=(),
+                tombstones=np.zeros((d.num_entities,), dtype=bool),
+            ),
+            id_map,
+        )
+
+
+def random_delta(
+    rng: np.random.Generator,
+    version: DictionaryVersion,
+    vocab_size: int,
+    max_added: int = 8,
+    max_tombstoned: int = 8,
+    max_entity_len: int | None = None,
+) -> DictionaryDelta:
+    """Seeded random delta against ``version`` (test/bench helper).
+
+    Adds up to ``max_added`` fresh entities (distinct non-PAD tokens)
+    and tombstones up to ``max_tombstoned`` currently-live ids; either
+    half may come out empty, including both (the empty-delta case).
+    """
+    L = max_entity_len or min(version.max_len, 5)
+    n_add = int(rng.integers(0, max_added + 1))
+    added = []
+    for _ in range(n_add):
+        n = int(rng.integers(1, L + 1))
+        toks = rng.choice(vocab_size - 1, size=n, replace=False) + 1
+        added.append(tuple(int(t) for t in toks))
+    live = np.nonzero(version.live_mask())[0]
+    n_dead = int(rng.integers(0, min(max_tombstoned, max(len(live) - 1, 0)) + 1))
+    tombs = rng.choice(live, size=n_dead, replace=False) if n_dead else []
+    return DictionaryDelta(
+        added=tuple(added),
+        tombstones=tuple(int(t) for t in tombs),
+    )

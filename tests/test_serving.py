@@ -502,3 +502,264 @@ def test_metrics_percentiles_and_summary():
     assert s["submitted"] == 2 and s["rejected"] == 1
     assert s["queue_depth_max"] == 4 and s["occupancy_mean"] == 0.5
     assert s["docs_per_s"] == pytest.approx(2.0)
+
+
+# ------------------------------------------------- live updates (epochs)
+def _delta_from(corpus, rows, tombstones=()):
+    """Delta whose adds copy dictionary rows (so they match documents)."""
+    from repro.updates import DictionaryDelta
+
+    d = corpus.dictionary
+    added = tuple(
+        tuple(int(t) for t in d.tokens[i, : int(d.lengths[i])]) for i in rows
+    )
+    return DictionaryDelta(added=added, tombstones=tuple(tombstones))
+
+
+def test_apply_delta_hot_swap_parity(small_corpus):
+    """Serve, hot-swap a delta, serve again: each stream matches its own
+    epoch's one-shot reference; the session was never evicted."""
+    cache = SessionCache()
+    sess = cache.get_or_create(small_corpus.dictionary, _config(),
+                               plan=pure_plan("prefix"))
+    docs = _var_docs(small_corpus, seed=31, n=6)
+    svc = _serve(cache, sess, docs, overlap=True)
+    ref0 = _one_shot(sess, docs)
+    assert svc.results_set() == ref0
+
+    e0 = sess.epoch
+    sess.apply_delta(_delta_from(small_corpus, rows=(2, 3), tombstones=(0,)),
+                     force_action="absorb")
+    assert sess.epoch == e0 + 1
+    assert cache.misses == 1 and len(cache) == 1  # same session object
+    svc2 = _serve(cache, sess, docs, overlap=True)
+    ref1 = _one_shot(sess, docs)
+    assert svc2.results_set() == ref1
+    assert ref1 != ref0  # the tombstone (a matching entity) changed results
+    recs = svc2.metrics.batch_records
+    assert all(r["epoch"] == e0 + 1 for r in recs)
+
+
+@pytest.mark.parametrize("action", ["absorb", "compact"])
+def test_epoch_swap_under_inflight_load(small_corpus, action):
+    """The no-drain swap contract: batches dispatched before apply_delta
+    finish on the old epoch, later ones on the new — and every request's
+    results equal a single-epoch run of its own batch's epoch."""
+    cache = SessionCache()
+    sess = cache.get_or_create(small_corpus.dictionary, _config(),
+                               plan=pure_plan("prefix"))
+    docs = _var_docs(small_corpus, seed=32, n=10)
+    svc = ExtractionService(
+        cache, pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=2, max_delay_s=0.0),
+        overlap=True,
+    )
+    e0 = sess.epoch
+    with svc:
+        for i in range(5):
+            assert svc.submit(i, docs[i], sess.key) is not None
+        svc.tick()  # dispatch: these batches are pinned to epoch e0
+        ref0 = one_shot_reference(sess, docs, epoch=e0)
+        state = sess.apply_delta(
+            _delta_from(small_corpus, rows=(1, 2), tombstones=(0, 4)),
+            force_action=action,
+        )
+        e1 = sess.epoch
+        assert e1 > e0 and state is sess.current_state
+        ref1 = one_shot_reference(sess, docs, epoch=e1)
+        for i in range(5, 10):
+            assert svc.submit(i, docs[i], sess.key) is not None
+        svc.drain()
+    epoch_of = {r["batch_id"]: r["epoch"] for r in svc.metrics.batch_records}
+    seen = set()
+    for req in svc.completed:
+        ep = epoch_of[req.batch_id]
+        seen.add(ep)
+        ref = ref0 if ep == e0 else ref1
+        want = {(d, p, l, e) for (d, p, l, e) in ref if d == req.doc_id}
+        got = {(d, p, l, e) for (d, p, l, e, _s) in req.matches}
+        assert got == want, (req.doc_id, ep)
+    assert seen == {e0, e1}  # the swap really straddled in-flight work
+    assert ref0 != ref1
+    # old epoch state was garbage-collected once its last batch finished
+    assert sorted(sess.epochs) == [e1]
+
+
+def test_session_cache_summary_counters(small_corpus, zipf_corpus):
+    from repro.serving import session_cache_summary
+    from repro.serving.session import dictionary_fingerprint as fp
+
+    cache = SessionCache()
+    s1 = cache.get_or_create(small_corpus.dictionary, _config(),
+                             plan=pure_plan("prefix"))
+    cache.get_or_create(small_corpus.dictionary, _config(),
+                        plan=pure_plan("prefix"))  # hit
+    s2 = cache.get_or_create(zipf_corpus.dictionary, _config(),
+                             plan=pure_plan("word"))
+    s1.apply_delta(_delta_from(small_corpus, rows=(1,)),
+                   force_action="absorb")
+    cs = session_cache_summary(cache)
+    assert cs["sessions"] == 2
+    assert cs["hits"] == 1 and cs["misses"] == 2 and cs["evictions"] == 0
+    row = cs["per_session"][s1.key]
+    assert row["epoch"] == 1 and row["open_segments"] == 1
+    assert row["maintenance"] == ["absorb"]
+    assert cs["per_session"][s2.key]["epoch"] == 0
+
+
+# ------------------------------------------------- per-session quotas
+def test_session_quota_sheds_and_counts(small_corpus):
+    cache = SessionCache()
+    sess = cache.get_or_create(small_corpus.dictionary, _config(),
+                               plan=pure_plan("prefix"))
+    docs = _var_docs(small_corpus, seed=33, n=6)
+    svc = ExtractionService(
+        cache, pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=8, max_delay_s=0.0),
+        session_quota=2,
+    )
+    with svc:
+        got = [svc.submit(i, d, sess.key) for i, d in enumerate(docs)]
+        assert sum(r is not None for r in got) == 2  # quota, not capacity
+        assert svc.queue.rejected_quota == 4
+        assert svc.queue.rejected_by_session[sess.key] == 4
+        assert svc.metrics.rejected_quota == 4
+        assert svc.metrics.rejected_by_session[sess.key] == 4
+        svc.drain()
+        # quota frees as batches complete: admission works again
+        assert svc.submit(99, docs[0], sess.key) is not None
+        svc.drain()
+    assert svc.metrics.completed == 3
+
+
+def test_session_quota_block_backpressures(small_corpus):
+    """block=True at the quota: the producer waits for completions
+    instead of shedding, and every request is eventually served. The
+    nonzero flush deadline is load-bearing: quota-limited requests sit
+    in a *non-full* bin, so the retry loop's ticks must read a fresh
+    clock for the deadline flush to ever fire (the livelock regression
+    this test pins down)."""
+    cache = SessionCache()
+    sess = cache.get_or_create(small_corpus.dictionary, _config(),
+                               plan=pure_plan("prefix"))
+    docs = _var_docs(small_corpus, seed=34, n=8)
+    svc = ExtractionService(
+        cache, pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=3, max_delay_s=0.002),
+        session_quota=2,
+    )
+    with svc:
+        for i, d in enumerate(docs):
+            assert svc.submit(i, d, sess.key, block=True) is not None
+        svc.drain()
+    assert svc.metrics.completed == len(docs)
+    assert svc.results_set() == _one_shot(sess, docs)
+
+
+def test_quota_validation():
+    with pytest.raises(ValueError, match="session_quota"):
+        AdmissionQueue(4, session_quota=0)
+
+
+# ----------------------------------------- steady-state lane sizing
+def test_steady_state_lane_sizing_amortises_count_pass(small_corpus):
+    """Same (session, bucket) batches: exactly one count pass per plan
+    side, every later batch sizes off the previous batch's counts —
+    with results identical to the one-shot reference."""
+    cache = SessionCache()
+    sess = cache.get_or_create(
+        small_corpus.dictionary,
+        _config(adaptive_lanes=True),
+        plan=pure_plan("prefix"),
+    )
+    T = small_corpus.doc_tokens.shape[1]
+    # equal-length docs -> one length bucket -> one (side, bucket) hint
+    docs = [np.asarray(small_corpus.doc_tokens[i % 8, :T])
+            for i in range(12)]
+    svc = ExtractionService(
+        cache, pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=3, max_delay_s=0.0),
+    )
+    with svc:
+        for i, d in enumerate(docs):
+            assert svc.submit(i, d, sess.key) is not None
+            svc.tick()
+        svc.drain()
+    assert svc.results_set() == _one_shot(sess, docs)
+    sizing = svc.metrics.lane_sizing
+    n_sides = len(sess.current_state.sides)
+    n_batches = svc.metrics.batches
+    assert sizing.get("count_pass", 0) == n_sides  # first batch only
+    assert sizing.get("fixed", 0) == 0
+    total = sum(sizing.values())
+    assert total == n_batches * n_sides
+    assert sizing.get("hint", 0) + sizing.get("refit", 0) == total - n_sides
+    # the hint cache holds the measured per-tile max for this epoch
+    (key, (epoch, tile_max)), *_ = sess.lane_hints.items()
+    assert epoch == sess.epoch and tile_max >= 0
+
+
+def test_shard_lane_steady_matches_shard_lane(small_corpus):
+    """Hint, count-pass, undersized-hint (refit) and fixed sizing all
+    produce the wire lane of the reference shard_lane."""
+    from repro.extraction.sharded import shard_lane, shard_lane_steady
+
+    docs = jnp.asarray(small_corpus.doc_tokens[:8])
+    d = small_corpus.dictionary
+    from repro.core.filter import build_ish_filter
+
+    f = build_ish_filter(d, GAMMA)
+    flt = (jnp.asarray(f.bits), f.num_bits, f.num_hashes)
+    base = E.ExtractParams(gamma=GAMMA, scheme="prefix", use_kernel=True,
+                           max_candidates=1024)
+    ref_lane, ref_n, _ = shard_lane(docs, 0, d.max_len, flt, base, 4)
+
+    adaptive = E.ExtractParams(gamma=GAMMA, scheme="prefix", use_kernel=True,
+                               max_candidates=1024, adaptive_lanes=True)
+    lane, n, _k, tile_max, sizing = shard_lane_steady(
+        docs, 0, d.max_len, flt, adaptive, 4)
+    assert sizing == "count_pass" and tile_max >= 0
+    np.testing.assert_array_equal(np.asarray(lane), np.asarray(ref_lane))
+    assert int(n[0]) == int(ref_n[0])
+
+    lane, n, _k, tm2, sizing = shard_lane_steady(
+        docs, 0, d.max_len, flt, adaptive, 4, width_hint=tile_max)
+    assert sizing == "hint" and tm2 == tile_max
+    np.testing.assert_array_equal(np.asarray(lane), np.asarray(ref_lane))
+
+    if tile_max > 1:  # an undersized hint must refit, never truncate
+        lane, n, _k, tm3, sizing = shard_lane_steady(
+            docs, 0, d.max_len, flt, adaptive, 4, width_hint=1)
+        assert sizing in ("refit", "hint")  # hint iff rounding covered it
+        np.testing.assert_array_equal(np.asarray(lane), np.asarray(ref_lane))
+        assert int(n[0]) == int(ref_n[0])
+
+    lane, n, _k, tm, sizing = shard_lane_steady(
+        docs, 0, d.max_len, flt, base, 4)
+    assert sizing == "fixed" and tm == -1
+    np.testing.assert_array_equal(np.asarray(lane), np.asarray(ref_lane))
+
+
+def test_rebuild_resets_drift_baseline(small_corpus):
+    """A drift-triggered rebuild must re-anchor the density baseline:
+    otherwise every later delta re-measures against the stale value and
+    pays a full re-plan per update."""
+    import dataclasses
+
+    cache = SessionCache()
+    sess = cache.get_or_create(small_corpus.dictionary, _config(),
+                               plan=pure_plan("prefix"))
+    # plant a far-off baseline so the first sampled delta drifts
+    sess.cost_params = dataclasses.replace(
+        sess.cost_params, lane_density=1e-6
+    )
+    sample = small_corpus.doc_tokens[:8]
+    sess.apply_delta(_delta_from(small_corpus, rows=(1,)),
+                     sample_docs=sample)
+    assert sess.maintenance_log[-1]["action"] == "rebuild"
+    assert sess.cost_params.lane_density > 1e-6  # baseline re-anchored
+    # same sample again: density unchanged vs the new baseline -> no
+    # drift, no second rebuild
+    sess.apply_delta(_delta_from(small_corpus, rows=(2,)),
+                     sample_docs=sample)
+    assert sess.maintenance_log[-1]["action"] != "rebuild"

@@ -1,0 +1,490 @@
+"""Live dictionary updates: delta-built state ≡ from-scratch rebuild.
+
+The subsystem's single contract, checked at every layer: prepared state
+assembled incrementally (Bloom bit-union for adds, LSM delta segments
+probed beside the base, tombstone masks at emit) must answer every
+probed query exactly like a from-scratch rebuild over the live entity
+set —
+
+* filter: the unioned bitmap is bit-identical to a build over
+  base ∪ adds, and never drops a token the live rebuild admits;
+* sig tables / indexes: per-window candidate sets match;
+* end to end: ``execute_epoch`` match sets equal the rebuild oracle's
+  (with its local ids mapped back through ``id_map``) across random
+  add/tombstone sequences, including empty and delete-only deltas,
+  across schemes, algorithms and hybrid plans, and across compaction.
+
+These seeded-random sequence tests always run; ``test_updates_prop.py``
+re-states the core invariants property-based under hypothesis.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import (
+    MAINT_ABSORB,
+    MAINT_COMPACT,
+    MAINT_REBUILD,
+    OBJ_JOB,
+    CostParams,
+    SideCost,
+    maintenance_plan,
+)
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.filter import build_ish_filter, token_in_filter
+from repro.core.plan import Plan, PlanSide
+from repro.core.signatures import window_signatures
+from repro.data.synth import make_corpus
+from repro.extraction import engine as E
+from repro.extraction.results import Matches, filter_matches
+from repro.serving.session import pure_plan
+from repro import updates as U
+
+GAMMA = 0.8
+
+
+def _config(**kw):
+    kw.setdefault("gamma", GAMMA)
+    kw.setdefault("max_candidates", 4096)
+    kw.setdefault("result_capacity", 8192)
+    kw.setdefault("use_kernel", True)
+    return EEJoinConfig(**kw)
+
+
+def _corpus(seed=0, num_entities=24, num_docs=8):
+    return make_corpus(
+        num_docs=num_docs, doc_len=64, vocab_size=512,
+        num_entities=num_entities, seed=seed,
+    )
+
+
+def _hybrid_plan(split, head, tail):
+    z = SideCost(0, 0, 0, 0, 0, 0, 0, 0, 0)
+    return Plan(split, head, tail, OBJ_JOB, 0.0, z, z, 0)
+
+
+def _initial(corpus, cfg, plan):
+    op = EEJoinOperator(corpus.dictionary, cfg)
+    prepared = op.prepare(plan)
+    return U.initial_epoch(corpus.dictionary, plan, prepared)
+
+
+def _matching_delta(rng, version, corpus, n_add, n_dead):
+    """Delta whose adds are noisy copies of corpus entities (so the
+    new entities actually occur in documents — parity on matches that
+    exist, not just on empty sets)."""
+    d = version.base
+    adds = []
+    for _ in range(n_add):
+        i = int(rng.integers(0, d.num_entities))
+        n = int(d.lengths[i])
+        toks = [int(t) for t in d.tokens[i, :n]]
+        if len(toks) > 1 and rng.random() < 0.5:
+            toks = toks[:-1]  # drop a token: still a gamma-variant often
+        adds.append(tuple(toks))
+    live = np.nonzero(version.live_mask())[0]
+    n_dead = min(n_dead, max(len(live) - 1, 0))
+    tombs = rng.choice(live, size=n_dead, replace=False) if n_dead else []
+    return U.DictionaryDelta(added=tuple(adds),
+                             tombstones=tuple(int(t) for t in tombs))
+
+
+# --------------------------------------------------------------------------
+# delta / version mechanics
+# --------------------------------------------------------------------------
+
+
+def test_version_apply_ids_and_tombstones():
+    corpus = _corpus()
+    v0 = U.DictionaryVersion.initial(corpus.dictionary)
+    E0 = v0.total_entities
+    delta = U.DictionaryDelta(added=((5, 6), (7, 8, 9)), tombstones=(0, 3))
+    v1 = v0.apply(delta)
+    assert v1.epoch == 1
+    assert v1.total_entities == E0 + 2
+    assert v1.num_segments == 1
+    assert v1.segment_offsets == (E0,)
+    assert v1.tombstones[0] and v1.tombstones[3]
+    assert not v1.tombstones[E0:].any()
+    # base untouched (shared by reference)
+    assert v1.base is v0.base
+    # double delete raises
+    with pytest.raises(ValueError, match="already dead"):
+        v1.apply(U.DictionaryDelta(tombstones=(0,)))
+    with pytest.raises(ValueError, match="out of range"):
+        v1.apply(U.DictionaryDelta(tombstones=(E0 + 2,)))
+
+
+def test_empty_delta_bumps_epoch_only():
+    corpus = _corpus()
+    v0 = U.DictionaryVersion.initial(corpus.dictionary)
+    v1 = v0.apply(U.DictionaryDelta())
+    assert v1.epoch == 1 and v1.num_segments == 0
+    assert v1.total_entities == v0.total_entities
+    np.testing.assert_array_equal(v1.tombstones, v0.tombstones)
+
+
+def test_segment_validation():
+    corpus = _corpus()
+    v0 = U.DictionaryVersion.initial(corpus.dictionary)
+    with pytest.raises(ValueError, match="PAD"):
+        v0.apply(U.DictionaryDelta(added=((0, 1),)))
+    with pytest.raises(ValueError, match="empty entity"):
+        v0.apply(U.DictionaryDelta(added=((),)))
+    with pytest.raises(ValueError, match="out of vocab"):
+        v0.apply(U.DictionaryDelta(added=((10**6,),)))
+    too_long = tuple(range(1, corpus.dictionary.max_len + 2))
+    with pytest.raises(ValueError, match="max_len"):
+        v0.apply(U.DictionaryDelta(added=(too_long,)))
+
+
+def test_effective_dictionary_and_split():
+    corpus = _corpus()
+    v = U.DictionaryVersion.initial(corpus.dictionary)
+    E0 = v.total_entities
+    v = v.apply(U.DictionaryDelta(added=((5, 6),), tombstones=(1, 4, 10)))
+    eff, id_map = v.effective_dictionary()
+    assert eff.num_entities == E0 + 1 - 3
+    assert id_map.tolist() == [i for i in range(E0 + 1) if i not in (1, 4, 10)]
+    # rows preserved verbatim in global-id order
+    rows, lens, _ = v.entity_rows()
+    np.testing.assert_array_equal(eff.tokens, rows[id_map])
+    # split shrinks by tombstones inside it; pure-head covers adds too
+    assert v.effective_split(5) == 5 - 2  # ids 1, 4 dead below 5
+    assert v.effective_split(0) == 0
+    assert v.effective_split(E0) == v.num_live
+    assert v.effective_split(E0 + 7) == v.num_live
+
+
+def test_compact_renumbers_with_id_map():
+    corpus = _corpus()
+    v = U.DictionaryVersion.initial(corpus.dictionary)
+    v = v.apply(U.DictionaryDelta(added=((5, 6), (9, 8)), tombstones=(2,)))
+    v2, id_map = v.compact()
+    assert v2.epoch == v.epoch + 1
+    assert v2.num_segments == 0 and not v2.tombstones.any()
+    assert v2.total_entities == v.num_live
+    rows, _, _ = v.entity_rows()
+    np.testing.assert_array_equal(v2.base.tokens, rows[id_map])
+
+
+# --------------------------------------------------------------------------
+# filter parity
+# --------------------------------------------------------------------------
+
+
+def test_union_filter_bit_identical_to_merged_build():
+    corpus = _corpus()
+    cfg = _config()
+    plan = pure_plan("prefix")
+    state = _initial(corpus, cfg, plan)
+    rng = np.random.default_rng(7)
+    for _ in range(3):
+        delta = _matching_delta(rng, state.version, corpus, n_add=3, n_dead=2)
+        state = U.absorb_delta(state, delta, cfg)
+    # from-scratch filter over ALL entities (live + tombstoned): the
+    # union never unsets delete bits, so this is the bit-exact target
+    all_rows, all_lens, all_freq = state.version.entity_rows()
+    from repro.core.dictionary import Dictionary
+
+    full = Dictionary(
+        tokens=all_rows, lengths=all_lens, freq=all_freq,
+        token_weight=corpus.dictionary.token_weight,
+        entity_weight=corpus.dictionary.token_weight[all_rows].sum(axis=1),
+    )
+    want = build_ish_filter(full, cfg.gamma, num_bits=cfg.filter_bits)
+    got_words = state.sides[-1].filter_words
+    np.testing.assert_array_equal(got_words, want.bits)
+    # soundness vs the live rebuild: every member token of the live
+    # filter probes positive in the union (no false negatives, ever)
+    eff, _ = state.version.effective_dictionary()
+    live_f = build_ish_filter(eff, cfg.gamma, num_bits=cfg.filter_bits)
+    hit = token_in_filter(
+        jnp.asarray(got_words), want.num_bits, want.num_hashes,
+        jnp.asarray(live_f.member_tokens),
+    )
+    assert bool(np.asarray(hit).all())
+
+
+# --------------------------------------------------------------------------
+# structure-level query parity (sig tables + indexes)
+# --------------------------------------------------------------------------
+
+
+def _window_batch(corpus, max_len):
+    """Compacted candidate windows off the real corpus (no filter)."""
+    docs = jnp.asarray(corpus.doc_tokens)
+    base, surv = E.survival_mask(docs, max_len, None, False)
+    return E.compact_candidates(base, surv, 2048)
+
+
+def _probe_entities(cands, prepared_sides, scheme, live, id_space):
+    """Global live entity-id sets per window across prepared sides."""
+    toks, ok = cands["win_tokens"], cands["win_valid"]
+    sigs, mask = window_signatures(scheme, toks, toks != 0, GAMMA)
+    out = [set() for _ in range(toks.shape[0])]
+    for side in prepared_sides:
+        ents = np.asarray(
+            E.probe_sig_table(side.sig_table, sigs, mask & ok[:, None])
+        )
+        ents = np.where(ents >= 0, ents + side.sig_table.entity_offset, -1)
+        for w, row in enumerate(ents):
+            for e in row[row >= 0]:
+                if live[int(e)] if id_space == "global" else True:
+                    out[w].add(int(e))
+    return out
+
+
+@pytest.mark.parametrize("scheme", ["word", "prefix", "lsh", "variant"])
+def test_sig_table_query_parity(scheme):
+    corpus = _corpus(seed=3)
+    cfg = _config()
+    plan = pure_plan(scheme)
+    state = _initial(corpus, cfg, plan)
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        delta = _matching_delta(rng, state.version, corpus, n_add=3, n_dead=1)
+        state = U.absorb_delta(state, delta, cfg)
+    cands = _window_batch(corpus, state.max_len)
+    live = state.version.live_mask()
+    got = _probe_entities(
+        cands, state.sides[-1].all_sides(), scheme, live, "global"
+    )
+    op, prepared, id_map = U.rebuild_oracle(state.version, cfg, plan)
+    want_local = _probe_entities(
+        cands, prepared.sides, scheme, None, "local"
+    )
+    want = [{int(id_map[e]) for e in s} for s in want_local]
+    assert got == want
+
+
+@pytest.mark.parametrize("kind", ["word", "prefix", "variant"])
+def test_index_query_parity(kind):
+    from repro.core.index import query_inverted, query_variant
+    from repro.core.variants import window_variant_key
+
+    corpus = _corpus(seed=4)
+    cfg = _config()
+    plan = _hybrid_plan(10**9, PlanSide("index", kind), PlanSide("index", kind))
+    state = _initial(corpus, cfg, plan)
+    rng = np.random.default_rng(13)
+    for _ in range(2):
+        delta = _matching_delta(rng, state.version, corpus, n_add=3, n_dead=1)
+        state = U.absorb_delta(state, delta, cfg)
+    cands = _window_batch(corpus, state.max_len)
+    toks, ok = cands["win_tokens"], cands["win_valid"]
+
+    def probe(sides, live, id_map):
+        out = [set() for _ in range(toks.shape[0])]
+        for side in sides:
+            for part in side.index_parts:
+                if kind == "variant":
+                    k1, k2 = window_variant_key(toks, toks != 0, xp=jnp)
+                    ents = query_variant(
+                        part.keys1, part.keys2, part.ents, part.n_buckets,
+                        k1, k2,
+                    )
+                else:
+                    ents = query_inverted(part.postings, toks, toks != 0)
+                ents = np.asarray(jnp.where(ok[:, None], ents, -1))
+                ents = np.where(ents >= 0, ents + part.entity_offset, -1)
+                for w, row in enumerate(ents):
+                    for e in row[row >= 0]:
+                        g = int(e) if id_map is None else int(id_map[int(e)])
+                        if live is None or live[g]:
+                            out[w].add(g)
+        return out
+
+    live = state.version.live_mask()
+    got = probe(state.sides[-1].all_sides(), live, None)
+    op, prepared, id_map = U.rebuild_oracle(state.version, cfg, plan)
+    want = probe(prepared.sides, None, id_map)
+    assert got == want
+
+
+# --------------------------------------------------------------------------
+# end-to-end extraction parity over random delta sequences
+# --------------------------------------------------------------------------
+
+
+def _check_sequence(plan, cfg, seed, steps=4, scheme_docs_seed=0):
+    corpus = _corpus(seed=scheme_docs_seed, num_entities=24)
+    docs = jnp.asarray(corpus.doc_tokens)
+    state = _initial(corpus, cfg, plan)
+    rng = np.random.default_rng(seed)
+    for step in range(steps):
+        delta = _matching_delta(
+            rng, state.version, corpus,
+            n_add=int(rng.integers(0, 4)), n_dead=int(rng.integers(0, 3)),
+        )
+        state = U.absorb_delta(state, delta, cfg)
+        got = U.epoch_matches(state, docs, cfg)
+        want = U.oracle_matches(state.version, cfg, plan, docs)
+        assert got == want, (
+            f"step {step} ({delta.num_added} adds, "
+            f"{delta.num_tombstoned} tombstones): {len(got)} vs {len(want)}"
+        )
+    return state
+
+
+@pytest.mark.parametrize("scheme", ["word", "prefix", "lsh", "variant"])
+def test_extraction_parity_ssjoin(scheme):
+    _check_sequence(pure_plan(scheme), _config(), seed=21)
+
+
+@pytest.mark.parametrize("kind", ["word", "prefix", "variant"])
+def test_extraction_parity_index(kind):
+    _check_sequence(
+        pure_plan(kind, algo="index"), _config(), seed=22
+    )
+
+
+def test_extraction_parity_hybrid_plan():
+    plan = _hybrid_plan(
+        12, PlanSide("index", "prefix"), PlanSide("ssjoin", "prefix")
+    )
+    _check_sequence(plan, _config(), seed=23)
+
+
+def test_extraction_parity_unfused_path():
+    _check_sequence(pure_plan("prefix"), _config(use_kernel=False), seed=24)
+
+
+def test_operator_execute_epoch_wrapper():
+    """The eejoin-level entry point delegates to the versioned execute."""
+    corpus = _corpus(seed=9)
+    cfg = _config()
+    plan = pure_plan("prefix")
+    op = EEJoinOperator(corpus.dictionary, cfg)
+    state = U.initial_epoch(corpus.dictionary, plan, op.prepare(plan))
+    rng = np.random.default_rng(51)
+    state = U.absorb_delta(
+        state, _matching_delta(rng, state.version, corpus, 2, 1), cfg
+    )
+    docs = jnp.asarray(corpus.doc_tokens)
+    assert op.execute_epoch(state, docs).to_set() == U.epoch_matches(
+        state, docs, cfg
+    )
+
+
+def test_delete_only_and_empty_deltas():
+    corpus = _corpus(seed=5)
+    docs = jnp.asarray(corpus.doc_tokens)
+    cfg = _config()
+    plan = pure_plan("prefix")
+    state = _initial(corpus, cfg, plan)
+    base_set = U.epoch_matches(state, docs, cfg)
+
+    empty = U.absorb_delta(state, U.DictionaryDelta(), cfg)
+    assert empty.epoch == 1 and empty.open_segments == 0
+    assert U.epoch_matches(empty, docs, cfg) == base_set
+
+    # delete-only: tombstone every entity that matched something
+    hit_ents = sorted({e for (_, _, _, e) in base_set})[:4]
+    dead = U.absorb_delta(
+        empty, U.DictionaryDelta(tombstones=tuple(hit_ents)), cfg
+    )
+    got = U.epoch_matches(dead, docs, cfg)
+    want = {m for m in base_set if m[3] not in hit_ents}
+    assert got == want
+    assert got == U.oracle_matches(dead.version, cfg, plan, docs)
+
+
+def test_compaction_preserves_results_modulo_id_map():
+    cfg = _config()
+    plan = pure_plan("prefix")
+    state = _check_sequence(plan, cfg, seed=31, steps=3)
+    corpus = _corpus(seed=0, num_entities=24)
+    docs = jnp.asarray(corpus.doc_tokens)
+    before = U.epoch_matches(state, docs, cfg)
+    state2, _op = U.compact_epoch(state, cfg)
+    assert state2.open_segments == 0 and not state2.has_tombstones
+    after = U.epoch_matches(state2, docs, cfg)
+    mapped = {(d, p, l, int(state2.id_map[e])) for (d, p, l, e) in after}
+    assert mapped == before
+    # and the compacted state keeps matching its own oracle
+    assert after == U.oracle_matches(state2.version, cfg, state2.plan, docs)
+
+
+def test_rebuild_epoch_replans_with_stats():
+    corpus = _corpus(seed=6)
+    docs = jnp.asarray(corpus.doc_tokens)
+    # restrict the re-plan search to complete, verified schemes: the
+    # parity claim is per-plan — a re-plan that picks lsh (probabilistic
+    # recall) would legitimately change the match set
+    cfg = _config(options=(("index", "prefix"), ("ssjoin", "prefix"),
+                           ("index", "word"), ("ssjoin", "word")))
+    state = _initial(corpus, cfg, pure_plan("prefix"))
+    rng = np.random.default_rng(41)
+    delta = _matching_delta(rng, state.version, corpus, n_add=3, n_dead=2)
+    state = U.absorb_delta(state, delta, cfg)
+    before = U.epoch_matches(state, docs, cfg)
+    state2, op2 = U.rebuild_epoch(
+        state, cfg, CostParams(num_devices=1), corpus.doc_tokens
+    )
+    # re-sorted base: frequency descending (Lemma 1's invariant back)
+    freq = state2.version.base.freq
+    assert (np.diff(freq) <= 1e-6).all()
+    assert state2.plan.evaluations > 0  # a real §5 search ran
+    after = U.epoch_matches(state2, docs, cfg)
+    mapped = {(d, p, l, int(state2.id_map[e])) for (d, p, l, e) in after}
+    assert mapped == before
+
+
+# --------------------------------------------------------------------------
+# emit-mask + maintenance units
+# --------------------------------------------------------------------------
+
+
+def test_filter_matches_masks_tombstoned():
+    m = Matches(
+        doc=jnp.asarray([0, 0, 1, -1], jnp.int32),
+        pos=jnp.asarray([1, 2, 3, -1], jnp.int32),
+        length=jnp.asarray([2, 2, 1, -1], jnp.int32),
+        entity=jnp.asarray([0, 1, 2, -1], jnp.int32),
+        score=jnp.asarray([1.0, 1.0, 0.9, 0.0], jnp.float32),
+        count=jnp.asarray(3, jnp.int32),
+    )
+    live = jnp.asarray([True, False, True])
+    out = filter_matches(m, live, 4)
+    assert out.to_set() == {(0, 1, 2, 0), (1, 3, 1, 2)}
+    assert int(out.count) == 2
+
+
+def test_maintenance_plan_actions():
+    cp = CostParams(num_devices=1)
+    # big dictionary, short horizon -> absorbing the small delta wins
+    p = maintenance_plan(
+        cp, live_entities=100_000, delta_entities=100, open_segments=1,
+        dead_entities=0, total_entities=100_000, probes_per_batch=4096,
+        horizon_batches=10,
+    )
+    assert p.action == MAINT_ABSORB
+    # long horizon: accumulated per-batch segment overhead dwarfs the
+    # one-time fold -> compact
+    p = maintenance_plan(
+        cp, live_entities=100_000, delta_entities=100, open_segments=8,
+        dead_entities=20_000, total_entities=120_000,
+        probes_per_batch=4096, horizon_batches=10_000_000,
+    )
+    assert p.action == MAINT_COMPACT
+    assert p.compact_s > p.absorb_s
+    # stat drift past threshold forces the full re-plan
+    p = maintenance_plan(
+        cp, live_entities=1000, delta_entities=10, open_segments=1,
+        dead_entities=0, total_entities=1000, probes_per_batch=4096,
+        horizon_batches=10, stat_drift=0.9,
+    )
+    assert p.action == MAINT_REBUILD
+
+
+def test_maintenance_overhead_monotone_in_segments_and_dead():
+    from repro.core.cost_model import maintenance_overhead_per_batch
+
+    cp = CostParams(num_devices=1)
+    base = maintenance_overhead_per_batch(cp, 4096, 0, 0, 1000)
+    seg = maintenance_overhead_per_batch(cp, 4096, 3, 0, 1000)
+    dead = maintenance_overhead_per_batch(cp, 4096, 3, 500, 1000)
+    assert base == 0.0 and seg > base and dead > seg

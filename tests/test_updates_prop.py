@@ -1,0 +1,145 @@
+"""Property-based statement of the live-updates parity contract.
+
+Hypothesis drives random add/tombstone sequences (lengths, token
+choices, delete targets and delta counts all generated — including the
+empty-delta and delete-only corners) and asserts the same invariants
+``test_updates.py`` checks with seeded sequences:
+
+* delta-built prepared state answers filter membership exactly like a
+  from-scratch build over base ∪ adds (bit-union identity);
+* end-to-end extraction over an absorbed sequence equals the rebuild
+  oracle over the live entity set, per scheme family;
+* compaction is a pure renumbering (id_map bijection on results).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.dictionary import Dictionary, build_dictionary
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.filter import build_ish_filter
+from repro.serving.session import pure_plan
+from repro import updates as U
+
+GAMMA = 0.8
+VOCAB = 64  # tiny vocabulary: adds collide with base entities often
+
+
+def _cfg(**kw):
+    kw.setdefault("gamma", GAMMA)
+    kw.setdefault("max_candidates", 2048)
+    kw.setdefault("result_capacity", 4096)
+    kw.setdefault("use_kernel", True)
+    return EEJoinConfig(**kw)
+
+
+_entity = st.lists(
+    st.integers(1, VOCAB - 1), min_size=1, max_size=4, unique=True
+)
+
+# one generated update: entities to add + draw-indices for tombstones
+# (resolved against the live set at apply time)
+_delta_spec = st.tuples(
+    st.lists(_entity, min_size=0, max_size=3),
+    st.lists(st.integers(0, 10**6), min_size=0, max_size=3),
+)
+
+_sequence = st.lists(_delta_spec, min_size=1, max_size=3)
+
+
+def _base_version(seed: int) -> tuple[Dictionary, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    ents = []
+    seen = set()
+    while len(ents) < 8:
+        n = int(rng.integers(1, 5))
+        toks = tuple(int(t) for t in rng.choice(VOCAB - 1, n, replace=False) + 1)
+        if toks not in seen:
+            seen.add(toks)
+            ents.append(list(toks))
+    d = build_dictionary(ents, VOCAB)
+    docs = rng.integers(0, VOCAB, size=(4, 32)).astype(np.int32)
+    return d, docs
+
+
+def _resolve(version: U.DictionaryVersion, spec) -> U.DictionaryDelta:
+    adds, tomb_draws = spec
+    live = np.nonzero(version.live_mask())[0]
+    tombs = []
+    for draw in tomb_draws:
+        pool = [int(t) for t in live if t not in tombs]
+        if len(pool) <= 1:
+            break  # keep at least one live entity
+        tombs.append(pool[draw % len(pool)])
+    return U.DictionaryDelta(
+        added=tuple(tuple(e) for e in adds), tombstones=tuple(tombs)
+    )
+
+
+@given(_sequence, st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_union_filter_is_merged_build(specs, seed):
+    base, _docs = _base_version(seed)
+    cfg = _cfg()
+    version = U.DictionaryVersion.initial(base)
+    words = build_ish_filter(base, GAMMA, num_bits=cfg.filter_bits).bits
+    for spec in specs:
+        delta = _resolve(version, spec)
+        version = version.apply(delta)
+        if delta.num_added:
+            seg = version.segments[-1]
+            segf = build_ish_filter(seg, GAMMA, num_bits=cfg.filter_bits)
+            words = U.union_filter_words(words, segf)
+    rows, lens, freq = version.entity_rows()
+    full = Dictionary(
+        tokens=rows, lengths=lens, freq=freq,
+        token_weight=base.token_weight,
+        entity_weight=base.token_weight[rows].sum(axis=1),
+    )
+    want = build_ish_filter(full, GAMMA, num_bits=cfg.filter_bits).bits
+    np.testing.assert_array_equal(words, want)
+
+
+@pytest.mark.parametrize(
+    "plan", [pure_plan("prefix"), pure_plan("variant"),
+             pure_plan("prefix", algo="index")],
+    ids=["ssjoin-prefix", "ssjoin-variant", "index-prefix"],
+)
+@given(specs=_sequence, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_absorbed_sequence_matches_rebuild_oracle(plan, specs, seed):
+    base, docs = _base_version(seed)
+    cfg = _cfg()
+    op = EEJoinOperator(base, cfg)
+    state = U.initial_epoch(base, plan, op.prepare(plan))
+    docs = jnp.asarray(docs)
+    for spec in specs:
+        state = U.absorb_delta(state, _resolve(state.version, spec), cfg)
+    got = U.epoch_matches(state, docs, cfg)
+    want = U.oracle_matches(state.version, cfg, plan, docs)
+    assert got == want
+
+
+@given(specs=_sequence, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_compaction_is_pure_renumbering(specs, seed):
+    base, docs = _base_version(seed)
+    cfg = _cfg()
+    plan = pure_plan("prefix")
+    op = EEJoinOperator(base, cfg)
+    state = U.initial_epoch(base, plan, op.prepare(plan))
+    docs = jnp.asarray(docs)
+    for spec in specs:
+        state = U.absorb_delta(state, _resolve(state.version, spec), cfg)
+    before = U.epoch_matches(state, docs, cfg)
+    state2, _ = U.compact_epoch(state, cfg)
+    after = U.epoch_matches(state2, docs, cfg)
+    id_map = state2.id_map
+    assert {(d, p, l, int(id_map[e])) for (d, p, l, e) in after} == before
+    # id_map is injective over the live set
+    assert len(set(id_map.tolist())) == len(id_map)
