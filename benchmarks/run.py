@@ -12,6 +12,8 @@ Sections:
     signatures   §3.3 signature study (shuffle bytes / skew / recall)
     scaling      §6 dictionary/corpus scaling + plan crossover
     kernels      Pallas kernels vs jnp oracle (interpret mode)
+    corpus       corpus-scale streaming: DMA megakernel vs per-tile loop,
+                 spill streaming + kill-then-resume checkpoint merges
     serving      async probe/verify serving: load vs latency percentiles
     updates      live dictionary deltas: absorb vs rebuild + epoch swap
     roofline     deliverable (g) reader over results/dryrun/
@@ -24,6 +26,7 @@ import traceback
 
 from benchmarks import (
     bench_algorithms,
+    bench_corpus,
     bench_cost_model,
     bench_hybrid,
     bench_kernels,
@@ -43,6 +46,7 @@ SECTIONS = [
     ("signatures", bench_signatures.main),
     ("scaling", bench_scaling.main),
     ("kernels", bench_kernels.main),
+    ("corpus", bench_corpus.main),
     ("serving", bench_serving.main),
     ("updates", bench_updates.main),
     ("roofline", bench_roofline.main),
@@ -64,6 +68,9 @@ def main() -> None:
         t0 = time.time()
         bench_kernels.main(smoke=True)
         print(f"# [kernels --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        t0 = time.time()
+        bench_corpus.main(smoke=True)
+        print(f"# [corpus --smoke] done in {time.time() - t0:.1f}s", flush=True)
         t0 = time.time()
         bench_serving.main(smoke=True)
         print(f"# [serving --smoke] done in {time.time() - t0:.1f}s", flush=True)

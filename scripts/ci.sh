@@ -16,12 +16,15 @@ python -m pytest -x -q
 # compaction), the variant + adaptive-lane scenario (fused in-kernel
 # variant keys vs window_variant_key, two-pass vs fixed lane bit
 # identity, two-pass lane bytes asserted under the fixed [G, NC]
-# bytes), the serving loadgen (N=16 seeded open-loop requests
+# bytes), the corpus-streaming scenario (single-launch DMA megakernel
+# vs per-tile launch loop with bit parity + model-vs-measured
+# direction asserted, plus spill streaming with a kill-then-resume
+# checkpoint leg), the serving loadgen (N=16 seeded open-loop requests
 # through the probe/verify split), and the live-updates scenario
 # (delta absorb vs from-scratch rebuild with oracle parity + the
 # epoch hot-swap serving leg). Parity is asserted inside each bench,
 # so drift fails CI; rows land in results/bench/{kernels,sharded,
-# variant,serving,updates}_smoke.json.
+# variant,corpus,corpus_spill,serving,updates}_smoke.json.
 python -m benchmarks.run --smoke
 
 # Serving smoke leg: the real-time (threaded, double-buffered) service

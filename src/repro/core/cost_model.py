@@ -368,6 +368,7 @@ def lane_plan(
     density: float,
     bands: int = 4,
     variant_keys: bool = False,
+    streamed: bool = False,
 ) -> dict:
     """Cost the two-pass vs fixed lane trade for one probe geometry.
 
@@ -377,17 +378,32 @@ def lane_plan(
     ``width`` (planned emit width), ``two_pass`` (recommendation),
     ``bytes_fixed`` / ``bytes_two_pass`` and per-pipeline lane bytes —
     the numbers the kernel bench asserts against its measured lanes.
+
+    ``streamed=True`` accounts the single-launch DMA pipeline instead of
+    the per-tile launch loop (the packed-bitmap round trip disappears
+    from both passes — see ``hbm_bytes_fused``); ``bytes_streamed_delta``
+    reports how many modeled bytes streaming saves at the recommended
+    plan, the number the corpus bench asserts direction against.
     """
     from repro.kernels.fused_probe import compact_tile_height, hbm_bytes_fused
 
     bd = compact_tile_height(D, T, nc)
     G = -(-D // bd)
     W = planned_lane_width(density, bd * T * max_len, nc)
-    fixed = hbm_bytes_fused(D, T, max_len, nc, bands, False, sig_width=1,
-                            kernel_compact=True, variant_keys=variant_keys)
-    two = hbm_bytes_fused(D, T, max_len, nc, bands, False, sig_width=1,
-                          kernel_compact=True, lane_width=W, two_pass=True,
-                          variant_keys=variant_keys)
+
+    def cost(two_pass: bool, is_streamed: bool) -> int:
+        return hbm_bytes_fused(
+            D, T, max_len, nc, bands, False, sig_width=1,
+            kernel_compact=True,
+            lane_width=W if two_pass else None,
+            two_pass=two_pass,
+            variant_keys=variant_keys,
+            streamed=is_streamed,
+        )
+
+    fixed = cost(False, streamed)
+    two = cost(True, streamed)
+    best_per_tile = min(cost(False, False), cost(True, False))
     return {
         "width": W,
         "two_pass": two < fixed,
@@ -396,4 +412,6 @@ def lane_plan(
         "lane_bytes_fixed": 2 * G * (1 + nc) * 4,
         "lane_bytes_two_pass": 2 * G * (1 + W) * 4,
         "tiles": G,
+        "streamed": streamed,
+        "bytes_streamed_delta": best_per_tile - min(fixed, two),
     }

@@ -57,6 +57,13 @@ class EEJoinConfig:
     adaptive_lanes: bool = False
     lane_width: int | None = None
     kernel_sigs: bool | None = None
+    # kernel-path streaming: per-shard launch mode for the streaming
+    # drivers (None = auto: stream shards spanning >= 2 tiles through
+    # the single-launch DMA megakernel; see ExtractParams.streamed) and
+    # the device-resident byte budget ``execute_corpus`` sizes spill
+    # shards against (None -> sharded.DEFAULT_DEVICE_BUDGET_BYTES).
+    streamed: bool | None = None
+    device_budget_bytes: int | None = None
 
 
 @dataclasses.dataclass
@@ -150,6 +157,7 @@ class EEJoinOperator:
             adaptive_lanes=cfg.adaptive_lanes,
             lane_width=cfg.lane_width,
             kernel_sigs=cfg.kernel_sigs,
+            streamed=cfg.streamed,
         )
         prepared = PreparedSide(side=side, params=params, ddict=ddict, flt=flt)
         if side.algo == ALGO_INDEX:
@@ -275,6 +283,8 @@ class EEJoinOperator:
         axis_name: str = "workers",
         shard_docs: int | None = None,
         tile_docs: int | None = None,
+        checkpoint_dir: str | None = None,
+        stream_stats: dict | None = None,
     ) -> Matches:
         """Streaming execution: the sharded per-device ``fused_probe``
         driver feeds the candidate front end (documents split into
@@ -283,13 +293,15 @@ class EEJoinOperator:
         over the merged global candidate buffer. Bit-identical to
         ``execute`` with ``use_kernel=True``; requires it (candidate
         streaming is a kernel-path feature). With ``mesh=None`` shards
-        stream sequentially on the local device."""
+        stream sequentially on the local device. ``checkpoint_dir``
+        makes the candidate waves resumable (per-shard lane
+        checkpoints, one subdirectory per plan side)."""
         from repro.extraction import sharded as S
 
         assert self.config.use_kernel, "execute_sharded requires use_kernel=True"
         cfg = self.config
         out: Matches | None = None
-        for side in prepared.sides:
+        for i, side in enumerate(prepared.sides):
             cands = S.sharded_filter_compact(
                 doc_tokens,
                 prepared.max_entity_len,
@@ -299,6 +311,55 @@ class EEJoinOperator:
                 axis_name=axis_name,
                 shard_docs=shard_docs,
                 tile_docs=tile_docs,
+                checkpoint_dir=None if checkpoint_dir is None
+                else f"{checkpoint_dir}/side{i}",
+                stream_stats=stream_stats,
+            )
+            m = self.side_matches(cands, side)
+            out = m if out is None else merge_matches(out, m, cfg.result_capacity)
+        assert out is not None, "empty plan"
+        return out
+
+    def execute_corpus(
+        self,
+        prepared: PreparedPlan,
+        corpus,
+        shard_docs: int | None = None,
+        tile_docs: int | None = None,
+        checkpoint_dir: str | None = None,
+        stream_stats: dict | None = None,
+        fail_after_shards: int | None = None,
+    ) -> Matches:
+        """Corpus-scale execution over a *file-backed* document set.
+
+        ``corpus`` is a ``sharded.MemmapCorpus`` (or any host [D, T]
+        int32 array): shards are file regions staged through one
+        reusable host buffer and probed by the single-launch streamed
+        megakernel — the corpus is never device-resident, so it may
+        exceed the device budget (``config.device_budget_bytes`` sizes
+        the shards). With ``checkpoint_dir`` the per-shard lanes are
+        persisted (one subdirectory per plan side) and an interrupted
+        run resumes to bit-identical merged matches. Verification runs
+        over the merged candidate buffer exactly as in ``execute``.
+        """
+        from repro.extraction import sharded as S
+
+        assert self.config.use_kernel, "execute_corpus requires use_kernel=True"
+        cfg = self.config
+        out: Matches | None = None
+        for i, side in enumerate(prepared.sides):
+            cands = S.spill_filter_compact(
+                corpus,
+                prepared.max_entity_len,
+                side.flt,
+                side.params,
+                device_budget_bytes=cfg.device_budget_bytes,
+                shard_docs=shard_docs,
+                tile_docs=tile_docs,
+                checkpoint_dir=None if checkpoint_dir is None
+                else f"{checkpoint_dir}/side{i}",
+                stream_stats=stream_stats,
+                fail_after_shards=fail_after_shards,
             )
             m = self.side_matches(cands, side)
             out = m if out is None else merge_matches(out, m, cfg.result_capacity)

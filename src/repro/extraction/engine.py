@@ -106,6 +106,14 @@ class ExtractParams:
     # have no in-kernel recurrence); False forces the post-compaction
     # jnp signature path.
     kernel_sigs: bool | None = None
+    # kernel_compact only: run whole shards through the single-launch
+    # streamed megakernel (in-kernel double-buffered DMA over the tile
+    # loop, ``ops.fused_probe_stream``) instead of one ``pallas_call``
+    # per tile. None = auto: the streaming drivers stream whenever a
+    # shard spans >= 2 tiles (a single tile has no pipeline to win).
+    # True forces the streamed launch even for one tile; False pins the
+    # per-tile launch loop (the parity baseline).
+    streamed: bool | None = None
 
     def __post_init__(self):
         if self.kernel_compact is None:
@@ -171,6 +179,15 @@ class ExtractParams:
                 f"(0, max_candidates={self.max_candidates}]: it floors the "
                 "adaptive emit-pass lane width, and lanes wider than the "
                 "select_from_tiles merge capacity are never read"
+            )
+        if self.streamed and not self.kernel_compact:
+            raise ValueError(
+                "ExtractParams(streamed=True) requires kernel_compact=True: "
+                "the streamed megakernel has no packed-bitmap output — its "
+                "only products are the compaction epilogue's per-tile "
+                "count/index lanes, so there is nothing to stream on the "
+                "legacy XLA compaction path (set use_kernel=True and leave "
+                "kernel_compact unset, or drop streamed)"
             )
         if self.kernel_sigs and not self.use_kernel:
             raise ValueError(
@@ -330,6 +347,44 @@ def candidates_from_flat(doc_tokens, flat_idx, ok, n_survive, max_len: int,
         length=jnp.where(ok, l + 1, -1).astype(jnp.int32),
         n_survive=n,
         overflow=jnp.maximum(n - max_candidates, 0).astype(jnp.int32),
+    )
+
+
+def candidates_from_flat_host(doc_tokens, flat_idx, ok, n_survive,
+                              max_len: int, max_candidates: int) -> dict:
+    """``candidates_from_flat`` with the window gather on the *host*.
+
+    The spill-streaming driver selects candidates from per-shard lanes
+    without the corpus ever being device-resident, so the final [N, L]
+    window gather must read token rows from the host corpus (typically
+    a ``np.memmap`` — fancy-indexing it touches only the ~N needed
+    rows, not the file). Field-for-field and bit-identical to the
+    device gather; only the produced [N, L] windows (N = NC, tiny) are
+    shipped to the device.
+    """
+    T = doc_tokens.shape[1]
+    L = max_len
+    flat = np.asarray(flat_idx)
+    okh = np.asarray(ok)
+    safe = np.maximum(flat, 0).astype(np.int64)
+    d = safe // (T * L)
+    rem = safe % (T * L)
+    p = rem // L
+    l = rem % L  # length-1
+    rows = np.asarray(doc_tokens[d])  # [N, T]: the only corpus touch
+    cols = p[:, None] + np.arange(L)[None, :]  # [N, L]
+    toks = rows[np.arange(rows.shape[0])[:, None], np.minimum(cols, T - 1)]
+    lens_mask = (np.arange(L)[None, :] <= l[:, None]) & (cols < T)
+    toks = np.where(lens_mask & okh[:, None], toks, PAD)
+    n = np.int32(np.asarray(n_survive))
+    return dict(
+        win_tokens=jnp.asarray(toks.astype(np.int32)),
+        win_valid=jnp.asarray(okh),
+        doc=jnp.asarray(np.where(okh, d, -1).astype(np.int32)),
+        pos=jnp.asarray(np.where(okh, p, -1).astype(np.int32)),
+        length=jnp.asarray(np.where(okh, l + 1, -1).astype(np.int32)),
+        n_survive=jnp.asarray(n),
+        overflow=jnp.asarray(np.int32(max(int(n) - max_candidates, 0))),
     )
 
 

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -126,6 +127,46 @@ def gather_from_tiles(counts, payload, capacity: int, fill=0):
     out = payload[gs, jnp.clip(within, 0, C - 1)]
     mask = ok.reshape(ok.shape + (1,) * (out.ndim - 1))
     return jnp.where(mask, out, fill)
+
+
+def save_lane_checkpoint(path: str, lane, count, keys=None) -> None:
+    """Persist one shard's lane wire unit ``(lane, count[, keys])`` to disk.
+
+    The lane triple is the complete ``select_from_tiles`` /
+    ``gather_from_tiles`` input for that shard — persisting it per shard
+    is exactly the resumable-merge state: a restarted corpus job reloads
+    finished shards' lanes and re-runs only the missing probes, and the
+    final merge is bit-identical because the merge never saw anything
+    but these lanes in the first place. Written atomically (tmp file +
+    ``os.replace``) so a kill mid-write leaves either the old file or
+    none, never a torn one.
+    """
+    arrays = {
+        "lane": np.asarray(lane, dtype=np.int32),
+        "count": np.asarray(count, dtype=np.int32),
+    }
+    if keys is not None:
+        arrays["keys"] = np.asarray(keys, dtype=np.uint32)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_lane_checkpoint(path: str):
+    """Load a shard lane persisted by ``save_lane_checkpoint``.
+
+    Returns ``(lane [1, NC] int32, count [1] int32, keys [1, NC, 2]
+    uint32 | None)`` as device arrays, ready to concatenate into the
+    ``select_from_tiles`` merge alongside freshly probed lanes.
+    """
+    with np.load(path) as z:
+        lane = jnp.asarray(z["lane"])
+        count = jnp.asarray(z["count"])
+        keys = jnp.asarray(z["keys"]) if "keys" in z.files else None
+    return lane, count, keys
 
 
 def compact_matches(hit_mask, doc, pos, length, entity, score, capacity: int) -> Matches:

@@ -40,6 +40,9 @@ count *wave* runs first and the width is traced in statically).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
 
 import numpy as np
 
@@ -52,6 +55,8 @@ from repro.core.dictionary import PAD
 from repro.extraction import engine
 from repro.extraction.results import (
     gather_from_tiles,
+    load_lane_checkpoint,
+    save_lane_checkpoint,
     select_from_tiles,
 )
 
@@ -83,9 +88,17 @@ def plan_shards(
     shard_docs: int | None = None,
     tile_docs: int | None = None,
 ) -> ShardSpec:
-    """Choose a shard geometry: default one shard per worker per wave."""
+    """Choose a shard geometry: default one shard per worker per wave.
+
+    Both the shard height and the tile height are clamped to the corpus:
+    a requested ``shard_docs`` (or ``tile_docs``) larger than
+    ``total_docs`` would otherwise pad every shard — and therefore every
+    tile — to the full requested width with PAD rows that can never
+    survive, paying kernel work proportional to the *request* instead of
+    the corpus (the 1-shard tiny-corpus edge).
+    """
     assert total_docs > 0
-    sd = shard_docs or -(-total_docs // max(n_workers, 1))
+    sd = min(shard_docs or -(-total_docs // max(n_workers, 1)), total_docs)
     td = min(tile_docs or DEFAULT_TILE_DOCS, sd)
     return ShardSpec(
         total_docs=total_docs,
@@ -93,6 +106,44 @@ def plan_shards(
         num_shards=-(-total_docs // sd),
         tile_docs=td,
     )
+
+
+def resolve_streamed(params: engine.ExtractParams, n_tiles: int) -> bool:
+    """Per-shard launch mode: single streamed launch vs per-tile loop.
+
+    ``params.streamed`` is the override (True/False); ``None`` is auto —
+    stream whenever the shard spans >= 2 tiles, since a single tile has
+    no copy-in to overlap (the per-tile launch is then one launch too).
+    """
+    if params.streamed is not None:
+        return bool(params.streamed)
+    return n_tiles >= 2
+
+
+def _streamed_layout(docs, td: int, n_tiles: int, bd: int):
+    """Chunk layout for the single-launch streamed kernel.
+
+    The per-tile loop pads each [td, T] tile *independently* to a
+    multiple of the NC-derived sub-tile height ``bd`` inside
+    ``fused_probe_compact``; to be bit-identical the streamed buffer
+    replays that layout — each tile padded to ``td_p = ceil(td/bd)*bd``
+    rows, concatenated — and the per-chunk row offsets carry the
+    *original* (unpadded) row numbering ``i*td + j*bd`` so flat indices
+    match the per-tile path exactly. Returns ``(docs [n_tiles*td_p, T],
+    offs [n_tiles*(td_p//bd)] int32 host array)``.
+    """
+    T = docs.shape[1]
+    td_p = -(-td // bd) * bd
+    if td_p != td:
+        docs = jnp.pad(
+            docs.reshape(n_tiles, td, T),
+            ((0, 0), (0, td_p - td), (0, 0)),
+            constant_values=PAD,
+        ).reshape(n_tiles * td_p, T)
+    gp = td_p // bd
+    offs = (np.arange(n_tiles)[:, None] * td
+            + np.arange(gp)[None, :] * bd).reshape(-1).astype(np.int32)
+    return docs, offs
 
 
 def stream_probe_tiles(
@@ -104,6 +155,7 @@ def stream_probe_tiles(
     row_offset=0,
     lane_width: int | None = None,
     sig_mode: str | None = None,
+    stream_stats: dict | None = None,
 ):
     """Stream a [S, T] doc shard through ``fused_probe`` tile by tile.
 
@@ -112,15 +164,31 @@ def stream_probe_tiles(
     [G, W, 2] variant key payload when ``sig_mode == "variant"``, else
     ``None``), with flat indices globalised by ``row_offset`` rows
     (``row_offset`` may be a traced scalar, e.g. a worker index inside
-    ``shard_map``). The loop is double-buffered: tile i+1's probe is
-    issued before tile i's lanes are globalised, so the probe DMA and
-    the combine arithmetic have no dependency edge between them.
-    ``lane_width`` is the adaptive emit width — the sub-tile grid stays
-    NC-derived inside ``ops.fused_probe_compact`` so counts line up
-    with a ``stream_tile_counts`` sizing pass at the same geometry.
+    ``shard_map``).
+
+    Launch mode is per-shard (``resolve_streamed``): by default a shard
+    spanning >= 2 tiles goes through the *single-launch* streamed
+    megakernel (``ops.fused_probe_stream`` — the tile loop runs inside
+    the kernel over a double-buffered DMA pipeline, and only the tiny
+    per-chunk lanes come back); otherwise — or with
+    ``params.streamed=False`` — the per-tile launch loop runs, itself
+    double-buffered at the dispatch level: tile i+1's probe is issued
+    before tile i's lanes are globalised, so the probe DMA and the
+    combine arithmetic have no dependency edge between them. Both modes
+    are bit-identical at any geometry (same sub-tile grid, same
+    epilogue). ``lane_width`` is the adaptive emit width — the sub-tile
+    grid stays NC-derived so counts line up with a
+    ``stream_tile_counts`` sizing pass at the same geometry.
+    ``stream_stats`` (mutable dict) accumulates streaming observability
+    counters: ``streamed_launches``, ``tiles_streamed``, ``dma_waits``
+    (one per in-kernel chunk).
     """
     from repro.kernels import ops as kops
-    from repro.kernels.fused_probe import SIG_MODE_NONE, SIG_MODE_VARIANT
+    from repro.kernels.fused_probe import (
+        SIG_MODE_NONE,
+        SIG_MODE_VARIANT,
+        compact_tile_height,
+    )
 
     sig_mode = SIG_MODE_NONE if sig_mode is None else sig_mode
     var = sig_mode == SIG_MODE_VARIANT
@@ -132,6 +200,24 @@ def stream_probe_tiles(
     if n_tiles * td != S:
         docs = jnp.pad(docs, ((0, n_tiles * td - S), (0, 0)),
                        constant_values=PAD)
+
+    if resolve_streamed(params, n_tiles):
+        bd = compact_tile_height(td, T, NC)
+        sdocs, offs = _streamed_layout(docs, td, n_tiles, bd)
+        row_offs = (row_offset + jnp.asarray(offs)).astype(jnp.int32)
+        counts, cands, vkeys = kops.fused_probe_stream(
+            sdocs, flt, L, NC, row_offs, sig_mode=sig_mode, bd=bd,
+            lane_width=lane_width,
+        )
+        if stream_stats is not None:
+            chunks = int(offs.shape[0])
+            stream_stats["streamed_launches"] = (
+                stream_stats.get("streamed_launches", 0) + 1)
+            stream_stats["tiles_streamed"] = (
+                stream_stats.get("tiles_streamed", 0) + chunks)
+            stream_stats["dma_waits"] = (
+                stream_stats.get("dma_waits", 0) + chunks)
+        return counts, cands, vkeys
 
     def probe(i):
         return kops.fused_probe_compact(
@@ -172,16 +258,20 @@ def stream_tile_counts(
     flt: tuple | None,
     params: engine.ExtractParams,
     tile_docs: int = DEFAULT_TILE_DOCS,
+    stream_stats: dict | None = None,
 ):
     """Count-only streaming pass: per-sub-tile survivor counts [G].
 
     The cheap sizing half of the adaptive two-pass scheme — streams the
     exact tile/sub-tile grid of ``stream_probe_tiles`` (the emit width
-    never changes the grid) but stores only the SMEM-accumulated
-    counts. ``round_lane_width(counts.max(), NC)`` then sizes the emit
-    pass so every sub-tile's lane holds all of its survivors.
+    never changes the grid) but stores only the per-tile counts.
+    ``round_lane_width(counts.max(), NC)`` then sizes the emit pass so
+    every sub-tile's lane holds all of its survivors. Follows the same
+    ``resolve_streamed`` launch-mode choice as the emit pass, so a
+    streamed run's sizing pass is one launch too.
     """
     from repro.kernels import ops as kops
+    from repro.kernels.fused_probe import compact_tile_height
 
     S, T = docs.shape
     NC = params.max_candidates
@@ -190,6 +280,22 @@ def stream_tile_counts(
     if n_tiles * td != S:
         docs = jnp.pad(docs, ((0, n_tiles * td - S), (0, 0)),
                        constant_values=PAD)
+    if resolve_streamed(params, n_tiles):
+        bd = compact_tile_height(td, T, NC)
+        sdocs, offs = _streamed_layout(docs, td, n_tiles, bd)
+        counts, _, _ = kops.fused_probe_stream(
+            sdocs, flt, max_len, NC, jnp.asarray(offs), bd=bd,
+            count_only=True,
+        )
+        if stream_stats is not None:
+            chunks = int(offs.shape[0])
+            stream_stats["streamed_launches"] = (
+                stream_stats.get("streamed_launches", 0) + 1)
+            stream_stats["tiles_streamed"] = (
+                stream_stats.get("tiles_streamed", 0) + chunks)
+            stream_stats["dma_waits"] = (
+                stream_stats.get("dma_waits", 0) + chunks)
+        return counts
     return jnp.concatenate([
         kops.fused_probe_count(docs[i * td:(i + 1) * td], flt, max_len, NC)
         for i in range(n_tiles)
@@ -290,7 +396,8 @@ def stream_filter_compact(
 def shard_lane(docs, row_offset, max_len, flt, params,
                tile_docs: int = DEFAULT_TILE_DOCS,
                lane_width: int | None = None,
-               sig_mode: str | None = None):
+               sig_mode: str | None = None,
+               stream_stats: dict | None = None):
     """Stream one doc shard and reduce it to a single candidate lane —
     the *wire unit* of every lane-shipping consumer (sharded driver
     waves, the serving probe→verify handoff).
@@ -346,7 +453,7 @@ def shard_lane(docs, row_offset, max_len, flt, params,
         lane_width = _adaptive_width(docs, max_len, flt, params, tile_docs)
     counts, cands, vkeys = stream_probe_tiles(
         docs, max_len, flt, params, tile_docs, row_offset=row_offset,
-        lane_width=lane_width, sig_mode=sig_mode,
+        lane_width=lane_width, sig_mode=sig_mode, stream_stats=stream_stats,
     )
     complete = lane_width is not None and lane_width < NC
     sel, ok, n = select_from_tiles(counts, cands, NC, complete_tiles=complete)
@@ -359,7 +466,8 @@ def shard_lane(docs, row_offset, max_len, flt, params,
 def shard_lane_steady(docs, row_offset, max_len, flt, params,
                       tile_docs: int = DEFAULT_TILE_DOCS,
                       width_hint: int | None = None,
-                      sig_mode: str | None = None):
+                      sig_mode: str | None = None,
+                      stream_stats: dict | None = None):
     """``shard_lane`` with steady-state adaptive sizing for serving.
 
     The adaptive two-pass scheme pays a count-only probe pass per call
@@ -390,7 +498,7 @@ def shard_lane_steady(docs, row_offset, max_len, flt, params,
     if not params.adaptive_lanes:
         lane, n, keys = shard_lane(
             docs, row_offset, max_len, flt, params, tile_docs,
-            sig_mode=sig_mode,
+            sig_mode=sig_mode, stream_stats=stream_stats,
         )
         return lane, n, keys, -1, "fixed"
     if isinstance(docs, jax.core.Tracer):
@@ -404,14 +512,15 @@ def shard_lane_steady(docs, row_offset, max_len, flt, params,
     if width_hint is not None and width_hint >= 0:
         W, sizing = round_lane_width(width_hint, NC, floor), "hint"
     else:
-        counts = stream_tile_counts(docs, max_len, flt, params, tile_docs)
+        counts = stream_tile_counts(docs, max_len, flt, params, tile_docs,
+                                    stream_stats=stream_stats)
         W = round_lane_width(int(np.asarray(counts).max()), NC, floor)
         sizing = "count_pass"
 
     def emit(width):
         return stream_probe_tiles(
             docs, max_len, flt, params, tile_docs, row_offset=row_offset,
-            lane_width=width, sig_mode=sig_mode,
+            lane_width=width, sig_mode=sig_mode, stream_stats=stream_stats,
         )
 
     counts, cands, vkeys = emit(W)
@@ -442,6 +551,8 @@ def sharded_filter_compact(
     axis_name: str = DEFAULT_AXIS,
     shard_docs: int | None = None,
     tile_docs: int | None = None,
+    checkpoint_dir: str | None = None,
+    stream_stats: dict | None = None,
 ) -> dict:
     """Shard-parallel streaming candidate front end.
 
@@ -456,6 +567,15 @@ def sharded_filter_compact(
     shards than devices are handled by multiple waves; short corpora
     and ragged tails are PAD-padded (PAD rows can never survive, so
     padding never perturbs the selection).
+
+    ``checkpoint_dir`` makes the run killable and resumable: every
+    finished shard's lane wire unit is persisted there (atomic npz, see
+    ``LaneCheckpointStore``) and a restarted call with the same
+    geometry/params/filter loads finished lanes instead of re-probing —
+    the merge consumes the identical lanes either way, so resumed
+    results are bit-identical. A manifest guards against resuming into
+    a different job. ``stream_stats`` accumulates streaming +
+    checkpoint observability counters.
     """
     from repro.kernels.fused_probe import SIG_MODE_VARIANT
 
@@ -475,15 +595,27 @@ def sharded_filter_compact(
     if rows_padded != D:
         padded = jnp.pad(doc_tokens, ((0, rows_padded - D), (0, 0)),
                          constant_values=PAD)
+    store = None
+    if checkpoint_dir is not None:
+        store = LaneCheckpointStore(
+            checkpoint_dir,
+            job_manifest(spec, T, max_len, params, flt, sig_mode),
+        )
 
     lanes, totals, keys = [], [], []
     if mesh is None:
         for s in range(n_waves * n_workers):
-            lane, n, vk = shard_lane(
-                padded[s * spec.shard_docs:(s + 1) * spec.shard_docs],
-                s * spec.shard_docs,
-                max_len, flt, params, spec.tile_docs, sig_mode=sig_mode,
-            )
+            if store is not None and store.has(s):
+                lane, n, vk = store.load(s)
+            else:
+                lane, n, vk = shard_lane(
+                    padded[s * spec.shard_docs:(s + 1) * spec.shard_docs],
+                    s * spec.shard_docs,
+                    max_len, flt, params, spec.tile_docs, sig_mode=sig_mode,
+                    stream_stats=stream_stats,
+                )
+                if store is not None:
+                    store.save(s, lane, n, vk if var else None)
             lanes.append(lane)
             totals.append(n)
             if var:
@@ -536,6 +668,17 @@ def sharded_filter_compact(
             return wave_cache[lane_width]
 
         for w in range(n_waves):
+            wave_shards = [w * n_workers + k for k in range(n_workers)]
+            if store is not None and all(store.has(s) for s in wave_shards):
+                # whole wave already checkpointed: load, skip the probes
+                loaded = [store.load(s) for s in wave_shards]
+                lanes.append(jnp.concatenate([x[0] for x in loaded], axis=0))
+                totals.append(jnp.concatenate([x[1] for x in loaded]))
+                if var:
+                    keys.append(
+                        jnp.concatenate([x[2] for x in loaded], axis=0)
+                    )
+                continue
             block = padded[
                 w * n_workers * spec.shard_docs:(w + 1) * n_workers * spec.shard_docs
             ]
@@ -550,15 +693,344 @@ def sharded_filter_compact(
                     params.lane_width or MIN_LANE_WIDTH,
                 )
             out = wave_fn_for(lane_w)(block, offs)
-            lanes.append(out[0].reshape(n_workers, NC))
-            totals.append(out[1].reshape(n_workers))
+            wave_lanes = out[0].reshape(n_workers, NC)
+            wave_totals = out[1].reshape(n_workers)
+            wave_keys = out[2].reshape(n_workers, NC, 2) if var else None
+            if store is not None:
+                for k, s in enumerate(wave_shards):
+                    store.save(
+                        s, wave_lanes[k:k + 1], wave_totals[k:k + 1],
+                        wave_keys[k:k + 1] if var else None,
+                    )
+            lanes.append(wave_lanes)
+            totals.append(wave_totals)
             if var:
-                keys.append(out[2].reshape(n_workers, NC, 2))
+                keys.append(wave_keys)
 
+    if store is not None and stream_stats is not None:
+        store.flush_stats(stream_stats)
     counts = jnp.concatenate(totals)
     cands = jnp.concatenate(lanes, axis=0)
     sel, ok, n = select_from_tiles(counts, cands, NC)
     out = engine.candidates_from_flat(doc_tokens, sel, ok, n, max_len, NC)
+    if var:
+        out = engine.attach_variant_keys(
+            out, gather_from_tiles(counts, jnp.concatenate(keys, axis=0), NC)
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Corpus spill streaming: shards as *file regions*, resumable merges
+# --------------------------------------------------------------------------
+
+#: default device-resident budget for spill streaming: how many bytes of
+#: staged documents one shard may occupy on device (see
+#: ``shard_docs_for_budget`` for the headroom rule).
+DEFAULT_DEVICE_BUDGET_BYTES = 256 << 20
+
+
+def filter_fingerprint(flt: tuple | None) -> str:
+    """Content hash of an ISH filter triple (checkpoint-manifest guard).
+
+    Resuming a corpus job against a *different* filter would merge
+    lanes probed under incompatible survival sets — the sha256 of the
+    bit array (plus the probe parameters) makes that a manifest
+    mismatch instead of silent corruption.
+    """
+    if flt is None:
+        return "none"
+    bits, num_bits, num_hashes = flt
+    h = hashlib.sha256(np.asarray(bits).tobytes())
+    h.update(f":{num_bits}:{num_hashes}".encode())
+    return h.hexdigest()
+
+
+def job_manifest(spec: ShardSpec, seq_len: int, max_len: int,
+                 params: engine.ExtractParams, flt: tuple | None,
+                 sig_mode: str) -> dict:
+    """Everything that must match for two runs to share lane checkpoints.
+
+    Geometry (shard/tile heights fix the lane layout and flat-index
+    numbering), extraction params (capacity, scheme, lane sizing...) and
+    the filter fingerprint (survival sets). JSON-round-tripped so the
+    stored and compared forms are identical.
+    """
+    m = {
+        "format": 1,
+        "total_docs": spec.total_docs,
+        "shard_docs": spec.shard_docs,
+        "num_shards": spec.num_shards,
+        "tile_docs": spec.tile_docs,
+        "seq_len": seq_len,
+        "max_len": max_len,
+        "sig_mode": sig_mode,
+        "filter": filter_fingerprint(flt),
+        "params": dataclasses.asdict(params),
+    }
+    return json.loads(json.dumps(m))
+
+
+class LaneCheckpointStore:
+    """Per-shard lane checkpoints + job manifest under one directory.
+
+    Layout: ``manifest.json`` (the ``job_manifest`` of the run) plus one
+    ``shard_NNNNNN.npz`` per finished shard (atomic writes — a kill
+    leaves whole files or none). A second run with an equal manifest
+    resumes: ``has``/``load`` skip finished probes; a run with a
+    *different* manifest raises instead of merging foreign lanes
+    (``reset=True`` wipes the stale checkpoints and starts over).
+    """
+
+    def __init__(self, root: str, manifest: dict, reset: bool = False):
+        self.root = root
+        self.writes = 0
+        self.hits = 0
+        os.makedirs(root, exist_ok=True)
+        mpath = os.path.join(root, "manifest.json")
+        existing = None
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                existing = json.load(f)
+        if existing is not None and not reset:
+            if existing != manifest:
+                diff = sorted(
+                    k for k in set(existing) | set(manifest)
+                    if existing.get(k) != manifest.get(k)
+                )
+                raise ValueError(
+                    f"checkpoint manifest mismatch in {root!r} (differing "
+                    f"keys: {diff}): these lane checkpoints belong to a "
+                    "different corpus job (other geometry, params, or "
+                    "filter) and merging them would corrupt the selection; "
+                    "point checkpoint_dir at a fresh directory, or pass "
+                    "reset=True to discard the stale checkpoints"
+                )
+            return  # same job: resume against the existing checkpoints
+        if existing is not None:
+            for name in os.listdir(root):
+                if name.startswith("shard_") and name.endswith(".npz"):
+                    os.remove(os.path.join(root, name))
+        tmp = f"{mpath}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, mpath)
+
+    def _path(self, shard: int) -> str:
+        return os.path.join(self.root, f"shard_{shard:06d}.npz")
+
+    def has(self, shard: int) -> bool:
+        return os.path.exists(self._path(shard))
+
+    def load(self, shard: int):
+        self.hits += 1
+        return load_lane_checkpoint(self._path(shard))
+
+    def save(self, shard: int, lane, count, keys=None) -> None:
+        save_lane_checkpoint(self._path(shard), lane, count, keys)
+        self.writes += 1
+
+    def flush_stats(self, stream_stats: dict) -> None:
+        """Fold this store's counters into a ``stream_stats`` dict."""
+        stream_stats["checkpoint_writes"] = (
+            stream_stats.get("checkpoint_writes", 0) + self.writes)
+        stream_stats["checkpoint_hits"] = (
+            stream_stats.get("checkpoint_hits", 0) + self.hits)
+
+
+@dataclasses.dataclass
+class MemmapCorpus:
+    """A corpus as a *file*, not an array: flat int32 bin + JSON header.
+
+    The spill-streaming driver treats a shard as a region of this file:
+    only one staged shard is ever host/device resident. ``tokens`` is
+    usually an ``np.memmap`` (``open``), but any [D, T] int32 array
+    duck-types, so the driver also accepts in-memory corpora untouched.
+    """
+
+    tokens: np.ndarray  # [D, T] int32 (np.memmap after ``open``)
+
+    @property
+    def rows(self) -> int:
+        return int(self.tokens.shape[0])
+
+    @property
+    def seq_len(self) -> int:
+        return int(self.tokens.shape[1])
+
+    @classmethod
+    def write(cls, path_base: str, docs) -> "MemmapCorpus":
+        """Persist ``docs`` [D, T] as ``<base>.bin`` + ``<base>.json``."""
+        arr = np.ascontiguousarray(np.asarray(docs, dtype=np.int32))
+        with open(path_base + ".bin", "wb") as f:
+            f.write(arr.tobytes())
+        with open(path_base + ".json", "w") as f:
+            json.dump({"format": 1, "rows": int(arr.shape[0]),
+                       "seq_len": int(arr.shape[1]), "dtype": "int32"}, f)
+        return cls.open(path_base)
+
+    @classmethod
+    def open(cls, path_base: str) -> "MemmapCorpus":
+        with open(path_base + ".json") as f:
+            hdr = json.load(f)
+        assert hdr.get("dtype", "int32") == "int32", hdr
+        tokens = np.memmap(path_base + ".bin", dtype=np.int32, mode="r",
+                           shape=(hdr["rows"], hdr["seq_len"]))
+        return cls(tokens=tokens)
+
+
+class HostSpillStreamer:
+    """Host->device spill feed: one reusable staging buffer per job.
+
+    Stages shard-sized file regions through a single preallocated
+    [shard_docs, T] host buffer (the pinned-host staging slot: on TPU
+    this is the page-locked array ``device_put`` DMAs from; in
+    interpret mode a plain ndarray plays the role) — no per-shard host
+    allocation, ragged tails PAD-padded in place. ``bytes_staged``
+    accumulates the host->device spill traffic for the corpus bench.
+    """
+
+    def __init__(self, corpus: MemmapCorpus, shard_docs: int):
+        self.corpus = corpus
+        self.shard_docs = shard_docs
+        self._buf = np.empty((shard_docs, corpus.seq_len), dtype=np.int32)
+        self.bytes_staged = 0
+
+    def stage(self, shard: int):
+        """Copy shard ``shard``'s file region in; return the device array."""
+        start = shard * self.shard_docs
+        rows = min(self.shard_docs, self.corpus.rows - start)
+        assert rows > 0, f"shard {shard} starts past the corpus"
+        self._buf[:rows] = self.corpus.tokens[start:start + rows]
+        if rows < self.shard_docs:
+            self._buf[rows:] = PAD
+        self.bytes_staged += self._buf.nbytes
+        return jnp.asarray(self._buf)
+
+
+def shard_docs_for_budget(total_docs: int, seq_len: int, budget_bytes: int,
+                          tile_docs: int | None = None) -> int:
+    """Largest shard height whose working set fits ``budget_bytes``.
+
+    The spill-buffer sizing rule: per-shard residency is dominated by
+    the staged doc region (``rows * T * 4`` bytes) and the budget must
+    hold *two* of them — the shard being probed plus the next one's
+    host staging copy in flight (the host-level double buffer mirroring
+    the in-kernel one). Lane outputs are O(G * W) ints and ride in the
+    slack. Rounded down to whole tiles so shard geometry stays
+    tile-aligned, floored at one tile (a budget below one tile streams
+    tile-sized shards rather than failing).
+    """
+    td = tile_docs or DEFAULT_TILE_DOCS
+    rows = int(budget_bytes) // (seq_len * 4 * 2)
+    rows = max(td, (rows // td) * td)
+    return max(1, min(rows, total_docs))
+
+
+def spill_filter_compact(
+    corpus,
+    max_len: int,
+    flt: tuple | None,
+    params: engine.ExtractParams,
+    device_budget_bytes: int | None = None,
+    shard_docs: int | None = None,
+    tile_docs: int | None = None,
+    checkpoint_dir: str | None = None,
+    reset_checkpoints: bool = False,
+    stream_stats: dict | None = None,
+    fail_after_shards: int | None = None,
+) -> dict:
+    """Corpus-scale candidate front end: shards as file regions.
+
+    Streams a corpus that need not (and typically cannot) be
+    device-resident: each shard is a region of ``corpus`` (a
+    ``MemmapCorpus`` or any host [D, T] int32 array) staged through one
+    reusable host buffer (``HostSpillStreamer``), probed by the
+    streamed megakernel (``shard_lane`` -> single-launch DMA pipeline),
+    and reduced to its lane wire unit; only lanes and one staged shard
+    ever exist on device. Shard height comes from ``shard_docs`` or the
+    ``device_budget_bytes`` sizing rule (``shard_docs_for_budget``;
+    default ``DEFAULT_DEVICE_BUDGET_BYTES``).
+
+    With ``checkpoint_dir`` every finished shard's lane is persisted
+    (``LaneCheckpointStore``) and an interrupted run resumes from the
+    last finished shard to *bit-identical* merged results — the final
+    ``select_from_tiles`` merge consumes the same lanes either way. The
+    final [N, L] window gather reads straight from the host corpus
+    (``engine.candidates_from_flat_host``), so the merged output is
+    field-for-field identical to ``sharded_filter_compact`` on a
+    resident copy.
+
+    ``fail_after_shards`` is the kill-switch test hook: raise after
+    probing that many *fresh* shards this run (checkpoint loads don't
+    count), simulating an interrupted job.
+    """
+    from repro.kernels.fused_probe import SIG_MODE_VARIANT
+
+    if not isinstance(corpus, MemmapCorpus):
+        corpus = MemmapCorpus(tokens=np.asarray(corpus))
+    D, T = corpus.rows, corpus.seq_len
+    engine.check_flat_index_space(D, T, max_len)
+    if max_len > 32 or not params.kernel_compact:
+        raise ValueError(
+            "spill_filter_compact requires the in-kernel compaction "
+            "epilogue (use_kernel=True with kernel_compact on, and "
+            "max_len <= 32): without per-shard lanes there is nothing to "
+            "spill-merge — run engine.fused_filter_compact on a resident "
+            "corpus instead"
+        )
+    if shard_docs is None:
+        budget = (DEFAULT_DEVICE_BUDGET_BYTES
+                  if device_budget_bytes is None else device_budget_bytes)
+        shard_docs = shard_docs_for_budget(D, T, budget, tile_docs)
+    spec = plan_shards(D, 1, shard_docs, tile_docs)
+    sig_mode = _stream_sig_mode(params, D, T, max_len)
+    var = sig_mode == SIG_MODE_VARIANT
+    NC = params.max_candidates
+    store = None
+    if checkpoint_dir is not None:
+        store = LaneCheckpointStore(
+            checkpoint_dir,
+            job_manifest(spec, T, max_len, params, flt, sig_mode),
+            reset=reset_checkpoints,
+        )
+    streamer = HostSpillStreamer(corpus, spec.shard_docs)
+
+    lanes, totals, keys = [], [], []
+    fresh = 0
+    for s in range(spec.num_shards):
+        if store is not None and store.has(s):
+            lane, n, vk = store.load(s)
+        else:
+            if fail_after_shards is not None and fresh >= fail_after_shards:
+                raise RuntimeError(
+                    f"spill_filter_compact: simulated interruption after "
+                    f"{fresh} fresh shards (fail_after_shards test hook)"
+                )
+            lane, n, vk = shard_lane(
+                streamer.stage(s), s * spec.shard_docs, max_len, flt,
+                params, spec.tile_docs, sig_mode=sig_mode,
+                stream_stats=stream_stats,
+            )
+            if store is not None:
+                store.save(s, lane, n, vk if var else None)
+            fresh += 1
+        lanes.append(lane)
+        totals.append(n)
+        if var:
+            keys.append(vk)
+
+    if stream_stats is not None:
+        stream_stats["spill_bytes_staged"] = (
+            stream_stats.get("spill_bytes_staged", 0) + streamer.bytes_staged)
+        if store is not None:
+            store.flush_stats(stream_stats)
+    counts = jnp.concatenate(totals)
+    cands = jnp.concatenate(lanes, axis=0)
+    sel, ok, n = select_from_tiles(counts, cands, NC)
+    out = engine.candidates_from_flat_host(
+        corpus.tokens, sel, ok, n, max_len, NC
+    )
     if var:
         out = engine.attach_variant_keys(
             out, gather_from_tiles(counts, jnp.concatenate(keys, axis=0), NC)

@@ -64,8 +64,8 @@ straight from the [D, T] token array — ``window_base`` is never
 materialised (see ``extraction.engine.fused_filter_compact``).
 
 With ``candidates > 0`` the kernel also runs a *compaction epilogue*:
-the per-tile survivor count is accumulated in an SMEM scratch cell as
-the length recurrence runs, and the tile's first ``candidates``
+the per-tile survivor count is accumulated in registers as the length
+recurrence runs, and the tile's first ``candidates``
 surviving (doc, pos, len) triples are rank-compacted (prefix-sum over
 the register-resident bit expansion) into an ascending [G, candidates]
 flat-index lane. Candidate selection then reads only these lanes — the
@@ -76,7 +76,7 @@ candidate-generation traffic, not verification, dominates at scale.
 The lane width is *decoupled* from the candidate capacity: a one-pass
 emit must keep ``candidates = NC`` wide lanes for bit parity (the
 global first-NC could all land in one tile), but an **adaptive
-two-pass** run first streams a ``count_only=True`` pass (per-tile SMEM
+two-pass** run first streams a ``count_only=True`` pass (per-tile
 counts, no lane store), sizes the emit pass's lane width to the
 measured per-tile survivor maximum (``round_lane_width``), and re-runs
 with ``candidates = W << NC`` — every tile's lane then holds *all* of
@@ -90,6 +90,19 @@ never straddle a tile edge; the Bloom bitmap block is grid-invariant
 (loaded once, reused across steps). Validated in interpret mode on CPU;
 on TPU the bitmap gather uses dynamic VMEM indexing (minor-dim gather,
 Mosaic v4+).
+
+**Streaming mode** (``fused_probe_stream_pallas``): the per-tile grid
+itself becomes an in-kernel loop. The doc array stays in HBM
+(``memory_space=ANY``) and the kernel double-buffers [bd, T] chunks
+through a 2-slot VMEM buffer with ``make_async_copy`` — the DMA for
+chunk g+1 is started before chunk g's recurrence runs, so one launch
+consumes an entire shard with copy-in overlapped against compute. The
+recurrence and lane epilogue are the *same functions* the grid kernel
+runs (``_probe_recurrence`` / ``_emit_lane``), so streamed outputs are
+bit-identical to the per-tile launch loop; only the packed bitmap and
+dense signature tensors are dropped (they are exactly the per-launch
+HBM round trips streaming exists to elide — see ``hbm_bytes_fused``
+with ``streamed=True``).
 """
 from __future__ import annotations
 
@@ -100,6 +113,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashing
 from repro.core.filter import _BLOOM_SEED_BASE  # single source of truth
@@ -201,11 +215,10 @@ def empty_band_sigs(bands: int, rows: int) -> np.ndarray:
     return np.array(out, dtype=np.uint32)
 
 
-def _kernel(
-    doc_ref,
-    bits_ref,
-    packed_ref,
-    *rest_refs,
+def _probe_recurrence(
+    docs,
+    bits,
+    *,
     num_bits: int,
     num_hashes: int,
     max_len: int,
@@ -213,25 +226,28 @@ def _kernel(
     rows: int,
     use_filter: bool,
     sig_mode: str,
-    dense_sigs: bool,
-    count_tiles: bool,
-    cand_cap: int,
+    sig_store=None,
 ):
-    # ref layout after packed_ref:
-    #   [sig_ref] [count_ref] [cand_ref [vkey_ref]] [cnt_scr]
-    refs = list(rest_refs)
-    sig_ref = refs.pop(0) if dense_sigs else None
-    count_ref = refs.pop(0) if count_tiles else None
-    cand_ref = refs.pop(0) if cand_cap else None
-    var = sig_mode == SIG_MODE_VARIANT
-    vkey_ref = refs.pop(0) if (var and cand_cap) else None
-    cnt_scr = refs.pop(0) if count_tiles else None
-    docs = doc_ref[...]  # [Bd, T] int32
+    """The filter -> signature recurrence over one [Bd, T] doc tile.
+
+    Pure function of the tile's token block (plus the VMEM-resident
+    Bloom words): runs the validity/survival/signature recurrences
+    documented in the module docstring and returns ``(pack, count,
+    k1_flat, k2_flat)`` — the packed survival bitmap, the tile's true
+    survivor total, and (variant mode) the [Bd*T*L] flattened finalised
+    key streams (``None`` otherwise). ``sig_store(l, values)`` is the
+    dense-emission hook: called once per window length with the band
+    sigs (lsh) or key pair (variant) so the grid-mode kernel can store
+    them without the streaming kernel paying for a dense tensor.
+
+    Shared verbatim by the per-tile grid kernel (``_kernel``) and the
+    in-kernel DMA streaming kernel (``_stream_kernel``) so the two are
+    bit-identical by construction.
+    """
     Bd, T = docs.shape
     real = docs != 0  # PAD == 0
 
     if use_filter:
-        bits = bits_ref[...]  # [num_bits // 32] uint32 (VMEM-resident)
         hit = jnp.ones(docs.shape, bool)
         for k in range(num_hashes):
             h = _hash(docs, _BLOOM_SEED_BASE + k)
@@ -243,6 +259,7 @@ def _kernel(
         hit = real  # survival degenerates to validity
 
     lsh = sig_mode == SIG_MODE_LSH
+    var = sig_mode == SIG_MODE_VARIANT
     if lsh:
         # per-token row hashes, invalid -> MAX so they never win a min
         hv = [
@@ -265,32 +282,33 @@ def _kernel(
     vand = jnp.ones(docs.shape, bool)
     vor = jnp.zeros(docs.shape, bool)
     pack = jnp.zeros(docs.shape, dtype=jnp.uint32)
+    count = jnp.int32(0)
     sh_real, sh_hit = real, hit
     sh_hv = list(hv) if lsh else []
     sh_tok = docs if var else None
     zero_row = jnp.zeros((Bd, 1), bool)
     max_row = jnp.full((Bd, 1), _MAX_U32, dtype=jnp.uint32)
     pad_row = jnp.zeros((Bd, 1), dtype=docs.dtype)
-    if count_tiles:
-        cnt_scr[0] = jnp.int32(0)  # scratch persists across grid steps
     for l in range(max_len):
         vand = vand & sh_real
         vor = vor | sh_hit
         surv = vand & vor
         pack = pack | (surv.astype(jnp.uint32) << jnp.uint32(l))
-        if count_tiles:
-            # per-tile survivor count, accumulated in scratch as the
-            # length recurrence runs (feeds the compaction epilogue)
-            cnt_scr[0] += surv.sum().astype(jnp.int32)
+        # per-tile survivor count, accumulated as the length recurrence
+        # runs (feeds the compaction epilogue / sizing pass)
+        count = count + surv.sum().astype(jnp.int32)
         if lsh:
             for i in range(bands * rows):
                 rmin[i] = jnp.minimum(rmin[i], sh_hv[i])
+            bands_l = []
             for b in range(bands):
                 band = rmin[b * rows]
                 for r in range(1, rows):
                     band = _combine(band, rmin[b * rows + r])
                 band = _combine(band, jnp.full_like(band, jnp.uint32(b + 1)))
-                sig_ref[:, :, l, b] = band
+                bands_l.append(band)
+            if sig_store is not None:
+                sig_store(l, bands_l)
         if var:
             # duplicate mask: tok[t+l] repeats inside [t, t+l] iff the
             # current shifted stream equals any earlier shifted stream
@@ -312,9 +330,8 @@ def _kernel(
             k2 = _mix(vs2 ^ (vx2 * jnp.uint32(_C1)) ^ fin)
             vkeys1.append(k1)
             vkeys2.append(k2)
-            if dense_sigs:
-                sig_ref[:, :, l, 0] = k1
-                sig_ref[:, :, l, 1] = k2
+            if sig_store is not None:
+                sig_store(l, [k1, k2])
             prev_toks.append(sh_tok)
         if l + 1 < max_len:
             sh_real = jnp.concatenate([sh_real[:, 1:], zero_row], axis=1)
@@ -325,50 +342,116 @@ def _kernel(
                 ]
             if var:
                 sh_tok = jnp.concatenate([sh_tok[:, 1:], pad_row], axis=1)
+    k1_flat = jnp.stack(vkeys1, axis=-1).reshape(-1) if var else None
+    k2_flat = jnp.stack(vkeys2, axis=-1).reshape(-1) if var else None
+    return pack, count, k1_flat, k2_flat
+
+
+def _emit_lane(pack, count, cand_cap: int, max_len: int):
+    """Compaction epilogue selection: first ``cand_cap`` survivors.
+
+    Two-stage (word -> bit) selection, sort- and scatter-free ("the
+    k-th survivor lives where the prefix sum first reaches k"):
+    survivor density is low, so first pick the <= cand_cap tokens with
+    any surviving length (the first cand_cap set bits always live
+    inside the first cand_cap nonzero words), then rank only their
+    unpacked bits. Returns ``(flat, ok)``: the tile-local flat
+    (row*T + pos)*L + (len-1) indices of the tile's first ``cand_cap``
+    survivors and their validity lane — everything VMEM-resident, so
+    the [D, T] bitmap is never re-read from HBM to compact it.
+    """
+    Bd, T = pack.shape
+    L = max_len
+    lane = jax.lax.iota(jnp.int32, cand_cap)  # iota: no captured consts
+    nz = (pack != 0).reshape(-1)  # [Bd*T]
+    cw = jnp.cumsum(nz.astype(jnp.int32))
+    wk = jnp.searchsorted(cw, lane + 1, side="left").astype(jnp.int32)
+    wok = lane < jnp.minimum(cw[-1], cand_cap)
+    words = pack.reshape(-1)[jnp.minimum(wk, Bd * T - 1)]
+    words = words * wok.astype(jnp.uint32)  # [cand_cap] u32
+    sub = ((words[:, None] >> jax.lax.iota(jnp.uint32, L))
+           & jnp.uint32(1)) != 0  # [cand_cap, L]
+    cb = jnp.cumsum(sub.reshape(-1).astype(jnp.int32))
+    k = jnp.searchsorted(cb, lane + 1, side="left").astype(jnp.int32)
+    ok = lane < jnp.minimum(count, cand_cap)
+    flat = jnp.minimum(wk[jnp.minimum(k // L, cand_cap - 1)],
+                       Bd * T - 1) * L + k % L
+    return flat, ok
+
+
+def _gather_lane_keys(k1_flat, k2_flat, flat, ok, span: int):
+    """Gather both finalised variant keys at the selected flat indices.
+
+    The dense [Bd, T, L, 2] tensor never leaves registers/VMEM, only
+    the [cand_cap, 2] payload is stored. Padded slots carry 0, the
+    set_hash of the empty window (bit-parity with window_variant_key
+    on all-PAD windows).
+    """
+    sel = jnp.clip(flat, 0, span - 1)
+    return (jnp.where(ok, k1_flat[sel], jnp.uint32(0)),
+            jnp.where(ok, k2_flat[sel], jnp.uint32(0)))
+
+
+def _kernel(
+    doc_ref,
+    bits_ref,
+    packed_ref,
+    *rest_refs,
+    num_bits: int,
+    num_hashes: int,
+    max_len: int,
+    bands: int,
+    rows: int,
+    use_filter: bool,
+    sig_mode: str,
+    dense_sigs: bool,
+    count_tiles: bool,
+    cand_cap: int,
+):
+    # ref layout after packed_ref:
+    #   [sig_ref] [count_ref] [cand_ref [vkey_ref]]
+    refs = list(rest_refs)
+    sig_ref = refs.pop(0) if dense_sigs else None
+    count_ref = refs.pop(0) if count_tiles else None
+    cand_ref = refs.pop(0) if cand_cap else None
+    var = sig_mode == SIG_MODE_VARIANT
+    vkey_ref = refs.pop(0) if (var and cand_cap) else None
+    docs = doc_ref[...]  # [Bd, T] int32
+    Bd, T = docs.shape
+
+    def sig_store(l, vals):
+        for i, v in enumerate(vals):
+            sig_ref[:, :, l, i] = v
+
+    pack, count, k1_flat, k2_flat = _probe_recurrence(
+        docs,
+        bits_ref[...] if use_filter else None,
+        num_bits=num_bits,
+        num_hashes=num_hashes,
+        max_len=max_len,
+        bands=bands,
+        rows=rows,
+        use_filter=use_filter,
+        sig_mode=sig_mode,
+        sig_store=sig_store if dense_sigs else None,
+    )
     packed_ref[...] = pack
     if count_tiles:
-        count_ref[0] = cnt_scr[0]
+        count_ref[0] = count
     if cand_cap:
         # compaction epilogue: emit the tile's surviving (doc, pos, len)
-        # triples as ascending *global* flat indices, packed to the front
-        # of a fixed [cand_cap] lane — everything VMEM-resident, so the
-        # [D, T] bitmap is never re-read from HBM to compact it.
+        # triples as ascending *global* flat indices, packed to the
+        # front of a fixed [cand_cap] lane.
         L = max_len
-        lane = jax.lax.iota(jnp.int32, cand_cap)  # iota: no captured consts
-        # two-stage (word -> bit) selection, sort- and scatter-free
-        # ("the k-th survivor lives where the prefix sum first reaches
-        # k"): survivor density is low, so first pick the <= cand_cap
-        # tokens with any surviving length (the first cand_cap set bits
-        # always live inside the first cand_cap nonzero words), then
-        # rank only their unpacked bits.
-        nz = (pack != 0).reshape(-1)  # [Bd*T]
-        cw = jnp.cumsum(nz.astype(jnp.int32))
-        wk = jnp.searchsorted(cw, lane + 1, side="left").astype(jnp.int32)
-        wok = lane < jnp.minimum(cw[-1], cand_cap)
-        words = pack.reshape(-1)[jnp.minimum(wk, Bd * T - 1)]
-        words = words * wok.astype(jnp.uint32)  # [cand_cap] u32
-        sub = ((words[:, None] >> jax.lax.iota(jnp.uint32, L))
-               & jnp.uint32(1)) != 0  # [cand_cap, L]
-        cb = jnp.cumsum(sub.reshape(-1).astype(jnp.int32))
-        k = jnp.searchsorted(cb, lane + 1, side="left").astype(jnp.int32)
-        ok = lane < jnp.minimum(cnt_scr[0], cand_cap)
-        flat = jnp.minimum(wk[jnp.minimum(k // L, cand_cap - 1)],
-                           Bd * T - 1) * L + k % L
+        flat, ok = _emit_lane(pack, count, cand_cap, L)
         cand_ref[0, :] = jnp.where(
             ok, pl.program_id(0) * Bd * T * L + flat, -1
         )
         if var:
-            # variant keys ride the lane: gather both finalised keys at
-            # the selected local flat indices — the dense [Bd, T, L, 2]
-            # tensor never leaves registers/VMEM, only the [cand_cap, 2]
-            # payload is stored. Padded slots carry 0, the set_hash of
-            # the empty window (bit-parity with window_variant_key on
-            # all-PAD windows).
-            sel = jnp.clip(flat, 0, Bd * T * L - 1)
-            k1_flat = jnp.stack(vkeys1, axis=-1).reshape(-1)  # [Bd*T*L]
-            k2_flat = jnp.stack(vkeys2, axis=-1).reshape(-1)
-            vkey_ref[0, :, 0] = jnp.where(ok, k1_flat[sel], jnp.uint32(0))
-            vkey_ref[0, :, 1] = jnp.where(ok, k2_flat[sel], jnp.uint32(0))
+            # variant keys ride the lane, gathered at the selection
+            k1, k2 = _gather_lane_keys(k1_flat, k2_flat, flat, ok, Bd * T * L)
+            vkey_ref[0, :, 0] = k1
+            vkey_ref[0, :, 1] = k2
 
 
 @functools.partial(
@@ -461,13 +544,9 @@ def fused_probe_pallas(
         out_specs.append(
             pl.BlockSpec((bd, T, max_len, S), lambda i: (i, 0, 0, 0))
         )
-    scratch_shapes = []
     if count_tiles:
         out_shape.append(jax.ShapeDtypeStruct((G,), jnp.int32))
         out_specs.append(pl.BlockSpec((1,), lambda i: (i,)))
-        from jax.experimental.pallas import tpu as pltpu
-
-        scratch_shapes = [pltpu.SMEM((1,), jnp.int32)]
     if cand_cap:
         out_shape.append(jax.ShapeDtypeStruct((G, cand_cap), jnp.int32))
         out_specs.append(pl.BlockSpec((1, cand_cap), lambda i: (i, 0)))
@@ -500,7 +579,6 @@ def fused_probe_pallas(
         ],
         out_specs=tuple(out_specs),
         out_shape=tuple(out_shape),
-        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(doc_tokens, bits)
     outs = list(outs)
@@ -513,16 +591,239 @@ def fused_probe_pallas(
 
 
 # --------------------------------------------------------------------------
+# Streaming mode: in-kernel double-buffered DMA over the tile loop
+# --------------------------------------------------------------------------
+
+
+def _stream_kernel(
+    offs_ref,  # [G] i32 SMEM: absolute doc-row offset of each chunk
+    doc_ref,  # [G*bd, T] i32, memory_space=ANY (stays in HBM)
+    bits_ref,  # [num_bits // 32] u32, VMEM-resident
+    counts_ref,  # [G] i32 out
+    *rest_refs,  # [cand_ref [vkey_ref]]
+    num_bits: int,
+    num_hashes: int,
+    max_len: int,
+    bands: int,
+    rows: int,
+    use_filter: bool,
+    sig_mode: str,
+    chunks: int,
+    bd: int,
+    cand_cap: int,
+):
+    """One launch consumes an entire shard: the tile loop runs *inside*
+    the kernel as a ``fori_loop`` over ``chunks`` [bd, T] tiles, each
+    DMA'd HBM->VMEM into a 2-slot buffer. The copy-in of tile g+1 is
+    issued before tile g's recurrence runs (double buffering), so on
+    real hardware the DMA engine overlaps the VPU work; per-tile
+    lane/count/key outputs come from the same ``_emit_lane`` epilogue
+    the grid-mode kernel uses, with the absolute row offset read from
+    SMEM instead of ``pl.program_id`` — flat indices are bit-identical
+    to the per-tile launch loop at any geometry.
+    """
+    var = sig_mode == SIG_MODE_VARIANT
+    refs = list(rest_refs)
+    cand_ref = refs.pop(0) if cand_cap else None
+    vkey_ref = refs.pop(0) if (var and cand_cap) else None
+    T = doc_ref.shape[1]
+    L = max_len
+    bits = bits_ref[...] if use_filter else None
+
+    def body(buf, sem):
+        def dma(slot, g):
+            return pltpu.make_async_copy(
+                doc_ref.at[pl.ds(g * bd, bd), :], buf.at[slot], sem.at[slot]
+            )
+
+        dma(0, 0).start()  # warm-up: first tile in flight before the loop
+
+        def chunk(g, _):
+            slot = jax.lax.rem(g, 2)
+
+            @pl.when(g + 1 < chunks)
+            def _prefetch():
+                dma(jax.lax.rem(g + 1, 2), g + 1).start()
+
+            dma(slot, g).wait()
+            docs = buf[slot]  # [bd, T]
+            pack, cnt, k1_flat, k2_flat = _probe_recurrence(
+                docs,
+                bits,
+                num_bits=num_bits,
+                num_hashes=num_hashes,
+                max_len=max_len,
+                bands=bands,
+                rows=rows,
+                use_filter=use_filter,
+                sig_mode=sig_mode,
+            )
+            counts_ref[pl.ds(g, 1)] = cnt[None]
+            if cand_cap:
+                flat, ok = _emit_lane(pack, cnt, cand_cap, L)
+                off = offs_ref[g]
+                cand_ref[pl.ds(g, 1), :] = jnp.where(
+                    ok, off * T * L + flat, -1
+                )[None]
+                if var:
+                    k1, k2 = _gather_lane_keys(
+                        k1_flat, k2_flat, flat, ok, bd * T * L
+                    )
+                    vkey_ref[pl.ds(g, 1), :, :] = jnp.stack(
+                        [k1, k2], axis=-1
+                    )[None]
+            return 0
+
+        jax.lax.fori_loop(0, chunks, chunk, 0)
+
+    pl.run_scoped(
+        body,
+        buf=pltpu.VMEM((2, bd, T), jnp.int32),
+        sem=pltpu.SemaphoreType.DMA((2,)),
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "num_bits",
+        "num_hashes",
+        "max_len",
+        "sig_mode",
+        "bands",
+        "rows",
+        "use_filter",
+        "bd",
+        "candidates",
+        "count_only",
+        "interpret",
+    ),
+)
+def fused_probe_stream_pallas(
+    doc_tokens,  # [G*bd, T] i32, pre-padded so every chunk is full height
+    bits,  # [num_bits // 32] uint32 (ignored when use_filter=False)
+    row_offs,  # [G] i32: absolute doc-row offset of each chunk's tile
+    num_bits: int,
+    num_hashes: int,
+    max_len: int,
+    sig_mode: str = SIG_MODE_NONE,
+    bands: int = 4,
+    rows: int = 2,
+    use_filter: bool = True,
+    bd: int = DEFAULT_BD,
+    candidates: int = 0,
+    count_only: bool = False,
+    interpret: bool = True,
+):
+    """Streamed megakernel: one launch, ``G`` double-buffered DMA tiles.
+
+    The per-tile grid of ``fused_probe_pallas`` becomes an in-kernel
+    loop: ``doc_tokens`` stays in HBM (``memory_space=ANY``) and each
+    [bd, T] chunk is async-copied into a 2-slot VMEM buffer while the
+    previous chunk's recurrence runs. Returns ``(counts, cands, vkeys)``
+    with the same per-tile wire unit as the grid kernel — ``counts``
+    [G] int32 true survivor totals, ``cands`` [G, candidates] int32
+    ascending *global* flat indices (``row_offs[g]`` replaces the grid
+    kernel's ``program_id * bd`` row base, so callers control the
+    numbering — shard row offsets and uneven upstream tile heights fold
+    into it), ``vkeys`` [G, candidates, 2] uint32 key lanes (variant
+    mode). ``count_only=True`` emits only ``counts`` (the adaptive
+    sizing pass).
+
+    No packed bitmap and no dense signature tensor are emitted — that
+    is the point: input bytes are paid once over the DMA pipeline and
+    only the tiny per-tile lanes travel back (see ``hbm_bytes_fused``
+    with ``streamed=True``). Dense-sig modes (``lsh`` without lane
+    recompute, ``variant`` without the epilogue) therefore raise; the
+    streaming paths in ``extraction.sharded`` recompute band signatures
+    post-compaction instead.
+
+    Callers pre-pad ``doc_tokens`` to a multiple of ``bd`` *per
+    upstream tile* and pass the matching ``row_offs`` so flat indices
+    stay bit-identical to the per-tile launch loop at any geometry
+    (see ``extraction.sharded.stream_probe_tiles``).
+    """
+    assert max_len <= 32, "packed survival bitmap holds at most 32 lengths"
+    if sig_mode not in (SIG_MODE_NONE, SIG_MODE_VARIANT):
+        raise ValueError(
+            "streamed kernel emits no dense signature tensor: sig_mode "
+            f"{sig_mode!r} unsupported (lsh band sigs are recomputed "
+            "post-compaction on streaming paths)"
+        )
+    if candidates <= 0:
+        raise ValueError(
+            "streamed kernel has no bitmap output: candidates > 0 required"
+        )
+    R, T = doc_tokens.shape
+    if R % bd != 0:
+        raise ValueError(
+            f"streamed input rows ({R}) must be a multiple of bd ({bd}): "
+            "callers pre-pad each upstream tile to full chunk height"
+        )
+    G = R // bd
+    cand_cap = 0 if count_only else candidates
+
+    out_shape = [jax.ShapeDtypeStruct((G,), jnp.int32)]
+    out_specs = [pl.BlockSpec(memory_space=pltpu.VMEM)]
+    if cand_cap:
+        out_shape.append(jax.ShapeDtypeStruct((G, cand_cap), jnp.int32))
+        out_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))
+        if sig_mode == SIG_MODE_VARIANT:
+            out_shape.append(
+                jax.ShapeDtypeStruct((G, cand_cap, 2), jnp.uint32)
+            )
+            out_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))
+
+    outs = pl.pallas_call(
+        functools.partial(
+            _stream_kernel,
+            num_bits=num_bits,
+            num_hashes=num_hashes,
+            max_len=max_len,
+            bands=bands,
+            rows=rows,
+            use_filter=use_filter,
+            sig_mode=sig_mode,
+            chunks=G,
+            bd=bd,
+            cand_cap=cand_cap,
+        ),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # row_offs
+            pl.BlockSpec(memory_space=pltpu.ANY),  # docs stay in HBM
+            pl.BlockSpec(memory_space=pltpu.VMEM),  # Bloom words
+        ],
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        interpret=interpret,
+    )(row_offs, doc_tokens, bits)
+    outs = [outs] if not isinstance(outs, (tuple, list)) else list(outs)
+    counts = outs.pop(0)
+    cands = outs.pop(0) if cand_cap else None
+    vkeys = outs.pop(0) if (cand_cap and sig_mode == SIG_MODE_VARIANT) else None
+    return counts, cands, vkeys
+
+
+# --------------------------------------------------------------------------
 # HBM-traffic accounting (the analytic model the benchmark reports)
 # --------------------------------------------------------------------------
 
 
 def hbm_bytes_unfused(D: int, T: int, max_len: int, max_candidates: int,
-                      sig_width: int) -> int:
+                      sig_width: int, streamed: bool = False) -> int:
     """Bytes moved by the unfused survival_mask->compact->signatures
     pipeline: docs read, [D,T,L] int32 base write + probe re-read,
     [D,T,L] survival write + compaction re-read, compacted [N,L] window
-    gather + [N,S] signature store."""
+    gather + [N,S] signature store.
+
+    ``streamed=`` is accepted for symmetry with ``hbm_bytes_fused`` but
+    changes nothing: the unfused pipeline's inter-pass tensors (the
+    L-expanded base and survival arrays) are HBM-resident *between*
+    jitted passes, so streaming the input cannot elide their round
+    trips — which is exactly why only the fused megakernel has a
+    streaming mode worth modeling.
+    """
+    del streamed  # see docstring: no term to elide
     tokens = D * T
     base = tokens * max_len * 4
     mask = tokens * max_len  # int8
@@ -535,7 +836,8 @@ def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
                     bands: int, lsh: bool, sig_width: int = 0,
                     kernel_compact: bool = False, bd: int | None = None,
                     lane_width: int | None = None, two_pass: bool = False,
-                    variant_keys: bool = False) -> int:
+                    variant_keys: bool = False,
+                    streamed: bool = False) -> int:
     """Bytes moved by the fused megakernel pipeline: docs read once,
     packed [D,T] uint32 bitmap write (+ compaction re-read unless the
     in-kernel epilogue runs), compacted [N,L] window gather straight
@@ -553,9 +855,19 @@ def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
     [G] count round trip). ``variant_keys=True`` models the fused
     variant scheme: the post-compaction [N, sig_width] signature store
     is replaced by the [G, W, 2] key-lane payload (write + combine
-    read) riding the candidate lanes."""
+    read) riding the candidate lanes. ``streamed=True`` (requires
+    ``kernel_compact``) models the in-kernel DMA pipeline
+    (``fused_probe_stream_pallas``): input bytes are counted exactly
+    once over the double-buffered copy-in and the packed bitmap is
+    never materialised — the per-launch bitmap write of the per-tile
+    loop disappears from both the emit and (``two_pass``) sizing
+    passes, leaving only the docs read and the tiny per-tile lane
+    round trips."""
+    if streamed and not kernel_compact:
+        raise ValueError("streamed modeling requires kernel_compact=True "
+                         "(the streamed kernel has no bitmap output)")
     tokens = D * T
-    packed = tokens * 4
+    packed = 0 if streamed else tokens * 4
     gather = max_candidates * max_len * 4
     if kernel_compact:
         if bd is None:
@@ -565,8 +877,9 @@ def hbm_bytes_fused(D: int, T: int, max_len: int, max_candidates: int,
         tiles = G * (1 + W) * 4  # write + combine read
         total = tokens * 4 + packed + 2 * tiles + 2 * gather
         if two_pass:
-            # count-only sizing pass: docs read + bitmap write again,
-            # plus the [G] per-tile counts' write and host read-back
+            # count-only sizing pass: docs read + bitmap write again
+            # (elided when streamed), plus the [G] per-tile counts'
+            # write and host read-back
             total += tokens * 4 + packed + 2 * G * 4
         if variant_keys:
             total += 2 * G * W * 8  # [G, W, 2] u32 key lanes, write+read

@@ -182,6 +182,73 @@ def fused_probe_count(
     return counts
 
 
+def fused_probe_stream(
+    doc_tokens,
+    flt: tuple | None,
+    max_len: int,
+    candidates: int,
+    row_offs,
+    sig_mode: str = _fp.SIG_MODE_NONE,
+    bd: int | None = None,
+    lane_width: int | None = None,
+    count_only: bool = False,
+):
+    """Single-launch streamed probe over a whole shard (DMA pipeline).
+
+    ``doc_tokens`` [G*bd, T] must be pre-padded so each [bd, T] chunk is
+    full height; ``row_offs`` [G] int32 carries each chunk's absolute
+    doc-row offset (upstream tile boundaries and shard offsets fold in
+    here, which is what keeps flat indices bit-identical to the
+    per-tile launch loop). Returns ``(counts [G], cands [G, W], vkeys)``
+    — the same wire unit as ``fused_probe_compact`` minus the packed
+    bitmap and dense sigs, which the streamed kernel never materialises
+    (``sig_mode="lsh"`` therefore raises; streaming paths recompute
+    band sigs post-compaction). ``count_only=True`` is the adaptive
+    sizing pass: lanes are skipped, only ``counts`` comes back.
+    """
+    if candidates <= 0:
+        raise ValueError(
+            f"fused_probe_stream(candidates={candidates}): the streamed "
+            "kernel has no bitmap output, so it always runs the compaction "
+            "epilogue — a positive merge capacity (NC = "
+            "ExtractParams.max_candidates) is required"
+        )
+    if max_len > 32:
+        raise ValueError(
+            f"fused_probe_stream(max_len={max_len}): the packed survival "
+            "bitmap holds one window length per uint32 bit, so the "
+            "streamed epilogue supports max_len <= 32"
+        )
+    if lane_width is not None and not 0 < lane_width <= candidates:
+        raise ValueError(
+            f"fused_probe_stream(lane_width={lane_width}): the emit-pass "
+            f"lane width must be in (0, candidates={candidates}]"
+        )
+    if flt is None:
+        bits = jnp.zeros((8,), dtype=jnp.uint32)
+        num_bits, num_hashes, use_filter = 256, 1, False
+    else:
+        bits, num_bits, num_hashes = flt
+        use_filter = True
+    if bd is None:
+        bd = _fp.compact_tile_height(doc_tokens.shape[0],
+                                     doc_tokens.shape[1], candidates)
+    return _fp.fused_probe_stream_pallas(
+        doc_tokens,
+        bits,
+        row_offs,
+        num_bits=num_bits,
+        num_hashes=num_hashes,
+        max_len=max_len,
+        sig_mode=sig_mode,
+        use_filter=use_filter,
+        bd=bd,
+        candidates=lane_width or candidates,
+        count_only=count_only,
+        interpret=_interpret(),
+    )
+
+
 def _probe(doc_tokens, flt, max_len, sig_mode, bands, rows, candidates,
            bd: int = _fp.DEFAULT_BD, count_only: bool = False):
     if flt is None:

@@ -133,6 +133,10 @@ def main(argv=None) -> int:
     print(f"[serve_extract] latency p50/p95/p99 = {s['latency_p50_s']:.4f}/"
           f"{s['latency_p95_s']:.4f}/{s['latency_p99_s']:.4f} s; "
           f"{s['docs_per_s']:.1f} docs/s, {s['lanes_per_s']:.1f} lanes/s")
+    print(f"[serve_extract] streaming: {s['streamed_launches']} streamed "
+          f"launches, {s['tiles_streamed']} tiles streamed, "
+          f"{s['dma_waits']} DMA waits, {s['checkpoint_writes']} checkpoint "
+          f"writes (sizing {s['lane_sizing'] or '{}'})")
     cs = session_cache_summary(cache)
     row = cs["per_session"][sess.key]
     print(f"[serve_extract] session cache: {cs['sessions']}/"

@@ -82,6 +82,16 @@ class ServingMetrics:
     # 'refit' the undersized-hint recovery (one extra emit pass)
     lane_sizing: dict = dataclasses.field(default_factory=dict)
     lanes: int = 0  # [1, NC] probe->verify handoffs (one per batch per side)
+    # streamed probe path (single-launch DMA megakernel): launches taken,
+    # in-kernel tiles consumed, DMA waits issued (one per tile chunk),
+    # and checkpoint writes/hits when a probed side persists lanes —
+    # mirrors sharded.stream_probe_tiles' stream_stats keys, so the
+    # streamed path is observable like lane sizing already is.
+    streamed_launches: int = 0
+    tiles_streamed: int = 0
+    dma_waits: int = 0
+    checkpoint_writes: int = 0
+    checkpoint_hits: int = 0
     docs: int = 0
     overflow_windows: int = 0  # candidate-buffer overflow, summed over batches
     depth_samples: list = dataclasses.field(default_factory=list)
@@ -113,6 +123,21 @@ class ServingMetrics:
     def record_sizing(self, sizing: str) -> None:
         """One probed side sized its lanes via ``sizing`` (see field doc)."""
         self.lane_sizing[sizing] = self.lane_sizing.get(sizing, 0) + 1
+
+    def record_stream(self, stream_stats: dict) -> None:
+        """Fold one probe call's ``stream_stats`` dict into the counters.
+
+        The dict is the mutable accumulator the streaming drivers fill
+        (``sharded.stream_probe_tiles`` / ``LaneCheckpointStore``);
+        empty when the per-tile launch loop ran instead — recording it
+        is then a no-op, so the counters directly read "how much of the
+        probe traffic took the streamed path".
+        """
+        self.streamed_launches += stream_stats.get("streamed_launches", 0)
+        self.tiles_streamed += stream_stats.get("tiles_streamed", 0)
+        self.dma_waits += stream_stats.get("dma_waits", 0)
+        self.checkpoint_writes += stream_stats.get("checkpoint_writes", 0)
+        self.checkpoint_hits += stream_stats.get("checkpoint_hits", 0)
 
     def record_batch(self, batch_id: int, rows: int, occupancy: float,
                      n_lanes: int, flush_s: float, probe_s: float,
@@ -174,6 +199,11 @@ class ServingMetrics:
             "overflow_windows": self.overflow_windows,
             "rejected_quota": self.rejected_quota,
             "lane_sizing": dict(self.lane_sizing),
+            "streamed_launches": self.streamed_launches,
+            "tiles_streamed": self.tiles_streamed,
+            "dma_waits": self.dma_waits,
+            "checkpoint_writes": self.checkpoint_writes,
+            "checkpoint_hits": self.checkpoint_hits,
         }
 
 

@@ -303,14 +303,17 @@ class ExtractionService:
         docs = jax.device_put(jnp.asarray(batch.docs), dev)
         lanes = []
         for i, eside in enumerate(state.sides):
+            stream_stats: dict = {}
             lane, count, keys, tile_max, sizing = shard_lane_steady(
                 docs, 0, state.max_len, eside.flt, eside.params,
                 batch.spec.tile_docs,
                 width_hint=sess.lane_hint(i, batch.bucket, batch.epoch),
+                stream_stats=stream_stats,
             )
             sess.update_lane_hint(i, batch.bucket, batch.epoch, tile_max)
             with self._lock:
                 self.metrics.record_sizing(sizing)
+                self.metrics.record_stream(stream_stats)
             lanes.append((count, lane, keys))
         jax.block_until_ready(lanes)
         return _Handoff(batch, lanes, time.perf_counter() - t0)
