@@ -1,0 +1,259 @@
+"""Continuous-calibration bench: replanner overhead + drift recovery.
+
+Two legs over the drift-injection workload (same two-phase shape as
+``tests/harness_drift.py``, rebuilt here from the ``repro.data.synth``
+primitives so the bench has no test-package dependency):
+
+* **stationary** — identical phase-A-only streams served with the
+  replanner off vs on (inline, tick-driven). The replanner must stay
+  idle (0 triggers — drift never crosses the bound) and its observe
+  path (window counting, document ring, EWMA folds, step polls) must
+  cost < 2% end-to-end wall time. The bound is asserted in the full
+  run on best-of-3 medians; the smoke leg reports the measured
+  overhead without gating on it (single sample, CI wall-clock noise).
+* **drift** — phase A -> phase B mid-stream shift (doc length x2,
+  mention density x12, head->tail skew) with the stale plan pinned at
+  ``pure index:prefix`` under an engineered cost model (index-probe
+  constants x100). Asserted in-bench: the replanner fires and swaps,
+  the direction of recovery — the swapped plan's modeled cost never
+  exceeds the stale plan's under the same constants, and it equals the
+  from-scratch §5 oracle search on a fresh post-drift sample — and
+  bit-parity of every served match against ``one_shot_reference``
+  across the swap. Measured (reported, not asserted: wall-clock under
+  an engineered cost model carries no direction claim): per-doc stage
+  time before/after the swap and ``realized_gain``.
+
+Rows land in ``results/bench/replan.json`` (``replan_smoke.json`` for
+the CI leg).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.cost_model import CostParams
+from repro.core.eejoin import EEJoinConfig
+from repro.core.search import search_plan
+from repro.data.synth import drift_docs, make_corpus, skewed_mention_probs
+from repro.serving import (
+    BatcherConfig,
+    ExtractionService,
+    ReplanConfig,
+    SessionCache,
+    make_pools,
+    one_shot_reference,
+    realized_gain,
+)
+from repro.serving.replan import effective_plan_key
+from repro.serving.session import pure_plan
+
+from benchmarks.common import emit
+
+SEED = 29
+NUM_ENTITIES = 24
+INDEX_COST_SCALE = 100.0
+
+# (num_docs, doc_len, skew kind, mentions/doc, seed)
+PHASE_A = (48, 48, "head", 0.5, 11)
+PHASE_B = (64, 96, "tail", 6.0, 12)
+
+
+class _SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _build():
+    corpus = make_corpus(num_docs=24, doc_len=64, vocab_size=2048,
+                         num_entities=NUM_ENTITIES, max_entity_len=4,
+                         seed=5)
+    cfg = EEJoinConfig(
+        use_kernel=True, max_candidates=32768, result_capacity=16384,
+        options=(("index", "prefix"), ("ssjoin", "prefix")),
+        observe_capacity=64,
+    )
+    base = CostParams(num_devices=1)
+    cp = dataclasses.replace(
+        base,
+        c_probe_index=base.c_probe_index * INDEX_COST_SCALE,
+        c_verify_index=base.c_verify_index * INDEX_COST_SCALE,
+    )
+    return corpus, cfg, cp
+
+
+def _session(corpus, cfg, cp):
+    cache = SessionCache()
+    sess = cache.get_or_create(corpus.dictionary, cfg,
+                               plan=pure_plan("prefix", algo="index"),
+                               cost_params=cp)
+    return cache, sess
+
+
+def _phase_docs(dictionary, phase):
+    num_docs, doc_len, kind, per_doc, seed = phase
+    return drift_docs(
+        dictionary, num_docs=num_docs, doc_len=doc_len,
+        mention_probs=skewed_mention_probs(NUM_ENTITIES, kind),
+        mentions_per_doc=per_doc, seed=seed,
+    )
+
+
+def _replan_cfg() -> ReplanConfig:
+    return ReplanConfig(
+        thread=False, refit=False, min_batches=3, cooldown_batches=2,
+        density_drift=0.5, doc_len_drift=0.5, time_drift=float("inf"),
+        halflife_windows=200.0,
+    )
+
+
+def _serve(cache, sess, phases, replan_cfg, wait_mid: int | None = None):
+    """Drive the phases through the service; returns (svc, docs, wall_s).
+
+    ``wait_mid``: documents into the final phase after which the loop
+    spins (real-time bounded) until the replanner's swap lands — the
+    remaining documents then admit on the post-swap epoch.
+    """
+    clock = _SimClock()
+    svc = ExtractionService(
+        cache, pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=8, max_delay_s=0.01),
+        queue_capacity=4096, overlap=True, clock=clock,
+        replan=replan_cfg,
+    )
+    all_docs = []
+    t0 = time.perf_counter()
+    with svc:
+        doc_id = 0
+        for p, docs in enumerate(phases):
+            final = p == len(phases) - 1
+            for j, row in enumerate(docs):
+                if final and wait_mid is not None and j == wait_mid:
+                    deadline = time.monotonic() + 90
+                    while (svc.metrics.replan_swaps == 0
+                           and time.monotonic() < deadline):
+                        clock.t += 1e-3
+                        svc.tick(now=clock.t)
+                        time.sleep(2e-3)
+                clock.t += 1 / 600
+                svc.submit(doc_id, row, sess.key, now=clock.t)
+                svc.tick(now=clock.t)
+                doc_id += 1
+                all_docs.append(row)
+            if not final:
+                svc.drain()
+                svc.tick(now=clock.t)
+                svc.tick(now=clock.t)
+        svc.drain()
+        svc.tick(now=clock.t)
+    return svc, all_docs, time.perf_counter() - t0
+
+
+def _stationary_wall(corpus, cfg, cp, docs_a, replan_on: bool) -> tuple:
+    cache, sess = _session(corpus, cfg, cp)
+    svc, docs, wall = _serve(cache, sess, [docs_a],
+                             _replan_cfg() if replan_on else None)
+    assert svc.metrics.replans == 0, (
+        "stationary stream must never trigger a replan"
+    )
+    assert svc.results_set() == one_shot_reference(sess, docs)
+    return wall, svc.metrics.batches
+
+
+def run_replan(smoke: bool = False) -> list[dict]:
+    corpus, cfg, cp = _build()
+    docs_a = _phase_docs(corpus.dictionary, PHASE_A)
+    docs_b = _phase_docs(corpus.dictionary, PHASE_B)
+    rows = []
+
+    # ------------------------------------------------------- stationary
+    reps = 1 if smoke else 3
+    # warmup absorbs first-touch compilation for both modes
+    _stationary_wall(corpus, cfg, cp, docs_a, replan_on=False)
+    off = [_stationary_wall(corpus, cfg, cp, docs_a, False)[0]
+           for _ in range(reps)]
+    on = [_stationary_wall(corpus, cfg, cp, docs_a, True)[0]
+          for _ in range(reps)]
+    wall_off, wall_on = float(np.median(off)), float(np.median(on))
+    overhead = (wall_on - wall_off) / wall_off
+    if not smoke:
+        assert overhead < 0.02, (
+            f"replanner observe-path overhead {overhead:.1%} >= 2% "
+            f"(on {wall_on:.3f}s vs off {wall_off:.3f}s)"
+        )
+    rows.append({
+        "section": "replan",
+        "leg": "stationary",
+        "docs": len(docs_a),
+        "wall_off_s": wall_off,
+        "wall_on_s": wall_on,
+        "overhead_frac": overhead,
+        "overhead_asserted": not smoke,
+        "replans": 0,
+    })
+
+    # ------------------------------------------------------------ drift
+    cache, sess = _session(corpus, cfg, cp)
+    svc, docs, wall = _serve(cache, sess, [docs_a, docs_b],
+                             _replan_cfg(), wait_mid=32)
+    assert svc.metrics.replan_swaps >= 1, "drift leg never swapped"
+    event = next(e for e in svc.metrics.replan_events if e["swapped"])
+    # recovery direction, in the measure the planner optimizes: the
+    # swapped plan models no costlier than the stale plan, and matches
+    # the from-scratch §5 search on a fresh post-drift sample
+    assert event["new_cost_s"] <= event["stale_cost_s"]
+    fresh = drift_docs(
+        corpus.dictionary, num_docs=32, doc_len=PHASE_B[1],
+        mention_probs=skewed_mention_probs(NUM_ENTITIES, PHASE_B[2]),
+        mentions_per_doc=PHASE_B[3], seed=99,
+    )
+    stats = sess.operator.gather_statistics(fresh, total_docs=len(fresh))
+    oracle = search_plan(stats, sess.cost_params, sess.config.objective,
+                         options=cfg.options)
+    assert (effective_plan_key(oracle, NUM_ENTITIES)
+            == effective_plan_key(sess.plan, NUM_ENTITIES)), (
+        "swapped plan diverged from the post-drift oracle search"
+    )
+    assert svc.results_set() == one_shot_reference(sess, docs), (
+        "bit-parity lost across the replan swap"
+    )
+
+    def per_doc_ms(records):
+        rs = [r for r in records if r["rows"]]
+        t = sum(r["probe_s"] + r["verify_s"] for r in rs)
+        return 1e3 * t / max(sum(r["rows"] for r in rs), 1)
+
+    pre = [r for r in svc.metrics.batch_records if r["epoch"] < event["epoch"]]
+    post = [r for r in svc.metrics.batch_records
+            if r["epoch"] >= event["epoch"]]
+    rows.append({
+        "section": "replan",
+        "leg": "drift",
+        "docs": len(docs),
+        "wall_s": wall,
+        "replans": svc.metrics.replans,
+        "swaps": svc.metrics.replan_swaps,
+        "trigger": event["reason"],
+        "old_plan": event["old_plan"],
+        "new_plan": event["new_plan"],
+        "stale_cost_s": event["stale_cost_s"],
+        "new_cost_s": event["new_cost_s"],
+        "predicted_gain": event["predicted_gain"],
+        "realized_gain": realized_gain(svc.metrics, event),
+        "pre_swap_ms_per_doc": per_doc_ms(pre),
+        "post_swap_ms_per_doc": per_doc_ms(post),
+        "oracle_plan": oracle.describe(NUM_ENTITIES),
+    })
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    emit("replan_smoke" if smoke else "replan", run_replan(smoke=smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,31 @@ def _run_level(cache, sess, stream, batch_docs: int, max_delay_s: float):
     return svc, records
 
 
+def deterministic_summary(svc, records) -> dict:
+    """The virtual-clock-deterministic slice of one level's run.
+
+    Everything here is a pure function of (seed, load level): arrival
+    times, admission decisions, batch compositions, flush stamps and
+    request->batch assignment — but *not* measured stage wall times.
+    The seed-determinism regression test asserts two runs of the same
+    level produce byte-identical JSON for this slice.
+    """
+    reqs = sorted(svc.completed, key=lambda r: r.req_id)
+    return {
+        "submitted": svc.metrics.submitted,
+        "rejected": svc.metrics.rejected,
+        "completed": svc.metrics.completed,
+        "matches": len(svc.results_set()),
+        "batches": [
+            {"batch_id": r["batch_id"], "rows": r["rows"],
+             "occupancy": r["occupancy"], "flush_s": r["flush_s"],
+             "epoch": r["epoch"]}
+            for r in records
+        ],
+        "assignment": [[r.req_id, r.batch_id] for r in reqs],
+    }
+
+
 def _assert_parity(svc, sess, stream) -> int:
     """Served matches must equal one-shot execute over the same docs."""
     docs = [toks for _, _, toks in sorted(stream, key=lambda x: x[1])]

@@ -15,6 +15,7 @@ Sections:
     corpus       corpus-scale streaming: DMA megakernel vs per-tile loop,
                  spill streaming + kill-then-resume checkpoint merges
     serving      async probe/verify serving: load vs latency percentiles
+    replan       continuous calibration: replanner overhead + drift swap
     updates      live dictionary deltas: absorb vs rebuild + epoch swap
     roofline     deliverable (g) reader over results/dryrun/
 """
@@ -30,6 +31,7 @@ from benchmarks import (
     bench_cost_model,
     bench_hybrid,
     bench_kernels,
+    bench_replan,
     bench_roofline,
     bench_scaling,
     bench_search,
@@ -48,6 +50,7 @@ SECTIONS = [
     ("kernels", bench_kernels.main),
     ("corpus", bench_corpus.main),
     ("serving", bench_serving.main),
+    ("replan", bench_replan.main),
     ("updates", bench_updates.main),
     ("roofline", bench_roofline.main),
 ]
@@ -74,6 +77,9 @@ def main() -> None:
         t0 = time.time()
         bench_serving.main(smoke=True)
         print(f"# [serving --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        t0 = time.time()
+        bench_replan.main(smoke=True)
+        print(f"# [replan --smoke] done in {time.time() - t0:.1f}s", flush=True)
         t0 = time.time()
         bench_updates.main(smoke=True)
         print(f"# [updates --smoke] done in {time.time() - t0:.1f}s", flush=True)

@@ -20,18 +20,23 @@ python -m pytest -x -q
 # vs per-tile launch loop with bit parity + model-vs-measured
 # direction asserted, plus spill streaming with a kill-then-resume
 # checkpoint leg), the serving loadgen (N=16 seeded open-loop requests
-# through the probe/verify split), and the live-updates scenario
+# through the probe/verify split), the continuous-calibration
+# scenario (stationary leg: replanner provably idle with its observe
+# overhead reported; drift leg: mid-stream distribution shift ->
+# drift-triggered §5 re-search + epoch plan swap, with the swapped
+# plan asserted equal to the post-drift oracle search and bit-parity
+# held across the swap), and the live-updates scenario
 # (delta absorb vs from-scratch rebuild with oracle parity + the
 # epoch hot-swap serving leg). Parity is asserted inside each bench,
 # so drift fails CI; rows land in results/bench/{kernels,sharded,
-# variant,corpus,corpus_spill,serving,updates}_smoke.json.
+# variant,corpus,corpus_spill,serving,replan,updates}_smoke.json.
 python -m benchmarks.run --smoke
 
 # Serving smoke leg: the real-time (threaded, double-buffered) service
 # end to end via the launch entrypoint; --check asserts bit-parity of
 # the served matches against a one-shot eejoin.execute.
 python -m repro.launch.serve_extract --requests 16 --rate 400 \
-    --plan forced --check
+    --plan forced --check --replan
 
 # Docs link check: every relative link in docs/*.md and README.md must
 # resolve inside the repo.

@@ -58,6 +58,71 @@ def measured_lane_density(stats) -> float:
     return float(stats.head_survivors(stats.num_entities) / stats.num_windows)
 
 
+def refit_params(params: CostParams, observed,
+                 schemes: tuple[str, ...] = ("prefix",)) -> CostParams:
+    """Pure per-stage refit of the cost constants from serving telemetry.
+
+    ``observed`` is duck-typed (so the core layer never imports the
+    serving package): it needs ``density`` (filter survivors per
+    enumerated window), ``probe_s_per_window`` and
+    ``verify_s_per_survivor`` — the EWMA estimators a
+    ``serving.replan.ObservedStats`` maintains. Each *stage family* is
+    rescaled by one positive scalar so that the model's canonical
+    per-unit time matches the measurement:
+
+    * probe family (``c_enum_per_window``, ``c_filter_per_window``, all
+      ``c_sig_per_window`` entries) — matched against seconds per
+      enumerated window, with the signature term weighted by the
+      measured survivor density (signatures are only built for
+      survivors);
+    * verify family (``c_probe``, ``c_verify_pair``, ``c_probe_index``,
+      ``c_verify_index``) — matched against seconds per surviving
+      window.
+
+    Scaling a whole family by a positive scalar preserves the
+    monotonicity Lemma 1's split search relies on (same argument as
+    ``calibrate``), and because each family's model is homogeneous of
+    degree 1 in its constants the refit is idempotent: refitting twice
+    against the same observation is a no-op (property-tested in
+    ``tests/test_replan_prop.py``). Non-positive / NaN observations
+    leave their family untouched, so a cold ``ObservedStats`` refits to
+    the identity.
+    """
+    def _ok(x) -> bool:
+        return x is not None and np.isfinite(x) and x > 0.0
+
+    density = observed.density if _ok(observed.density) else params.lane_density
+    sig_mean = float(np.mean([params.sig_cost(s) for s in schemes])) \
+        if schemes else params.sig_cost("prefix")
+
+    k_probe = 1.0
+    obs_p = observed.probe_s_per_window
+    model_p = (params.c_enum_per_window + params.c_filter_per_window
+               + max(density, 0.0) * sig_mean)
+    if _ok(obs_p) and model_p > 0.0:
+        k_probe = obs_p / model_p
+
+    k_verify = 1.0
+    obs_v = observed.verify_s_per_survivor
+    model_v = params.c_probe + params.c_verify_pair
+    if _ok(obs_v) and model_v > 0.0:
+        k_verify = obs_v / model_v
+
+    sig = {s: params.sig_cost(s) * k_probe
+           for s in ("word", "prefix", "lsh", "variant")}
+    return dataclasses.replace(
+        params,
+        c_enum_per_window=params.c_enum_per_window * k_probe,
+        c_filter_per_window=params.c_filter_per_window * k_probe,
+        c_sig_per_window=sig,
+        c_probe=params.c_probe * k_verify,
+        c_verify_pair=params.c_verify_pair * k_verify,
+        c_probe_index=params.c_probe_index * k_verify,
+        c_verify_index=params.c_verify_index * k_verify,
+        lane_density=density if _ok(density) else params.lane_density,
+    )
+
+
 def calibrate(op, sample_docs, params: CostParams,
               scheme: str = "variant") -> CostParams:
     """Returns CostParams with per-family constants rescaled to this host.

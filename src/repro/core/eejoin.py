@@ -64,6 +64,10 @@ class EEJoinConfig:
     # shards against (None -> sharded.DEFAULT_DEVICE_BUDGET_BYTES).
     streamed: bool | None = None
     device_budget_bytes: int | None = None
+    # continuous calibration (serving.replan): how many recent documents
+    # a session's ObservedStats ring retains as the statistics sample an
+    # online replan re-runs the §5 search over.
+    observe_capacity: int = 128
 
 
 @dataclasses.dataclass

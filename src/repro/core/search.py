@@ -51,6 +51,26 @@ def _plan_cost(
     return objective_value(hc, objective) + objective_value(tc, objective), hc, tc
 
 
+def plan_cost(
+    stats: EEStats,
+    params: CostParams,
+    plan: Plan,
+    objective: str | None = None,
+) -> float:
+    """Modeled cost of an *existing* plan under (possibly newer) params.
+
+    The replan loop's comparison primitive: evaluate a stale plan's
+    split/option choice against fresh statistics and refitted constants
+    without re-running the search. The split is clamped to the current
+    entity count (the dictionary may have grown or compacted since the
+    plan was chosen).
+    """
+    obj = objective or plan.objective
+    p = min(max(plan.split, 0), stats.num_entities)
+    c, _hc, _tc = _plan_cost(stats, params, p, plan.head, plan.tail, obj)
+    return c
+
+
 def search_pair(
     stats: EEStats,
     params: CostParams,

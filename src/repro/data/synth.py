@@ -138,3 +138,82 @@ def make_corpus(
         planted=planted,
         mention_freq=mention_freq,
     )
+
+
+def skewed_mention_probs(num_entities: int, kind: str = "head",
+                         s: float = 1.3) -> np.ndarray:
+    """Per-entity mention distribution for drift workloads.
+
+    ``head``: Zipf mass on the frequency-sorted head (matches the
+    distribution a ``make_corpus`` dictionary was built under);
+    ``tail``: the same Zipf reversed (mentions concentrate on entities
+    the plan's head/tail split assumed were cold — the "dictionary
+    skew" axis of a drift injection); ``uniform``: flat.
+    """
+    if kind == "head":
+        return _zipf_probs(num_entities, s=s)
+    if kind == "tail":
+        return _zipf_probs(num_entities, s=s)[::-1].copy()
+    if kind == "uniform":
+        return np.full((num_entities,), 1.0 / num_entities)
+    raise ValueError(f"unknown mention-probs kind {kind!r}")
+
+
+def drift_docs(
+    dictionary: Dictionary,
+    *,
+    num_docs: int,
+    doc_len: int,
+    mention_probs: np.ndarray | None,
+    mentions_per_doc: float,
+    seed: int,
+    p_drop: float = 0.25,
+    p_insert: float = 0.15,
+    p_permute: float = 0.1,
+) -> np.ndarray:
+    """Documents over an *existing* dictionary with chosen statistics.
+
+    The drift-injection workload generator: unlike ``make_corpus`` (one
+    dictionary + one corpus from one seed), this plants noisy mentions
+    of ``dictionary``'s entities into fresh background documents under
+    an explicit per-entity distribution, mention rate and document
+    length — so a serving run can shift mention frequency, doc length
+    and entity skew *mid-stream* while every phase shares the same
+    dictionary (and therefore the same serving session). Deterministic
+    for a given seed; ``mention_probs=None`` plants nothing (pure
+    background). Returns [num_docs, doc_len] int32, PAD-free rows.
+    """
+    rng = np.random.default_rng(seed)
+    E = dictionary.num_entities
+    V = int(dictionary.token_weight.shape[0])
+    bg_probs = _zipf_probs(V - 1)
+    docs = np.zeros((num_docs, doc_len), dtype=np.int32)
+    for d in range(num_docs):
+        docs[d] = rng.choice(V - 1, size=doc_len, p=bg_probs) + 1
+    if mention_probs is None:
+        return docs
+    mention_probs = np.asarray(mention_probs, dtype=np.float64)
+    if mention_probs.shape != (E,):
+        raise ValueError(
+            f"mention_probs shape {mention_probs.shape} != ({E},)"
+        )
+    mention_probs = mention_probs / mention_probs.sum()
+    total = int(round(mentions_per_doc * num_docs))
+    for e in rng.choice(E, size=total, p=mention_probs):
+        n = int(dictionary.lengths[e])
+        toks = list(dictionary.tokens[e, :n])
+        if n > 1 and rng.random() < p_drop:
+            toks.pop(int(rng.integers(len(toks))))
+        if len(toks) > 1 and rng.random() < p_permute:
+            i, j = rng.choice(len(toks), size=2, replace=False)
+            toks[i], toks[j] = toks[j], toks[i]
+        if rng.random() < p_insert:
+            junk = int(rng.choice(V - 1, p=bg_probs)) + 1
+            toks.insert(int(rng.integers(len(toks) + 1)), junk)
+        m = len(toks)
+        if m > doc_len:
+            continue
+        d = int(rng.integers(num_docs))
+        p = int(rng.integers(0, doc_len - m + 1))
+        docs[d, p : p + m] = np.array(toks, dtype=np.int32)
+    return docs

@@ -26,9 +26,11 @@ from repro.data.synth import make_corpus
 from repro.serving import (
     BatcherConfig,
     ExtractionService,
+    ReplanConfig,
     SessionCache,
     make_pools,
     one_shot_reference,
+    realized_gain,
     session_cache_summary,
 )
 from repro.serving.session import pure_plan
@@ -73,6 +75,13 @@ def main(argv=None) -> int:
     ap.add_argument("--no-overlap", dest="overlap", action="store_false")
     ap.add_argument("--check", action="store_true",
                     help="assert parity vs one-shot eejoin.execute")
+    ap.add_argument("--replan", action="store_true",
+                    help="continuous calibration: background replanner "
+                         "thread (drift-triggered §5 re-search + epoch "
+                         "plan swap)")
+    ap.add_argument("--drift-bound", type=float, default=0.3,
+                    help="relative survivor/doc-length drift that "
+                         "triggers a replan (with --replan)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -98,6 +107,15 @@ def main(argv=None) -> int:
     print(f"[serve_extract] pools: {pools.describe()}; "
           f"overlap={'on' if args.overlap else 'off'}")
 
+    replan = None
+    if args.replan:
+        replan = ReplanConfig(
+            density_drift=args.drift_bound,
+            doc_len_drift=args.drift_bound,
+            thread=True,
+        )
+        print(f"[serve_extract] replan: on (drift bound "
+              f"{args.drift_bound:.2f}, background thread)")
     svc = ExtractionService(
         cache,
         pools=pools,
@@ -107,6 +125,7 @@ def main(argv=None) -> int:
         ),
         queue_capacity=args.queue_capacity,
         overlap=args.overlap,
+        replan=replan,
     )
 
     rng = np.random.default_rng(args.seed + 2)
@@ -137,6 +156,19 @@ def main(argv=None) -> int:
           f"launches, {s['tiles_streamed']} tiles streamed, "
           f"{s['dma_waits']} DMA waits, {s['checkpoint_writes']} checkpoint "
           f"writes (sizing {s['lane_sizing'] or '{}'})")
+    if args.replan:
+        events = s["replan_events"]
+        print(f"[serve_extract] replan: {s['replans']} trigger(s), "
+              f"{s['replan_swaps']} swap(s)")
+        for e in events:
+            line = (f"[serve_extract]   [{e['reason']}] "
+                    f"{e['old_plan']} -> {e.get('new_plan', '(kept)')}")
+            if "predicted_gain" in e:
+                line += f", predicted gain {e['predicted_gain']:+.1%}"
+            rg = realized_gain(svc.metrics, e)
+            if np.isfinite(rg):
+                line += f", realized {rg:+.1%}"
+            print(line)
     cs = session_cache_summary(cache)
     row = cs["per_session"][sess.key]
     print(f"[serve_extract] session cache: {cs['sessions']}/"

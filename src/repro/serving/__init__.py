@@ -28,6 +28,12 @@ from repro.serving.metrics import (
 )
 from repro.serving.pools import DevicePools, make_pools
 from repro.serving.queue import AdmissionQueue, ExtractRequest
+from repro.serving.replan import (
+    ObservedStats,
+    ReplanConfig,
+    Replanner,
+    realized_gain,
+)
 from repro.serving.service import ExtractionService, one_shot_reference
 from repro.serving.session import (
     DictionarySession,
@@ -45,6 +51,9 @@ __all__ = [
     "ExtractionService",
     "MicroBatch",
     "MicroBatcher",
+    "ObservedStats",
+    "ReplanConfig",
+    "Replanner",
     "ServingMetrics",
     "SessionCache",
     "dictionary_fingerprint",
@@ -52,5 +61,6 @@ __all__ = [
     "one_shot_reference",
     "pipeline_schedule",
     "pure_plan",
+    "realized_gain",
     "session_cache_summary",
 ]

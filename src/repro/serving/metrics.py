@@ -8,11 +8,30 @@ so metrics cannot perturb the pipeline they observe.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
 
 PERCENTILES = (50, 95, 99)
+
+
+def stage_trace(name: str):
+    """Profiler annotation for one pipeline stage (context manager).
+
+    ``jax.profiler.TraceAnnotation`` when the installed jax provides it
+    (the span then shows up in captured profiler traces around the
+    probe/verify stage bodies); a ``nullcontext`` otherwise — the
+    virtual-clock / ``time.perf_counter`` timings recorded alongside
+    remain the source the replan loop actually consumes, so replanning
+    never depends on profiler availability.
+    """
+    try:
+        from jax.profiler import TraceAnnotation
+
+        return TraceAnnotation(name)
+    except Exception:  # pragma: no cover - depends on jax build
+        return contextlib.nullcontext()
 
 
 def percentiles(xs, ps=PERCENTILES) -> dict[str, float]:
@@ -100,6 +119,12 @@ class ServingMetrics:
     latencies_s: list = dataclasses.field(default_factory=list)
     probe_s: list = dataclasses.field(default_factory=list)
     verify_s: list = dataclasses.field(default_factory=list)
+    # continuous calibration: replanner triggers (events carry trigger
+    # reason, drift values, old→new plan and predicted gain; swaps are
+    # the subset that actually installed a new plan epoch)
+    replans: int = 0
+    replan_swaps: int = 0
+    replan_events: list = dataclasses.field(default_factory=list)
     first_arrival_s: float = float("nan")
     last_done_s: float = float("nan")
 
@@ -124,25 +149,32 @@ class ServingMetrics:
         """One probed side sized its lanes via ``sizing`` (see field doc)."""
         self.lane_sizing[sizing] = self.lane_sizing.get(sizing, 0) + 1
 
-    def record_stream(self, stream_stats: dict) -> None:
+    def record_stream(self, stream_stats: dict,
+                      observed=None) -> None:
         """Fold one probe call's ``stream_stats`` dict into the counters.
 
         The dict is the mutable accumulator the streaming drivers fill
         (``sharded.stream_probe_tiles`` / ``LaneCheckpointStore``);
         empty when the per-tile launch loop ran instead — recording it
         is then a no-op, so the counters directly read "how much of the
-        probe traffic took the streamed path".
+        probe traffic took the streamed path". Partial dicts are fine
+        (every key defaults to 0). ``observed`` — a per-session
+        ``serving.replan.ObservedStats`` — receives the same dict when
+        the continuous-calibration loop is on.
         """
         self.streamed_launches += stream_stats.get("streamed_launches", 0)
         self.tiles_streamed += stream_stats.get("tiles_streamed", 0)
         self.dma_waits += stream_stats.get("dma_waits", 0)
         self.checkpoint_writes += stream_stats.get("checkpoint_writes", 0)
         self.checkpoint_hits += stream_stats.get("checkpoint_hits", 0)
+        if observed is not None:
+            observed.record_stream(stream_stats)
 
     def record_batch(self, batch_id: int, rows: int, occupancy: float,
                      n_lanes: int, flush_s: float, probe_s: float,
                      verify_s: float, overflow: int = 0,
-                     epoch: int = 0) -> None:
+                     epoch: int = 0, windows: int = 0,
+                     survivors: int = 0, observed=None) -> None:
         self.batches += 1
         self.docs += rows
         self.lanes += n_lanes
@@ -158,7 +190,23 @@ class ServingMetrics:
             "probe_s": probe_s,
             "verify_s": verify_s,
             "epoch": epoch,
+            "windows": windows,
+            "survivors": survivors,
         })
+        if observed is not None:
+            # the telemetry feedback path: the session's ObservedStats
+            # (serving.replan) folds the same sample into its EWMAs
+            observed.record_batch(
+                rows=rows, windows=windows, survivors=survivors,
+                probe_s=probe_s, verify_s=verify_s,
+            )
+
+    def record_replan(self, event: dict) -> None:
+        """One replanner trigger (swapped or not) — see serving.replan."""
+        self.replans += 1
+        if event.get("swapped"):
+            self.replan_swaps += 1
+        self.replan_events.append(dict(event))
 
     def record_done(self, latency_s: float, done_s: float) -> None:
         self.completed += 1
@@ -204,6 +252,9 @@ class ServingMetrics:
             "dma_waits": self.dma_waits,
             "checkpoint_writes": self.checkpoint_writes,
             "checkpoint_hits": self.checkpoint_hits,
+            "replans": self.replans,
+            "replan_swaps": self.replan_swaps,
+            "replan_events": [dict(e) for e in self.replan_events],
         }
 
 

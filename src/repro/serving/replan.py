@@ -1,0 +1,519 @@
+"""Continuous calibration + online replanning (the observe→refit→replan
+→swap loop).
+
+The paper's §5 plan search runs once, at session build time, under
+one-shot calibrated cost constants. Serving already *observes* reality —
+per-batch stage wall times, true survivor counts, document lengths —
+so this module closes the loop and turns the search into a continuously
+running optimizer:
+
+1. **observe** — every completed batch folds into a per-session
+   ``ObservedStats``: boundary-invariant EWMAs of seconds-per-window
+   (probe), seconds-per-survivor (verify), survivor density and doc
+   length, plus a ring buffer of the most recent documents (the
+   post-drift statistics sample);
+2. **refit** — ``core.calibrate.refit_params`` rescales the cost
+   constants so the model's per-unit times match the measurements
+   (pure, idempotent — see its docstring);
+3. **replan** — when any drift measure exceeds its configured bound,
+   the §5 search (``core.search``) re-runs over statistics gathered
+   from the recent-document ring under the refitted constants, floored
+   by the stale plan's cost under the *same* refitted constants (so
+   the chosen plan's modeled cost never exceeds the stale plan's);
+4. **swap** — ``DictionarySession.apply_replan`` installs the new plan
+   as a fresh epoch through the PR-5 pin/unpin machinery: in-flight
+   batches keep executing on their admitted epoch, and the search is
+   restricted to plan options that share the current plan's similarity
+   semantics (the Jaccard-variant scheme computes ``SIM_VARIANT_EXACT``;
+   every other scheme ``SIM_EXTRA`` — see ``core.semantics``), so a
+   replan can never change any batch's results — only its cost.
+
+The replanner runs either as a background thread (``ReplanConfig.
+thread=True``, polling every ``interval_s``) or inline from
+``ExtractionService.tick`` (``thread=False`` — deterministic on the
+virtual clock, which is how the drift-injection tests and benches run
+it). Every trigger — swapped or not — lands as an event in
+``ServingMetrics.replan_events``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.calibrate import measured_lane_density, refit_params
+from repro.core.cost_model import ALGO_SSJOIN, CostParams
+from repro.core.dictionary import PAD
+from repro.core.plan import Plan
+from repro.core.search import plan_cost, search_plan
+from repro.core.semantics import SIM_EXTRA, SIM_VARIANT_EXACT
+
+_TINY = 1e-30
+
+
+def batch_windows(docs, max_len: int) -> int:
+    """Enumerated candidate windows in a PAD-padded [D, T] doc batch.
+
+    Matches the valid-window definition of ``core.stats.gather_stats``
+    (windows live entirely inside each row's leading non-PAD prefix):
+    a row with ``n`` valid tokens contributes ``sum_l max(0, n-l+1)``
+    windows for ``l`` in ``1..max_len``. This is the denominator of the
+    measured survivor density — host-side numpy only.
+    """
+    arr = np.asarray(docs)
+    lens = (arr != PAD).cumprod(axis=-1).sum(axis=-1).astype(np.int64)
+    total = 0
+    for length in range(1, max_len + 1):
+        total += int(np.maximum(0, lens - length + 1).sum())
+    return total
+
+
+class Ewma:
+    """Exponentially decayed mean, decayed per *unit of weight*.
+
+    ``update(x, n)`` treats the sample as ``n`` units (windows,
+    survivors, rows) each at rate ``x``:
+
+        value' = x + (value - x) * alpha ** n
+
+    which makes the estimator invariant to batch-boundary placement —
+    a segment of ``n`` units at rate ``x`` folds identically whether it
+    arrives as one batch or split into ``n1 + n2`` (property-tested in
+    ``tests/test_replan_prop.py``). ``halflife`` is in weight units.
+    """
+
+    __slots__ = ("alpha", "value")
+
+    def __init__(self, halflife: float):
+        self.alpha = 0.5 ** (1.0 / max(halflife, 1e-9))
+        self.value = float("nan")
+
+    def update(self, x: float, weight: float) -> None:
+        if weight <= 0 or not math.isfinite(x):
+            return
+        if math.isnan(self.value):
+            self.value = float(x)
+        else:
+            self.value = float(x + (self.value - x) * self.alpha ** weight)
+
+
+class ObservedStats:
+    """Per-session serving telemetry: EWMAs + a recent-document ring.
+
+    Fed by ``ServingMetrics.record_batch`` / ``record_stream`` (the
+    service passes the session's instance along) and read by the
+    replanner and by ``core.calibrate.refit_params`` (which only needs
+    the three ``density`` / ``probe_s_per_window`` /
+    ``verify_s_per_survivor`` properties — all NaN until the first
+    batch lands, so a cold refit is the identity).
+    """
+
+    def __init__(self, capacity: int = 128,
+                 halflife_windows: float = 20000.0):
+        if capacity <= 0:
+            raise ValueError(f"ObservedStats capacity={capacity} must be > 0")
+        self.capacity = capacity
+        self.batches = 0
+        self.windows = 0
+        self.survivors = 0
+        self.rows = 0
+        self._density = Ewma(halflife_windows)
+        self._probe = Ewma(halflife_windows)
+        self._verify = Ewma(halflife_windows)
+        # doc length moves at per-row cadence, not per-window
+        self._doc_len = Ewma(max(halflife_windows / 256.0, 1.0))
+        self._docs: deque = deque(maxlen=capacity)
+        self.stream_counters: dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- feeding
+    def record_batch(self, *, rows: int, windows: int, survivors: int,
+                     probe_s: float, verify_s: float) -> None:
+        with self._lock:
+            self.batches += 1
+            self.rows += int(rows)
+            self.windows += int(windows)
+            self.survivors += int(survivors)
+            if windows > 0:
+                self._density.update(survivors / windows, windows)
+                self._probe.update(probe_s / windows, windows)
+            if survivors > 0:
+                self._verify.update(verify_s / survivors, survivors)
+
+    def record_stream(self, stream_stats: dict) -> None:
+        with self._lock:
+            for k, v in (stream_stats or {}).items():
+                self.stream_counters[k] = self.stream_counters.get(k, 0) + v
+
+    def observe_docs(self, docs) -> None:
+        """Ring-buffer the batch's rows (trimmed of PAD tails)."""
+        arr = np.asarray(docs)
+        lens = (arr != PAD).cumprod(axis=-1).sum(axis=-1)
+        with self._lock:
+            for row, n in zip(arr, lens):
+                n = int(n)
+                if n > 0:
+                    self._docs.append(np.array(row[:n], dtype=np.int32))
+                    self._doc_len.update(float(n), 1.0)
+
+    # ------------------------------------------------------------- reading
+    @property
+    def density(self) -> float:
+        return self._density.value
+
+    @property
+    def probe_s_per_window(self) -> float:
+        return self._probe.value
+
+    @property
+    def verify_s_per_survivor(self) -> float:
+        return self._verify.value
+
+    @property
+    def doc_len_mean(self) -> float:
+        return self._doc_len.value
+
+    def sample_docs(self) -> np.ndarray | None:
+        """The recent-document ring as one PAD-padded [S, T] array."""
+        with self._lock:
+            docs = list(self._docs)
+        if not docs:
+            return None
+        T = max(len(d) for d in docs)
+        out = np.full((len(docs), T), PAD, dtype=np.int32)
+        for i, d in enumerate(docs):
+            out[i, : len(d)] = d
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanBaseline:
+    """The calibration snapshot drift is measured against.
+
+    ``density`` comes from the plan's calibrated ``CostParams.
+    lane_density`` when the session has one (the density the plan was
+    *chosen* under); everything else freezes from the first
+    ``min_batches`` of observed traffic.
+    """
+
+    density: float
+    doc_len: float
+    probe_s_per_window: float
+    verify_s_per_survivor: float
+    at_batches: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanConfig:
+    """Knobs of the continuous-calibration loop (all drift bounds are
+    *relative*: ``|observed - baseline| / baseline``)."""
+
+    density_drift: float = 0.3  # survivor-rate bound
+    doc_len_drift: float = 0.3  # document-length bound
+    time_drift: float = 1.0  # per-stage wall-time bound (noisy; coarse)
+    min_batches: int = 4  # warm-up before the baseline freezes
+    cooldown_batches: int = 4  # quiet period after any trigger
+    min_gain: float = 0.02  # modeled relative gain required to swap
+    interval_s: float = 0.05  # background-thread poll period
+    thread: bool = True  # False: step inline from service.tick (tests)
+    refit: bool = True  # False: re-search under the stale constants
+    halflife_windows: float = 20000.0  # EWMA halflife (weight units)
+
+    def __post_init__(self):
+        for name in ("density_drift", "doc_len_drift", "time_drift",
+                     "min_gain", "interval_s", "halflife_windows"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"ReplanConfig.{name} must be >= 0")
+        if self.min_batches < 1:
+            raise ValueError("ReplanConfig.min_batches must be >= 1")
+
+
+def effective_plan_key(plan: Plan, num_entities: int) -> tuple:
+    """Identity of what a plan *executes* (degenerate splits collapse:
+    at split 0 the head side does not exist, at split E the tail)."""
+    parts = []
+    if plan.split > 0:
+        parts.append(("head", min(plan.split, num_entities),
+                      plan.head.algo, plan.head.scheme))
+    if plan.split < num_entities:
+        parts.append(("tail", plan.tail.algo, plan.tail.scheme))
+    return tuple(parts)
+
+
+def scheme_semantics(scheme: str) -> str:
+    """The similarity predicate a scheme's matches satisfy exactly.
+
+    The Jaccard-variant machinery matches ``SIM_VARIANT_EXACT`` (an
+    under-approximation of ``SIM_EXTRA`` — see ``core.semantics``);
+    every other scheme verifies ``SIM_EXTRA``. Plans from different
+    classes produce different match sets, so a replan must never cross
+    the boundary.
+    """
+    return SIM_VARIANT_EXACT if scheme == "variant" else SIM_EXTRA
+
+
+def plan_semantics(plan: Plan, num_entities: int) -> frozenset[str]:
+    """Semantics classes of a plan's active sides (degenerate splits
+    collapse, as in ``effective_plan_key``)."""
+    out = set()
+    if plan.split > 0:
+        out.add(scheme_semantics(plan.head.scheme))
+    if plan.split < num_entities:
+        out.add(scheme_semantics(plan.tail.scheme))
+    return frozenset(out)
+
+
+def plan_schemes(plan: Plan, num_entities: int) -> tuple[str, ...]:
+    """Schemes of the plan's active ssjoin sides (refit's sig weights)."""
+    out = []
+    if plan.split > 0 and plan.head.algo == ALGO_SSJOIN:
+        out.append(plan.head.scheme)
+    if plan.split < num_entities and plan.tail.algo == ALGO_SSJOIN:
+        out.append(plan.tail.scheme)
+    return tuple(out) or ("prefix",)
+
+
+def replan_choice(stats, params, stale_plan: Plan, objective: str,
+                  options) -> tuple[Plan, float]:
+    """§5 search under ``params``, floored by the stale plan.
+
+    Returns ``(choice, stale_cost)``. The choice is the searched plan
+    or — when the stale plan still models at least as cheap — the stale
+    plan re-costed under the fresh params; either way
+    ``choice.predicted_cost <= stale_cost`` by construction.
+    """
+    searched = search_plan(stats, params, objective, options=options)
+    stale_cost = plan_cost(stats, params, stale_plan, objective)
+    if stale_cost <= searched.predicted_cost:
+        keep = dataclasses.replace(
+            stale_plan,
+            split=min(max(stale_plan.split, 0), stats.num_entities),
+            objective=objective,
+            predicted_cost=stale_cost,
+        )
+        return keep, stale_cost
+    return searched, stale_cost
+
+
+def realized_gain(metrics, event: dict) -> float:
+    """Measured per-doc stage-time gain across one swap event.
+
+    Splits ``metrics.batch_records`` at the event's epoch (batches
+    pinned to earlier epochs ran the old plan) and compares mean
+    ``(probe_s + verify_s) / rows``; positive means the swap made
+    serving cheaper. NaN until both sides have batches.
+    """
+    epoch = event.get("epoch")
+    if epoch is None or not event.get("swapped"):
+        return float("nan")
+    pre = [r for r in metrics.batch_records if r["epoch"] < epoch]
+    post = [r for r in metrics.batch_records if r["epoch"] >= epoch]
+    if not pre or not post:
+        return float("nan")
+
+    def per_doc(rs):
+        return (sum(r["probe_s"] + r["verify_s"] for r in rs)
+                / max(sum(r["rows"] for r in rs), 1))
+
+    before, after = per_doc(pre), per_doc(post)
+    if before <= 0:
+        return float("nan")
+    return (before - after) / before
+
+
+class Replanner:
+    """Drives the observe→refit→replan→swap loop over a session cache.
+
+    One instance per ``ExtractionService``; sessions opt in lazily via
+    ``attach`` (the service attaches at dispatch). ``step`` is the
+    whole loop body and is safe to call from any thread — session swaps
+    serialize on the session's own apply lock, and the per-session
+    bookkeeping (baseline, cooldown) is only touched here.
+    """
+
+    def __init__(self, sessions, config: ReplanConfig,
+                 metrics=None, clock=time.monotonic):
+        self.sessions = sessions
+        self.config = config
+        self.metrics = metrics
+        self.clock = clock
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+        self._step_lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        if not self.config.thread or self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name="replanner"
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.config.interval_s):
+            try:
+                self.step()
+            except Exception:  # noqa: BLE001 — telemetry must not kill serving
+                pass
+
+    # ----------------------------------------------------------------- loop
+    def attach(self, sess) -> ObservedStats:
+        """Ensure the session has an ObservedStats (idempotent)."""
+        if sess.observed is None:
+            sess.observed = ObservedStats(
+                capacity=sess.config.observe_capacity,
+                halflife_windows=self.config.halflife_windows,
+            )
+        return sess.observed
+
+    def step(self, now: float | None = None) -> list[dict]:
+        """One loop pass over every attached session; returns the events
+        fired (also recorded on ``self.metrics``)."""
+        with self._step_lock:
+            events = []
+            for sess in list(self.sessions._sessions.values()):
+                ev = self._step_session(sess, now)
+                if ev is not None:
+                    events.append(ev)
+            return events
+
+    def _baseline(self, sess, obs: ObservedStats) -> PlanBaseline:
+        cp = sess.cost_params
+        density = obs.density
+        if cp is not None and cp.lane_density > 0:
+            density = cp.lane_density  # the plan's calibration snapshot
+        return PlanBaseline(
+            density=density,
+            doc_len=obs.doc_len_mean,
+            probe_s_per_window=obs.probe_s_per_window,
+            verify_s_per_survivor=obs.verify_s_per_survivor,
+            at_batches=obs.batches,
+        )
+
+    def _drifts(self, base: PlanBaseline, obs: ObservedStats) -> dict:
+        def rel(now_v, base_v):
+            if not (math.isfinite(now_v) and math.isfinite(base_v)):
+                return 0.0
+            return abs(now_v - base_v) / max(abs(base_v), _TINY)
+
+        return {
+            "lane_density": rel(obs.density, base.density),
+            "doc_len": rel(obs.doc_len_mean, base.doc_len),
+            "probe_time": rel(obs.probe_s_per_window,
+                              base.probe_s_per_window),
+            "verify_time": rel(obs.verify_s_per_survivor,
+                               base.verify_s_per_survivor),
+        }
+
+    def _trigger(self, drifts: dict) -> str | None:
+        cfg = self.config
+        bounds = {
+            "lane_density": cfg.density_drift,
+            "doc_len": cfg.doc_len_drift,
+            "probe_time": cfg.time_drift,
+            "verify_time": cfg.time_drift,
+        }
+        for name, value in drifts.items():
+            if math.isfinite(bounds[name]) and value > bounds[name]:
+                return name
+        return None
+
+    def _step_session(self, sess, now: float | None) -> dict | None:
+        obs = sess.observed
+        if obs is None or sess.replan_pinned:
+            return None
+        if obs.batches < self.config.min_batches:
+            return None
+        if sess.replan_baseline is None:
+            # warm-up done: freeze the snapshot drift is measured against
+            sess.replan_baseline = self._baseline(sess, obs)
+            return None
+        if obs.batches - sess.replan_baseline.at_batches \
+                < self.config.cooldown_batches:
+            return None
+        drifts = self._drifts(sess.replan_baseline, obs)
+        reason = self._trigger(drifts)
+        if reason is None:
+            return None
+        event = self._replan(sess, obs, reason, drifts, now)
+        # reset the baseline after *any* trigger (swapped or not): the
+        # new plan/constants absorbed this drift, and re-triggering on
+        # the same shift every step would thrash
+        sess.replan_baseline = self._baseline(sess, obs)
+        if self.metrics is not None:
+            self.metrics.record_replan(event)
+        return event
+
+    def _replan(self, sess, obs: ObservedStats, reason: str,
+                drifts: dict, now: float | None) -> dict:
+        docs = obs.sample_docs()
+        E = sess.operator.dictionary.num_entities
+        old_params = sess.cost_params or CostParams(num_devices=1)
+        params = old_params
+        if self.config.refit:
+            params = refit_params(
+                old_params, obs, schemes=plan_schemes(sess.plan, E)
+            )
+        event = {
+            "t": self.clock() if now is None else now,
+            "session": sess.key,
+            "reason": reason,
+            "drift": {k: float(v) for k, v in drifts.items()},
+            "at_batches": obs.batches,
+            "old_plan": sess.plan.describe(E),
+            "swapped": False,
+        }
+        if docs is None:
+            event["skipped"] = "no observed documents"
+            return event
+        # result-preservation guard: only consider options in the current
+        # plan's semantics class (a swap must change cost, never matches)
+        sem = plan_semantics(sess.plan, E)
+        if len(sem) != 1:
+            event["skipped"] = "mixed-semantics plan"
+            sess.cost_params = params
+            return event
+        options = tuple(o for o in sess.config.options
+                        if scheme_semantics(o[1]) in sem)
+        if not options:
+            event["skipped"] = "no semantics-preserving options"
+            sess.cost_params = params
+            return event
+        stats = sess.operator.gather_statistics(docs, total_docs=len(docs))
+        choice, stale_cost = replan_choice(
+            stats, params, sess.plan, sess.config.objective, options,
+        )
+        params = dataclasses.replace(
+            params, lane_density=measured_lane_density(stats)
+        )
+        gain = (stale_cost - choice.predicted_cost) / max(stale_cost, _TINY)
+        event.update(
+            new_plan=choice.describe(E),
+            stale_cost_s=float(stale_cost),
+            new_cost_s=float(choice.predicted_cost),
+            predicted_gain=float(gain),
+        )
+        changed = (effective_plan_key(choice, E)
+                   != effective_plan_key(sess.plan, E))
+        if changed and gain >= self.config.min_gain:
+            state = sess.apply_replan(choice, params, reason=reason)
+            event["swapped"] = True
+            event["epoch"] = state.epoch
+        else:
+            # no swap, but keep the refitted constants + fresh density:
+            # the model stays honest even while the plan stands
+            sess.cost_params = params
+        return event

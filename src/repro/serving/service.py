@@ -48,7 +48,7 @@ from repro.extraction.results import (
 )
 from repro.extraction.sharded import shard_lane_steady
 from repro.serving.batcher import BatcherConfig, MicroBatch, MicroBatcher
-from repro.serving.metrics import ServingMetrics
+from repro.serving.metrics import ServingMetrics, stage_trace
 from repro.serving.pools import DevicePools, make_pools
 from repro.serving.queue import AdmissionQueue, ExtractRequest
 from repro.serving.session import SessionCache
@@ -89,14 +89,19 @@ def one_shot_reference(session, docs, epoch: int | None = None
 class _Handoff:
     """One probed batch in flight between the pools."""
 
-    __slots__ = ("batch", "lanes", "probe_s")
+    __slots__ = ("batch", "lanes", "probe_s", "windows", "survivors")
 
-    def __init__(self, batch: MicroBatch, lanes: list, probe_s: float):
+    def __init__(self, batch: MicroBatch, lanes: list, probe_s: float,
+                 windows: int = 0, survivors: int = 0):
         self.batch = batch
         # per plan side: (count [1] i32, cand [1, NC] i32,
         #                 keys [1, NC, 2] u32 | None  — fused variant)
         self.lanes = lanes
         self.probe_s = probe_s
+        # telemetry for the continuous-calibration loop: enumerated
+        # candidate windows and true filter survivors of this batch
+        self.windows = windows
+        self.survivors = survivors
 
 
 class ExtractionService:
@@ -111,6 +116,7 @@ class ExtractionService:
         overlap: bool = True,
         clock: Callable[[], float] = time.monotonic,
         session_quota: int | None = None,
+        replan=None,
     ):
         self.sessions = sessions
         self.pools = pools or make_pools()
@@ -134,6 +140,17 @@ class ExtractionService:
         self._lock = threading.Lock()  # completed-list + metrics writes
         self._ingest_lock = threading.Lock()  # batcher is not thread-safe
         self.errors: list[tuple[int, Exception]] = []  # (batch_id, exc)
+        # continuous calibration: ``replan`` is a serving.replan.
+        # ReplanConfig (None = off). With replan.thread the loop polls
+        # in the background; otherwise it steps inline from tick() —
+        # deterministic on a virtual clock.
+        self.replanner = None
+        if replan is not None:
+            from repro.serving.replan import Replanner
+
+            self.replanner = Replanner(
+                sessions, replan, metrics=self.metrics, clock=clock
+            )
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -149,6 +166,8 @@ class ExtractionService:
             t = threading.Thread(target=fn, daemon=True, name=fn.__name__)
             t.start()
             self._workers.append(t)
+        if self.replanner is not None:
+            self.replanner.start()  # no-op unless ReplanConfig.thread
 
     def stop(self) -> None:
         """Drain and terminate the workers.
@@ -161,6 +180,8 @@ class ExtractionService:
         try:
             self.drain()
         finally:
+            if self.replanner is not None:
+                self.replanner.stop()
             self._flush_q.put(None)
             for t in self._workers:
                 t.join()
@@ -242,7 +263,12 @@ class ExtractionService:
         with self._ingest_lock:  # concurrent producers may tick via submit
             for req in self.queue.take():
                 self.batcher.add(req)
-            return self._dispatch(self.batcher.poll(now))
+            n = self._dispatch(self.batcher.poll(now))
+        if self.replanner is not None and not self.replanner.config.thread:
+            # inline replan mode: the loop steps on the ingest thread
+            # (outside the ingest lock — a swap only takes session locks)
+            self.replanner.step(now)
+        return n
 
     def drain(self) -> None:
         """Force-flush everything pending and wait until it completes.
@@ -275,6 +301,8 @@ class ExtractionService:
             sess = self.sessions.get(b.session_key)
             sess.requests += b.rows
             sess.batches += 1
+            if self.replanner is not None:
+                self.replanner.attach(sess)  # lazy ObservedStats
             # epoch stamp + pin: the batch executes on the dictionary
             # epoch current at dispatch, even if apply_delta hot-swaps
             # the session before its probe/verify runs (the swap
@@ -300,23 +328,40 @@ class ExtractionService:
         state = sess.state_for(batch.epoch)
         dev = self.pools.probe_device(batch.batch_id)
         t0 = time.perf_counter()
-        docs = jax.device_put(jnp.asarray(batch.docs), dev)
-        lanes = []
-        for i, eside in enumerate(state.sides):
-            stream_stats: dict = {}
-            lane, count, keys, tile_max, sizing = shard_lane_steady(
-                docs, 0, state.max_len, eside.flt, eside.params,
-                batch.spec.tile_docs,
-                width_hint=sess.lane_hint(i, batch.bucket, batch.epoch),
-                stream_stats=stream_stats,
+        with stage_trace("eejoin.serve.probe"):
+            docs = jax.device_put(jnp.asarray(batch.docs), dev)
+            lanes = []
+            for i, eside in enumerate(state.sides):
+                stream_stats: dict = {}
+                lane, count, keys, tile_max, sizing = shard_lane_steady(
+                    docs, 0, state.max_len, eside.flt, eside.params,
+                    batch.spec.tile_docs,
+                    width_hint=sess.lane_hint(i, batch.bucket, batch.epoch),
+                    stream_stats=stream_stats,
+                )
+                sess.update_lane_hint(i, batch.bucket, batch.epoch, tile_max)
+                with self._lock:
+                    self.metrics.record_sizing(sizing)
+                    self.metrics.record_stream(stream_stats,
+                                               observed=sess.observed)
+                lanes.append((count, lane, keys))
+            jax.block_until_ready(lanes)
+        probe_s = time.perf_counter() - t0
+        windows = survivors = 0
+        if sess.observed is not None:
+            # telemetry for the replan loop: enumerated-window count
+            # (drift denominator) + true survivor totals per side, and
+            # the raw rows into the recent-document ring the next
+            # replan gathers statistics from. Host-side numpy; skipped
+            # entirely when replanning is off.
+            from repro.serving.replan import batch_windows
+
+            windows = batch_windows(batch.docs, state.max_len)
+            survivors = sum(
+                int(np.asarray(count).sum()) for count, _, _ in lanes
             )
-            sess.update_lane_hint(i, batch.bucket, batch.epoch, tile_max)
-            with self._lock:
-                self.metrics.record_sizing(sizing)
-                self.metrics.record_stream(stream_stats)
-            lanes.append((count, lane, keys))
-        jax.block_until_ready(lanes)
-        return _Handoff(batch, lanes, time.perf_counter() - t0)
+            sess.observed.observe_docs(batch.docs)
+        return _Handoff(batch, lanes, probe_s, windows, survivors)
 
     def _verify_batch(self, handoff: _Handoff) -> None:
         """Verify stage: lanes -> candidate windows -> probe+verify join.
@@ -334,38 +379,45 @@ class ExtractionService:
         state = sess.state_for(batch.epoch)
         dev = self.pools.verify_device(batch.batch_id)
         t0 = time.perf_counter()
-        # the handoff traffic: per side one (1 + NC)-int lane, plus the
-        # raw [D, T] tokens the verify pool gathers windows from
-        docs = jax.device_put(jnp.asarray(batch.docs), dev)
-        out: Matches | None = None
-        overflow = 0
-        for eside, (count, lane, keys) in zip(state.sides, handoff.lanes):
-            count, lane = jax.device_put((count, lane), dev)
-            NC = eside.params.max_candidates
-            sel, ok, n = select_from_tiles(count, lane, NC)
-            cands = engine.candidates_from_flat(
-                docs, sel, ok, n, state.max_len, NC
-            )
-            if keys is not None:
-                # fused variant keys rode the handoff lane: the verify
-                # pool attaches them instead of recomputing set hashes
-                keys = jax.device_put(keys, dev)
-                cands = engine.attach_variant_keys(
-                    cands, gather_from_tiles(count, keys, NC)
+        with stage_trace("eejoin.serve.verify"):
+            # the handoff traffic: per side one (1 + NC)-int lane, plus
+            # the raw [D, T] tokens the verify pool gathers windows from
+            docs = jax.device_put(jnp.asarray(batch.docs), dev)
+            out: Matches | None = None
+            overflow = 0
+            for eside, (count, lane, keys) in zip(state.sides, handoff.lanes):
+                count, lane = jax.device_put((count, lane), dev)
+                NC = eside.params.max_candidates
+                sel, ok, n = select_from_tiles(count, lane, NC)
+                cands = engine.candidates_from_flat(
+                    docs, sel, ok, n, state.max_len, NC
                 )
-            overflow += int(cands["overflow"])
-            m = epoch_side_matches(cands, eside, sess.config.result_capacity)
-            out = m if out is None else merge_matches(
-                out, m, sess.config.result_capacity
-            )
-        if state.has_tombstones:
-            out = filter_matches(out, state.live, sess.config.result_capacity)
-        jax.block_until_ready(out)
+                if keys is not None:
+                    # fused variant keys rode the handoff lane: the verify
+                    # pool attaches them instead of recomputing set hashes
+                    keys = jax.device_put(keys, dev)
+                    cands = engine.attach_variant_keys(
+                        cands, gather_from_tiles(count, keys, NC)
+                    )
+                overflow += int(cands["overflow"])
+                m = epoch_side_matches(
+                    cands, eside, sess.config.result_capacity
+                )
+                out = m if out is None else merge_matches(
+                    out, m, sess.config.result_capacity
+                )
+            if state.has_tombstones:
+                out = filter_matches(
+                    out, state.live, sess.config.result_capacity
+                )
+            jax.block_until_ready(out)
         verify_s = time.perf_counter() - t0
-        self._complete(batch, out, handoff.probe_s, verify_s, overflow)
+        self._complete(batch, out, handoff.probe_s, verify_s, overflow,
+                       windows=handoff.windows, survivors=handoff.survivors)
 
     def _complete(self, batch: MicroBatch, matches: Matches,
-                  probe_s: float, verify_s: float, overflow: int) -> None:
+                  probe_s: float, verify_s: float, overflow: int,
+                  windows: int = 0, survivors: int = 0) -> None:
         """Fan the batch's Matches back out to its requests (host side)."""
         now = self.clock()
         doc = np.asarray(matches.doc)
@@ -405,6 +457,9 @@ class ExtractionService:
                 verify_s=verify_s,
                 overflow=overflow,
                 epoch=batch.epoch,
+                windows=windows,
+                survivors=survivors,
+                observed=sess.observed,
             )
 
     def _fail_batch(self, batch: MicroBatch, exc: Exception) -> None:

@@ -115,6 +115,15 @@ class DictionarySession:
     # another epoch is stale (density may have shifted with the delta)
     # and falls back to a count pass.
     lane_hints: dict = dataclasses.field(default_factory=dict)
+    # ---- continuous calibration (serving.replan) ----
+    # per-session serving telemetry (ObservedStats), attached lazily by
+    # the service's Replanner; None when replanning is off.
+    observed: object | None = None
+    # the frozen PlanBaseline drift is measured against (replanner-owned)
+    replan_baseline: object | None = None
+    # operator escape hatch: a pinned plan is never replanned (see
+    # pin_plan / docs/serving.md "how to pin a plan")
+    replan_pinned: bool = False
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
     # serializes whole apply_delta calls (read chain -> build -> install).
     # Separate from _lock on purpose: the segment build is slow and must
@@ -168,6 +177,52 @@ class DictionarySession:
                          tile_max: int) -> None:
         if tile_max >= 0:
             self.lane_hints[(side_idx, bucket)] = (epoch, int(tile_max))
+
+    def pin_plan(self, pinned: bool = True) -> None:
+        """Pin (or unpin) the current plan against online replanning.
+
+        A pinned session still feeds its ``ObservedStats`` (telemetry
+        keeps flowing) but the replanner skips it entirely — no drift
+        evaluation, no refit, no swap.
+        """
+        self.replan_pinned = pinned
+
+    def apply_replan(self, plan: Plan, cost_params: CostParams,
+                     reason: str = "drift") -> _upd.EpochState:
+        """Hot-swap to a new epoch running ``plan`` — same dictionary.
+
+        The online-replanning analogue of ``apply_delta``: the new
+        epoch shares the dictionary version's entity id space (no
+        renumbering, segments and tombstones carry over — see
+        ``updates.builders.replan_epoch``), so a replan never changes
+        the results of any batch, only its cost. In-flight batches
+        pinned to earlier epochs finish on their admitted state;
+        admissions after this call probe and verify under the new plan.
+        Serializes with ``apply_delta`` on ``_apply_lock``.
+        """
+        with self._apply_lock:
+            cur = self.current_state
+            state = _upd.replan_epoch(cur, plan, self.config, cost_params)
+            with self._lock:
+                old_epoch = self.epoch
+                self.epochs[state.epoch] = state
+                self.epoch = state.epoch
+                if self.epochs[old_epoch].pins <= 0:
+                    del self.epochs[old_epoch]
+                self.plan = state.plan
+                self.prepared = PreparedPlan(
+                    plan=state.plan,
+                    sides=[es.base for es in state.sides],
+                    max_entity_len=state.max_len,
+                )
+                self.cost_params = cost_params
+            self.maintenance_log.append({
+                "epoch": state.epoch,
+                "action": "replan",
+                "reason": reason,
+                "open_segments": state.open_segments,
+            })
+            return state
 
     def plan_maintenance(
         self,

@@ -301,6 +301,53 @@ def rebuild_epoch(
     return out, op
 
 
+def replan_epoch(
+    state: EpochState,
+    plan: Plan,
+    config: EEJoinConfig,
+    cost_params: CostParams,
+) -> EpochState:
+    """Next epoch with a *new plan* over the *same dictionary version*.
+
+    The online-replanning swap unit: entity ids, segments, tombstones
+    and the live mask all carry over unchanged — only the prepared base
+    structures are rebuilt under ``plan`` (and every open segment
+    re-attached to the new tail side, filter union refreshed). Because
+    no id renumbers and every plan computes the same match set, a
+    replan can never change the results of any batch — pinned in-flight
+    batches keep their epoch, new admissions pay the new plan's cost.
+
+    The epoch number bumps *through the version* (not just the state):
+    a later ``apply_delta`` numbers its epoch ``version.epoch + 1``, so
+    leaving the version untouched would collide a future delta epoch
+    with this one.
+    """
+    version = dataclasses.replace(state.version, epoch=state.version.epoch + 1)
+    op = EEJoinOperator(version.base, config)
+    prepared = op.prepare(plan, cost_params)
+    out = initial_epoch(version.base, plan, prepared)
+    tail = out.sides[-1]
+    for segment, offset in zip(version.segments, version.segment_offsets):
+        tail.segments.append(
+            build_segment_side(
+                segment, offset, tail.base, config,
+                cost_params.hbm_budget_bytes,
+            )
+        )
+        if config.use_filter and tail.filter_words is not None:
+            segf = build_ish_filter(
+                segment, config.gamma, num_bits=config.filter_bits
+            )
+            tail.filter_words = union_filter_words(tail.filter_words, segf)
+            tail.flt = (jnp.asarray(tail.filter_words), segf.num_bits,
+                        segf.num_hashes)
+    out.epoch = version.epoch
+    out.version = version
+    out.live = jnp.asarray(version.live_mask())
+    out.has_tombstones = bool(version.tombstones.any())
+    return out
+
+
 # --------------------------------------------------------------------------
 # Execution over an epoch
 # --------------------------------------------------------------------------

@@ -1,0 +1,219 @@
+"""Drift-injection harness for the continuous-calibration tests.
+
+Builds a deterministic two-phase serving workload on a virtual clock:
+one shared dictionary, per-phase document streams with shifted mention
+frequency / document length / dictionary skew (``repro.data.synth.
+drift_docs``), and a service driver that keeps batches in flight across
+a replan swap. The engineered cost model (``drift_cost_params``) scales
+the index-probe constants so the §5 search robustly prefers
+``index:prefix`` pricing-wise *not at all* — making ``ssjoin:prefix``
+the unambiguous post-drift winner — while both options live in the same
+similarity-semantics class, so every plan the replanner may install
+computes the identical match set (serving stays bit-comparable to
+``one_shot_reference`` across the swap).
+
+Used by ``tests/test_replan.py`` and mirrored (without pytest) by
+``benchmarks/bench_replan.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.cost_model import CostParams
+from repro.core.eejoin import EEJoinConfig
+from repro.data.synth import drift_docs, skewed_mention_probs
+from repro.serving import (
+    BatcherConfig,
+    ExtractionService,
+    ReplanConfig,
+    SessionCache,
+    make_pools,
+)
+from repro.serving.session import pure_plan
+
+NUM_ENTITIES = 24
+# index-probe constants scaled 100x: a synthetic host where the padded
+# index is expensive, so the post-drift search flips to ssjoin:prefix
+# with a ~3x cost margin (robust to sampling noise on the doc ring)
+INDEX_COST_SCALE = 100.0
+
+
+class SimClock:
+    """Monotonic virtual clock; the tests advance it explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One leg of a drift workload (all knobs the paper's stats track)."""
+
+    num_docs: int
+    doc_len: int
+    mention_kind: str  # skewed_mention_probs kind, or "none"
+    mentions_per_doc: float
+    seed: int
+
+
+# phase A: short docs, head-skewed sparse mentions — the distribution
+# the session's plan was (notionally) chosen under
+PHASE_A = Phase(num_docs=48, doc_len=48, mention_kind="head",
+                mentions_per_doc=0.5, seed=11)
+# phase B: doubled doc length, tail-skewed dense mentions — every drift
+# axis (doc_len, survivor density, dictionary skew) shifts at once
+PHASE_B = Phase(num_docs=64, doc_len=96, mention_kind="tail",
+                mentions_per_doc=6.0, seed=12)
+
+
+def phase_docs(dictionary, phase: Phase) -> np.ndarray:
+    probs = (None if phase.mention_kind == "none"
+             else skewed_mention_probs(dictionary.num_entities,
+                                       phase.mention_kind))
+    return drift_docs(
+        dictionary,
+        num_docs=phase.num_docs,
+        doc_len=phase.doc_len,
+        mention_probs=probs,
+        mentions_per_doc=phase.mentions_per_doc,
+        seed=phase.seed,
+    )
+
+
+def drift_config() -> EEJoinConfig:
+    # capacities sized for the *one-shot reference* over the full
+    # two-phase doc set (a single execute sees every candidate window
+    # at once; undersized lanes would silently overflow the reference)
+    return EEJoinConfig(
+        use_kernel=True,
+        max_candidates=32768,
+        result_capacity=16384,
+        options=(("index", "prefix"), ("ssjoin", "prefix")),
+        observe_capacity=64,
+    )
+
+
+def drift_cost_params() -> CostParams:
+    base = CostParams(num_devices=1)
+    return dataclasses.replace(
+        base,
+        c_probe_index=base.c_probe_index * INDEX_COST_SCALE,
+        c_verify_index=base.c_verify_index * INDEX_COST_SCALE,
+    )
+
+
+def drift_replan_config(**overrides) -> ReplanConfig:
+    """Inline (tick-driven) replanner tuned for the two-phase workload.
+
+    ``refit=False`` keeps the plan-convergence assertion deterministic
+    (refit folds in measured wall times, which vary run to run);
+    ``time_drift=inf`` disables the wall-time trigger for the same
+    reason. The fast EWMA halflife makes the density/doc-len estimators
+    converge within the first post-shift batch, so the baseline reset
+    after the swap lands on phase-B values and no second trigger fires.
+    """
+    kw = dict(
+        thread=False,
+        refit=False,
+        min_batches=3,
+        cooldown_batches=2,
+        density_drift=0.5,
+        doc_len_drift=0.5,
+        time_drift=float("inf"),
+        halflife_windows=200.0,
+    )
+    kw.update(overrides)
+    return ReplanConfig(**kw)
+
+
+def build_session(dictionary, config=None, cost_params=None):
+    """Session forced onto ``pure index:prefix`` under the engineered
+    cost model — the stale plan the drift leg replans away from."""
+    cache = SessionCache()
+    sess = cache.get_or_create(
+        dictionary,
+        config or drift_config(),
+        plan=pure_plan("prefix", algo="index"),
+        cost_params=cost_params or drift_cost_params(),
+    )
+    return cache, sess
+
+
+def run_phases(
+    cache,
+    sess,
+    phases_docs,
+    replan_cfg: ReplanConfig | None,
+    *,
+    batch_docs: int = 8,
+    rate: float = 600.0,
+    wait_for_swap: bool = False,
+    wait_for_swap_at: int | None = None,
+    wait_timeout_s: float = 90.0,
+    overlap: bool = True,
+):
+    """Serve the phases back-to-back; returns ``(service, all_docs)``.
+
+    The stream drains between phases so the baseline freezes on pure
+    phase-A telemetry; within the final phase, submission never waits
+    on completion. With ``wait_for_swap`` the virtual clock keeps
+    ticking (real-time bounded) until the replanner's swap lands —
+    at ``wait_for_swap_at`` documents *into the final phase* when set
+    (so the remaining documents are admitted on the post-swap epoch:
+    batches run before, in flight across, and after the swap), else
+    after the final phase is fully submitted.
+    """
+    clock = SimClock()
+    svc = ExtractionService(
+        cache,
+        pools=make_pools(),
+        batcher_config=BatcherConfig(max_batch_docs=batch_docs,
+                                     max_delay_s=0.01),
+        queue_capacity=4096,
+        overlap=overlap,
+        clock=clock,
+        replan=replan_cfg,
+    )
+    all_docs: list[np.ndarray] = []
+    gap = 1.0 / rate
+
+    def await_swap():
+        deadline = time.monotonic() + wait_timeout_s
+        while (svc.metrics.replan_swaps == 0
+               and time.monotonic() < deadline):
+            svc.tick(now=clock.advance(1e-3))
+            time.sleep(2e-3)
+
+    with svc:
+        doc_id = 0
+        for p, docs in enumerate(phases_docs):
+            final = p == len(phases_docs) - 1
+            for j, row in enumerate(docs):
+                if final and wait_for_swap and j == wait_for_swap_at:
+                    await_swap()
+                svc.submit(doc_id, row, sess.key, now=clock.advance(gap))
+                svc.tick(now=clock.t)
+                doc_id += 1
+                all_docs.append(row)
+            if not final:
+                # phase boundary: let this phase's telemetry land fully,
+                # then give the inline replanner steps to see it (first
+                # step freezes the baseline)
+                svc.drain()
+                svc.tick(now=clock.t)
+                svc.tick(now=clock.t)
+        if wait_for_swap and svc.metrics.replan_swaps == 0:
+            await_swap()
+        svc.drain()
+        svc.tick(now=clock.t)
+    return svc, all_docs

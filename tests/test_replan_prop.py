@@ -1,0 +1,141 @@
+"""Property-based statement of the continuous-calibration contracts.
+
+Hypothesis drives the three replan-loop invariants the drift tests
+assume (skipped cleanly when hypothesis is not installed):
+
+* ``refit_params`` is idempotent on a stationary stream — once the
+  constants match the measurements, refitting against the same
+  measurements is the identity (the scale factors are degree-1
+  homogeneous, so the second fit's factors are exactly 1);
+* the plan ``replan_choice`` returns never models costlier than the
+  stale plan under the same refitted params (the search is floored by
+  the stale plan re-costed);
+* the ``Ewma`` estimator is invariant to batch-boundary placement — a
+  segment of n units at one rate folds identically whether it arrives
+  whole or split at any point.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.calibrate import refit_params
+from repro.core.cost_model import OBJ_JOB, OBJ_WORK, CostParams
+from repro.core.eejoin import EEJoinConfig, EEJoinOperator
+from repro.core.plan import PlanSide
+from repro.core.search import plan_cost
+from repro.data.synth import make_corpus
+from repro.serving.replan import Ewma, replan_choice
+from repro.serving.session import pure_plan
+
+OPTIONS = (("index", "prefix"), ("ssjoin", "word"),
+           ("ssjoin", "prefix"), ("ssjoin", "lsh"))
+
+_corpus = make_corpus(num_docs=16, doc_len=48, vocab_size=256,
+                      num_entities=16, max_entity_len=4, seed=7)
+_op = EEJoinOperator(
+    _corpus.dictionary,
+    EEJoinConfig(max_candidates=2048, result_capacity=4096,
+                 options=OPTIONS),
+)
+_stats = _op.gather_statistics(_corpus.doc_tokens,
+                               total_docs=_corpus.doc_tokens.shape[0])
+E = _corpus.dictionary.num_entities
+
+
+class _Obs:
+    """Duck-typed stand-in for ObservedStats (what refit_params reads)."""
+
+    def __init__(self, density, probe, verify):
+        self.density = density
+        self.probe_s_per_window = probe
+        self.verify_s_per_survivor = verify
+
+
+def _params_close(a: CostParams, b: CostParams, rel=1e-9) -> bool:
+    for f in dataclasses.fields(CostParams):
+        x, y = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(x, dict):
+            if set(x) != set(y) or any(
+                not math.isclose(x[k], y[k], rel_tol=rel) for k in x
+            ):
+                return False
+        elif isinstance(x, float):
+            if not math.isclose(x, y, rel_tol=rel, abs_tol=1e-300):
+                return False
+        elif x != y:
+            return False
+    return True
+
+
+_rate = st.floats(1e-12, 1e-3, allow_nan=False, allow_infinity=False)
+_density = st.floats(1e-6, 0.9, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(density=_density, probe=_rate, verify=_rate,
+       schemes=st.lists(st.sampled_from(("word", "prefix", "lsh")),
+                        min_size=1, max_size=2, unique=True))
+def test_refit_idempotent_on_stationary_stream(density, probe, verify,
+                                               schemes):
+    obs = _Obs(density, probe, verify)
+    p1 = refit_params(CostParams(num_devices=1), obs,
+                      schemes=tuple(schemes))
+    p2 = refit_params(p1, obs, schemes=tuple(schemes))
+    assert _params_close(p1, p2)
+
+
+def test_refit_cold_observed_is_identity():
+    base = CostParams(num_devices=1)
+    nan = float("nan")
+    assert _params_close(refit_params(base, _Obs(nan, nan, nan)), base)
+
+
+_side = st.sampled_from([PlanSide(a, s) for a, s in OPTIONS])
+
+
+@settings(max_examples=40, deadline=None)
+@given(split=st.integers(0, E), head=_side, tail=_side,
+       objective=st.sampled_from((OBJ_WORK, OBJ_JOB)),
+       density=_density, probe=_rate, verify=_rate)
+def test_replanned_cost_never_exceeds_stale(split, head, tail, objective,
+                                            density, probe, verify):
+    params = refit_params(CostParams(num_devices=1),
+                          _Obs(density, probe, verify))
+    stale = dataclasses.replace(pure_plan("prefix"), split=split,
+                                head=head, tail=tail, objective=objective)
+    choice, stale_cost = replan_choice(_stats, params, stale, objective,
+                                       OPTIONS)
+    assert stale_cost == pytest.approx(
+        plan_cost(_stats, params, stale, objective))
+    assert choice.predicted_cost <= stale_cost * (1 + 1e-9)
+
+
+_weight = st.floats(1e-3, 1e5, allow_nan=False, allow_infinity=False)
+_x = st.floats(-1e6, 1e6, allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=100, deadline=None)
+@given(history=st.lists(st.tuples(_x, _weight), min_size=0, max_size=5),
+       x=_x, w=_weight, cut=st.floats(1e-6, 1 - 1e-6),
+       halflife=st.floats(1.0, 1e5))
+def test_ewma_invariant_to_batch_boundaries(history, x, w, cut, halflife):
+    """Folding (x, w) whole == folding (x, w*cut) then (x, w*(1-cut)),
+    from any prior state."""
+    whole, split = Ewma(halflife), Ewma(halflife)
+    for hx, hw in history:
+        whole.update(hx, hw)
+        split.update(hx, hw)
+    whole.update(x, w)
+    split.update(x, w * cut)
+    split.update(x, w * (1.0 - cut))
+    if math.isnan(whole.value):
+        assert math.isnan(split.value)
+    else:
+        assert math.isclose(whole.value, split.value,
+                            rel_tol=1e-6, abs_tol=1e-9)

@@ -763,3 +763,68 @@ def test_rebuild_resets_drift_baseline(small_corpus):
     sess.apply_delta(_delta_from(small_corpus, rows=(2,)),
                      sample_docs=sample)
     assert sess.maintenance_log[-1]["action"] != "rebuild"
+
+
+# --------------------------------------------- metrics edge cases (PR 7)
+def test_metrics_percentiles_empty_and_single_sample():
+    import math
+
+    from repro.serving.metrics import percentiles
+
+    empty = percentiles([])
+    assert set(empty) == {"p50", "p95", "p99"}
+    assert all(math.isnan(v) for v in empty.values())
+    single = percentiles([0.25])
+    assert all(v == pytest.approx(0.25) for v in single.values())
+
+
+def test_metrics_summary_before_any_batch():
+    """summary() on a fresh collector: zero counters, NaN-not-crash
+    for every rate and percentile, and empty replan telemetry."""
+    import math
+
+    from repro.serving.metrics import ServingMetrics
+
+    s = ServingMetrics().summary()
+    assert s["submitted"] == s["rejected"] == s["completed"] == 0
+    assert s["batches"] == 0 and s["queue_depth_max"] == 0
+    assert s["occupancy_mean"] == 0.0 and s["probe_s_mean"] == 0.0
+    assert math.isnan(s["latency_p50_s"]) and math.isnan(s["docs_per_s"])
+    assert s["replans"] == 0 and s["replan_events"] == []
+    # and the whole report stays JSON-serializable
+    import json
+
+    json.dumps(s)
+
+
+def test_metrics_record_stream_partial_dicts():
+    """Partial / empty / unknown-keyed stream dicts fold cleanly, and
+    the same dict fans out to an attached ObservedStats."""
+    from repro.serving import ObservedStats
+    from repro.serving.metrics import ServingMetrics
+
+    m = ServingMetrics()
+    obs = ObservedStats(capacity=4)
+    m.record_stream({})
+    m.record_stream({"tiles_streamed": 3}, observed=obs)
+    m.record_stream({"dma_waits": 2, "streamed_launches": 1,
+                     "some_future_counter": 9}, observed=obs)
+    assert m.tiles_streamed == 3 and m.dma_waits == 2
+    assert m.streamed_launches == 1 and m.checkpoint_writes == 0
+    assert obs.stream_counters["tiles_streamed"] == 3
+    assert obs.stream_counters["some_future_counter"] == 9
+
+
+def test_metrics_record_replan_counters():
+    from repro.serving.metrics import ServingMetrics
+
+    m = ServingMetrics()
+    m.record_replan({"reason": "doc_len", "swapped": False})
+    m.record_replan({"reason": "lane_density", "swapped": True, "epoch": 1})
+    s = m.summary()
+    assert s["replans"] == 2 and s["replan_swaps"] == 1
+    assert [e["reason"] for e in s["replan_events"]] == [
+        "doc_len", "lane_density"]
+    # summary deep-copies events: mutating the report must not leak back
+    s["replan_events"][0]["reason"] = "mutated"
+    assert m.replan_events[0]["reason"] == "doc_len"
