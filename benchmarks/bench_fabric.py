@@ -1,0 +1,191 @@
+"""Serving-fabric bench: lane transport throughput + delta replication.
+
+Two questions, parity asserted in-bench so drift fails CI:
+
+* **Transport**: what does the framed lane channel cost? The
+  probe→verify handoff frame (``lanes_to_wire`` container inside one
+  crc-guarded wire frame) is round-tripped through an in-process
+  loopback channel and a real TCP socket pair at several lane
+  geometries; every echoed payload is asserted byte-identical before
+  it counts. The loopback row isolates codec cost; the socket row adds
+  the kernel's loopback TCP path — the gap is the wire tax a remote
+  verify pool pays per batch.
+* **Replication catch-up**: a replica that missed K deltas can catch
+  up two ways — replay the shipped delta chain (epoch-exact, the
+  fabric's normal path) or re-bootstrap from a fresh compacted
+  snapshot. Rows time both against the same lag and report the bytes
+  each moves as the dictionary grows; the caught-up replica's answers
+  are asserted bit-identical to ``one_shot_reference`` at the final
+  epoch either way.
+
+Rows land in ``results/bench/fabric{,_smoke}.json``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.eejoin import EEJoinConfig
+from repro.data.synth import make_corpus
+from repro.extraction.sharded import lanes_from_wire, lanes_to_wire
+from repro.fabric.cluster import ClusterCoordinator
+from repro.fabric.replica import ReplicaServer, encode_request
+from repro.fabric.transport import (
+    Endpoint,
+    loopback_pair,
+    serve_frames,
+    socket_pair,
+)
+from repro.fabric.wire import FT_ACK, FT_LANES, FT_REQUEST, matches_from_wire
+from repro.serving import SessionCache, one_shot_reference
+from repro.serving.session import pure_plan
+from repro.updates.delta import random_delta
+
+
+def _echo_server(channel):
+    def handler(frame):
+        return FT_ACK, frame.payload
+
+    th = threading.Thread(target=serve_frames, args=(channel, handler),
+                          kwargs={"idle_timeout": 30.0}, daemon=True)
+    th.start()
+    return th
+
+
+def _lane_payload(rng, G: int, NC: int, D: int, T: int) -> bytes:
+    docs = rng.integers(1, 1000, size=(D, T)).astype(np.int32)
+    count = rng.integers(0, NC, size=G).astype(np.int32)
+    cand = np.full((G, NC), -1, np.int32)
+    for g in range(G):
+        n = int(count[g])
+        cand[g, :n] = np.sort(rng.choice(100_000, size=n, replace=False))
+    keys = rng.integers(0, 2**32, size=(G, NC, 2),
+                        dtype=np.uint64).astype(np.uint32)
+    return lanes_to_wire(docs, [(count, cand, keys)],
+                         {"session": "bench", "epoch": 0})
+
+
+def bench_transport(smoke: bool) -> list[dict]:
+    rng = np.random.default_rng(0)
+    geometries = [(1, 512, 4, 64)] if smoke else [
+        (1, 512, 4, 64), (2, 2048, 8, 128), (4, 8192, 16, 256),
+    ]
+    iters = 10 if smoke else 50
+    rows = []
+    for G, NC, D, T in geometries:
+        payload = _lane_payload(rng, G, NC, D, T)
+        for chan_name, make_pair in (("loopback", loopback_pair),
+                                     ("socket", socket_pair)):
+            a, b = make_pair()
+            th = _echo_server(b)
+            ep = Endpoint(a, timeout=30.0)
+            ep.call(FT_LANES, payload)  # warm the path
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                resp = ep.call(FT_LANES, payload)
+                assert resp.payload == payload, "echo parity broke"
+            dt = time.perf_counter() - t0
+            # decoded arrays must survive the trip bit-exactly too
+            _meta, docs2, lanes2 = lanes_from_wire(resp.payload)
+            assert docs2.dtype == np.int32 and lanes2[0][2].dtype == np.uint32
+            a.close()
+            th.join(timeout=10)
+            rows.append({
+                "channel": chan_name,
+                "lanes_G": G, "lane_NC": NC, "docs": D, "doc_len": T,
+                "frame_bytes": len(payload),
+                "rpc_s": dt / iters,
+                "mb_per_s": len(payload) * 2 * iters / dt / 1e6,
+            })
+    return rows
+
+
+def bench_replication(smoke: bool) -> list[dict]:
+    sizes = [128] if smoke else [128, 512, 2048]
+    lags = [4] if smoke else [4, 16]
+    rows = []
+    for num_entities in sizes:
+        for lag in lags:
+            corpus = make_corpus(num_docs=8, doc_len=48, vocab_size=64,
+                                 num_entities=num_entities, seed=5)
+            cfg = EEJoinConfig(gamma=0.8, max_candidates=4096,
+                               result_capacity=8192, use_kernel=True)
+            cache = SessionCache()
+            sess = cache.get_or_create(corpus.dictionary, cfg,
+                                       plan=pure_plan("word"))
+            rng = np.random.default_rng(6)
+
+            # a lagging replica: bootstrapped at epoch 0, then the
+            # coordinator applies `lag` deltas it never hears about.
+            # Socket channel so the byte counters measure real wire.
+            a, b = socket_pair()
+            srv = ReplicaServer("lagger")
+            th = threading.Thread(target=serve_frames,
+                                  args=(b, srv.handle),
+                                  kwargs={"idle_timeout": 60.0},
+                                  daemon=True)
+            th.start()
+            coord = ClusterCoordinator({"lagger": Endpoint(a, timeout=60.0)})
+            coord.add_session(sess)
+            h = coord.handles["lagger"]
+            for _ in range(lag):
+                sess.apply_delta(
+                    random_delta(rng, sess.current_state.version, 64)
+                )
+
+            # path 1: replay the delta chain (the fabric's sync path)
+            tx0 = getattr(a, "bytes_sent", 0)
+            t0 = time.perf_counter()
+            coord.sync_session(sess.key)
+            catchup_s = time.perf_counter() - t0
+            catchup_bytes = getattr(a, "bytes_sent", 0) - tx0
+            assert h.acked[sess.key] == sess.epoch, "catch-up diverged"
+
+            docs = np.asarray([corpus.doc_tokens[i] for i in range(4)])
+            frame = h.endpoint.call(
+                FT_REQUEST, encode_request(sess.key, sess.epoch, docs)
+            )
+            _m, matches = matches_from_wire(frame.payload)
+            want = one_shot_reference(sess, list(docs), epoch=sess.epoch)
+            assert matches.to_set() == want, "replayed replica drifted"
+
+            # path 2: fresh snapshot of the same end state (what a
+            # brand-new replica would bootstrap from). Snapshots need a
+            # compacted base, so compact a coordinator-side copy first.
+            from repro.fabric.replica import snapshot_session
+            t0 = time.perf_counter()
+            sess.apply_delta(
+                random_delta(rng, sess.current_state.version, 64),
+                force_action="compact",
+            )
+            snap = snapshot_session(sess)
+            snapshot_s = time.perf_counter() - t0
+            coord.sync_session(sess.key)  # keep the replica current too
+            assert h.acked[sess.key] == sess.epoch
+
+            coord.shutdown()
+            th.join(timeout=10)
+            rows.append({
+                "entities": num_entities,
+                "lag_deltas": lag,
+                "final_epoch": int(sess.epoch),
+                "catchup_s": catchup_s,
+                "catchup_bytes": catchup_bytes,
+                "snapshot_s": snapshot_s,
+                "snapshot_bytes": len(snap),
+                "parity_matches": len(want),
+            })
+    return rows
+
+
+def main(smoke: bool = False) -> None:
+    emit("fabric_smoke" if smoke else "fabric", bench_transport(smoke))
+    emit("fabric_replication_smoke" if smoke else "fabric_replication",
+         bench_replication(smoke))
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,9 @@ Sections:
     serving      async probe/verify serving: load vs latency percentiles
     replan       continuous calibration: replanner overhead + drift swap
     updates      live dictionary deltas: absorb vs rebuild + epoch swap
+    fabric       multi-host serving fabric: lane transport throughput
+                 (loopback vs socket) + delta-replication catch-up vs
+                 snapshot bootstrap, parity asserted in-bench
     roofline     deliverable (g) reader over results/dryrun/
 """
 from __future__ import annotations
@@ -29,6 +32,7 @@ from benchmarks import (
     bench_algorithms,
     bench_corpus,
     bench_cost_model,
+    bench_fabric,
     bench_hybrid,
     bench_kernels,
     bench_replan,
@@ -52,6 +56,7 @@ SECTIONS = [
     ("serving", bench_serving.main),
     ("replan", bench_replan.main),
     ("updates", bench_updates.main),
+    ("fabric", bench_fabric.main),
     ("roofline", bench_roofline.main),
 ]
 
@@ -83,6 +88,9 @@ def main() -> None:
         t0 = time.time()
         bench_updates.main(smoke=True)
         print(f"# [updates --smoke] done in {time.time() - t0:.1f}s", flush=True)
+        t0 = time.time()
+        bench_fabric.main(smoke=True)
+        print(f"# [fabric --smoke] done in {time.time() - t0:.1f}s", flush=True)
         return
     failures = []
     for name, fn in SECTIONS:

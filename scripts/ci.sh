@@ -27,9 +27,14 @@ python -m pytest -x -q
 # plan asserted equal to the post-drift oracle search and bit-parity
 # held across the swap), and the live-updates scenario
 # (delta absorb vs from-scratch rebuild with oracle parity + the
-# epoch hot-swap serving leg). Parity is asserted inside each bench,
+# epoch hot-swap serving leg), and the serving-fabric scenario (framed
+# lane transport over loopback vs TCP socket with echoed payloads
+# asserted byte-identical, plus delta-replication catch-up vs snapshot
+# bootstrap with the caught-up replica's answers asserted bit-equal to
+# the one-shot reference). Parity is asserted inside each bench,
 # so drift fails CI; rows land in results/bench/{kernels,sharded,
-# variant,corpus,corpus_spill,serving,replan,updates}_smoke.json.
+# variant,corpus,corpus_spill,serving,replan,updates,fabric,
+# fabric_replication}_smoke.json.
 python -m benchmarks.run --smoke
 
 # Serving smoke leg: the real-time (threaded, double-buffered) service
@@ -37,6 +42,13 @@ python -m benchmarks.run --smoke
 # the served matches against a one-shot eejoin.execute.
 python -m repro.launch.serve_extract --requests 16 --rate 400 \
     --plan forced --check --replan
+
+# Cluster smoke leg: two replica *processes* over TCP socket channels,
+# mixed workload with live replicated deltas mid-stream; --check
+# asserts every routed response bit-identical to one_shot_reference at
+# the request's admitted epoch.
+python -m repro.launch.serve_cluster --replicas 2 --requests 16 \
+    --deltas 2 --check
 
 # Docs link check: every relative link in docs/*.md and README.md must
 # resolve inside the repo.

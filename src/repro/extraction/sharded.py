@@ -542,6 +542,58 @@ def shard_lane_steady(docs, row_offset, max_len, flt, params,
             keys, tile_max, sizing)
 
 
+def lanes_to_wire(docs, lanes, meta: dict | None = None) -> bytes:
+    """Frame a probed batch's lanes for transport (fabric FT_LANES).
+
+    ``lanes`` is the probe→verify handoff list: per plan side one
+    ``(count [G] i32, cand [G, NC] i32, keys [G, NC, 2] u32 | None)``
+    triple as produced by ``shard_lane`` / ``shard_lane_steady``;
+    ``docs`` the batch's ``[D, T]`` token rows the remote verify pool
+    gathers candidate windows from. The payload is the sha256-guarded
+    npz container of ``updates.delta.pack_arrays``, so a truncated or
+    cross-wired lane frame is detected at decode, and round-trips are
+    bit-exact — remote ``select_from_tiles`` merges stay bit-identical
+    to the in-process handoff.
+    """
+    from repro.updates.delta import pack_arrays
+
+    m = dict(meta or {})
+    m["kind"] = "lane_frame"
+    m["n_sides"] = len(lanes)
+    arrays = {"docs": np.asarray(docs, dtype=np.int32)}
+    for i, (count, cand, keys) in enumerate(lanes):
+        arrays[f"side{i}_count"] = np.asarray(count, dtype=np.int32)
+        arrays[f"side{i}_cand"] = np.asarray(cand, dtype=np.int32)
+        if keys is not None:
+            arrays[f"side{i}_keys"] = np.asarray(keys, dtype=np.uint32)
+    return pack_arrays(m, arrays)
+
+
+def lanes_from_wire(data: bytes):
+    """Inverse of ``lanes_to_wire`` → ``(meta, docs, lanes)``.
+
+    Raises ``ValueError`` (from the container's fingerprint check) on
+    any corruption; a decoded frame is the exact arrays that were
+    framed.
+    """
+    from repro.updates.delta import unpack_arrays
+
+    meta, arrays = unpack_arrays(data)
+    if meta.get("kind") != "lane_frame":
+        raise ValueError(
+            f"lanes_from_wire: payload kind {meta.get('kind')!r} is not "
+            "a lane_frame"
+        )
+    lanes = []
+    for i in range(int(meta["n_sides"])):
+        lanes.append((
+            arrays[f"side{i}_count"],
+            arrays[f"side{i}_cand"],
+            arrays.get(f"side{i}_keys"),
+        ))
+    return meta, arrays["docs"], lanes
+
+
 def sharded_filter_compact(
     doc_tokens,
     max_len: int,

@@ -1,0 +1,79 @@
+"""Multi-host serving fabric: lane transport, replication, routing.
+
+The distributed tier of the operator (ROADMAP item 1). Everything
+before this package runs on one host; ``fabric`` moves the two things
+worth moving between hosts — candidate lanes and dictionary state —
+without recomputing either:
+
+* ``wire`` — framed, versioned, crc32-guarded binary codec. One frame
+  per message; payloads are the npz+JSON containers of
+  ``updates.delta.pack_arrays``, so every payload carries its own
+  sha256 content fingerprint on top of the frame crc.
+* ``transport`` — pluggable channels (in-process loopback, TCP
+  sockets), fault injection (drop/duplicate/reorder/truncate/corrupt a
+  frame), and a seq-matched RPC endpoint with timeout + bounded retry
+  + server-side dedupe (retries are safe even for non-idempotent
+  operations like delta application).
+* ``replica`` — a verify/serving replica: bootstraps from a compacted
+  base snapshot, stays current by replaying serialized
+  ``DictionaryDelta``s (never shipped rebuilt structures), acks the
+  epoch it has applied, retains recent epochs until released.
+* ``ring`` — consistent hashing on the dictionary fingerprint, with
+  deterministic rebalance on membership change.
+* ``cluster`` — the coordinator: epoch-agreement routing (a request
+  admitted at epoch E only goes to replicas that ack >= E),
+  cluster-wide admission accounting (per-replica inflight, shed on
+  dead/lagging replicas, bounded retry with backoff), and the epoch
+  release protocol.
+
+Served results are bit-identical to single-host
+``serving.service.one_shot_reference`` at the request's admitted epoch
+— the transport moves bytes, never semantics.
+"""
+from repro.fabric.wire import (
+    FRAME_TYPES,
+    Frame,
+    FrameError,
+    decode_frame,
+    encode_frame,
+    matches_from_wire,
+    matches_to_wire,
+)
+from repro.fabric.transport import (
+    Endpoint,
+    FaultPlan,
+    FaultyChannel,
+    LoopbackChannel,
+    RemoteError,
+    SocketChannel,
+    TransportTimeout,
+    loopback_pair,
+    socket_pair,
+)
+from repro.fabric.ring import HashRing
+from repro.fabric.replica import ReplicaServer, replica_main
+from repro.fabric.cluster import ClusterCoordinator, ReplicaHandle
+
+__all__ = [
+    "ClusterCoordinator",
+    "Endpoint",
+    "FRAME_TYPES",
+    "FaultPlan",
+    "FaultyChannel",
+    "Frame",
+    "FrameError",
+    "HashRing",
+    "LoopbackChannel",
+    "RemoteError",
+    "ReplicaHandle",
+    "ReplicaServer",
+    "SocketChannel",
+    "TransportTimeout",
+    "decode_frame",
+    "encode_frame",
+    "loopback_pair",
+    "matches_from_wire",
+    "matches_to_wire",
+    "replica_main",
+    "socket_pair",
+]

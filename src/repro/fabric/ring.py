@@ -1,0 +1,98 @@
+"""Consistent hashing: dictionary fingerprints -> replica names.
+
+Sessions are identified by ``serving.session.dictionary_fingerprint``
+(sha256 over the dictionary arrays + config repr). The ring maps each
+fingerprint to an ordered preference list of replicas: ``owners(key,
+n)`` walks clockwise from the key's hash point collecting distinct
+replicas, so the coordinator gets a primary plus fallbacks for
+shed/retry in one lookup.
+
+Standard virtual-node construction: each replica contributes
+``vnodes`` points at ``sha256(f"{name}#{i}")``; a key belongs to the
+first point at or after its own hash (wrapping). Properties the
+fabric relies on, asserted in ``tests/test_fabric.py``:
+
+* deterministic — same membership, same assignment, on every host;
+* minimal movement — adding/removing a replica only remaps keys whose
+  arc it owned (~1/n of the space), everything else stays put, so a
+  membership change invalidates few replica-side session caches.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+
+
+def _point(data: str) -> int:
+    """Hash a string to a 64-bit ring position."""
+    return int.from_bytes(
+        hashlib.sha256(data.encode()).digest()[:8], "big"
+    )
+
+
+class HashRing:
+    """Consistent-hash ring over named replicas with virtual nodes."""
+
+    def __init__(self, replicas: list[str] | None = None, *,
+                 vnodes: int = 64):
+        if vnodes < 1:
+            raise ValueError(f"vnodes must be >= 1, got {vnodes}")
+        self.vnodes = vnodes
+        self._points: list[int] = []
+        self._owners: dict[int, str] = {}
+        self._members: set[str] = set()
+        for name in replicas or []:
+            self.add(name)
+
+    @property
+    def members(self) -> tuple[str, ...]:
+        return tuple(sorted(self._members))
+
+    def add(self, name: str) -> None:
+        if name in self._members:
+            raise ValueError(f"replica {name!r} already on the ring")
+        self._members.add(name)
+        for i in range(self.vnodes):
+            p = _point(f"{name}#{i}")
+            if p in self._owners:
+                # 64-bit collision across names: astronomically
+                # unlikely, but silent overwrite would desync rings
+                # built in different orders — fail loudly instead.
+                raise RuntimeError(
+                    f"ring point collision between {name!r} and "
+                    f"{self._owners[p]!r}"
+                )
+            bisect.insort(self._points, p)
+            self._owners[p] = name
+
+    def remove(self, name: str) -> None:
+        if name not in self._members:
+            raise ValueError(f"replica {name!r} not on the ring")
+        self._members.discard(name)
+        for i in range(self.vnodes):
+            p = _point(f"{name}#{i}")
+            self._points.remove(p)
+            del self._owners[p]
+
+    def owners(self, key: str, n: int = 1) -> list[str]:
+        """First ``n`` distinct replicas clockwise from ``key``'s point.
+
+        ``owners(key, 1)[0]`` is the primary; the rest are the
+        deterministic fallback order used when the primary is shed.
+        """
+        if not self._members:
+            raise ValueError("ring has no replicas")
+        n = min(n, len(self._members))
+        start = bisect.bisect_left(self._points, _point(key))
+        out: list[str] = []
+        for off in range(len(self._points)):
+            p = self._points[(start + off) % len(self._points)]
+            owner = self._owners[p]
+            if owner not in out:
+                out.append(owner)
+                if len(out) == n:
+                    break
+        return out
+
+    def primary(self, key: str) -> str:
+        return self.owners(key, 1)[0]

@@ -1,0 +1,172 @@
+"""Framed, versioned binary codec for the serving fabric.
+
+One message = one frame:
+
+========  ====  =====================================================
+offset    size  field
+========  ====  =====================================================
+0         4     magic ``b"EEF1"``
+4         1     wire version (currently 1)
+5         1     frame type (see ``FRAME_TYPES``)
+6         2     flags, little-endian u16 (reserved, must be 0)
+8         4     seq, little-endian u32 (RPC correlation id)
+12        4     payload length, little-endian u32
+16        4     crc32, little-endian u32, over header[0:16] + payload
+20        n     payload bytes
+==========================================================================
+
+The crc covers the header fields too, so a flipped type/seq/length byte
+is caught, not just payload damage. Payloads are opaque here; fabric
+messages use ``updates.delta.pack_arrays`` containers, which add their
+own sha256 content fingerprint — belt (frame crc, catches transport
+damage) and braces (payload hash, catches application-level mixups).
+
+Decoding is strict: wrong magic, unknown version/type, nonzero reserved
+flags, a length that disagrees with the bytes in hand, or a crc
+mismatch each raise ``FrameError``. A damaged frame never decodes into
+a plausible message — callers retry or surface, per
+``transport.Endpoint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"EEF1"
+WIRE_VERSION = 1
+HEADER = struct.Struct("<4sBBHIII")  # magic, ver, ftype, flags, seq, len, crc
+HEADER_SIZE = HEADER.size  # 20
+
+# Frame types. Requests flow coordinator -> replica; MATCHES / ACK /
+# ERROR / STATS flow back. LANES carries the probe->verify shard_lane
+# handoff when the verify pool is remote.
+FT_SNAPSHOT = 1   # DictionaryVersion bootstrap payload
+FT_DELTA = 2      # serialized DictionaryDelta + forced maintenance action
+FT_ACK = 3        # replica ack: {applied epoch, session}
+FT_REQUEST = 4    # full extraction request (docs) at a pinned epoch
+FT_MATCHES = 5    # extraction result arrays
+FT_LANES = 6      # shard_lane wire unit (probe->verify handoff)
+FT_RELEASE = 7    # coordinator: epoch E fully drained, replica may GC
+FT_ERROR = 8      # remote failure, payload = utf-8 message
+FT_STATS = 9      # replica metrics snapshot
+FT_SHUTDOWN = 10  # orderly replica shutdown
+
+FRAME_TYPES = {
+    FT_SNAPSHOT: "SNAPSHOT",
+    FT_DELTA: "DELTA",
+    FT_ACK: "ACK",
+    FT_REQUEST: "REQUEST",
+    FT_MATCHES: "MATCHES",
+    FT_LANES: "LANES",
+    FT_RELEASE: "RELEASE",
+    FT_ERROR: "ERROR",
+    FT_STATS: "STATS",
+    FT_SHUTDOWN: "SHUTDOWN",
+}
+
+
+class FrameError(ValueError):
+    """A frame failed structural or integrity validation."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    ftype: int
+    seq: int
+    payload: bytes
+
+    @property
+    def type_name(self) -> str:
+        return FRAME_TYPES.get(self.ftype, f"?{self.ftype}")
+
+
+def encode_frame(ftype: int, seq: int, payload: bytes) -> bytes:
+    """Serialize one frame; validates type and seq range up front."""
+    if ftype not in FRAME_TYPES:
+        raise FrameError(f"encode_frame: unknown frame type {ftype}")
+    if not 0 <= seq < 2**32:
+        raise FrameError(f"encode_frame: seq {seq} out of u32 range")
+    head = HEADER.pack(MAGIC, WIRE_VERSION, ftype, 0, seq, len(payload), 0)
+    crc = zlib.crc32(head[:16] + payload) & 0xFFFFFFFF
+    return HEADER.pack(
+        MAGIC, WIRE_VERSION, ftype, 0, seq, len(payload), crc
+    ) + payload
+
+
+def decode_frame(data: bytes) -> Frame:
+    """Parse + verify one frame; raises ``FrameError`` on any damage."""
+    if len(data) < HEADER_SIZE:
+        raise FrameError(
+            f"frame truncated: {len(data)} bytes < {HEADER_SIZE}-byte header"
+        )
+    magic, ver, ftype, flags, seq, plen, crc = HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise FrameError(f"bad magic {magic!r} (want {MAGIC!r})")
+    if ver != WIRE_VERSION:
+        raise FrameError(f"unsupported wire version {ver}")
+    if ftype not in FRAME_TYPES:
+        raise FrameError(f"unknown frame type {ftype}")
+    if flags != 0:
+        raise FrameError(f"reserved flags set: {flags:#06x}")
+    if len(data) != HEADER_SIZE + plen:
+        raise FrameError(
+            f"length mismatch: header says {plen} payload bytes, "
+            f"frame has {len(data) - HEADER_SIZE}"
+        )
+    payload = data[HEADER_SIZE:]
+    want = zlib.crc32(data[:16] + payload) & 0xFFFFFFFF
+    if crc != want:
+        raise FrameError(
+            f"crc mismatch on {FRAME_TYPES[ftype]} seq={seq}: "
+            f"frame carries {crc:#010x}, computed {want:#010x}"
+        )
+    return Frame(ftype=ftype, seq=seq, payload=bytes(payload))
+
+
+# --------------------------------------------------------------------------
+# Matches payload: the result arrays of ``extraction.results.Matches``
+# round-tripped through the npz container. ``count`` rides along so
+# capacity-overflow reporting survives the wire.
+# --------------------------------------------------------------------------
+
+
+def matches_to_wire(matches, meta: dict | None = None) -> bytes:
+    """Encode a ``Matches`` batch (host arrays) for the wire."""
+    from repro.updates.delta import pack_arrays
+
+    m = dict(meta or {})
+    m["kind"] = "matches"
+    return pack_arrays(
+        m,
+        {
+            "doc": np.asarray(matches.doc, dtype=np.int32),
+            "pos": np.asarray(matches.pos, dtype=np.int32),
+            "length": np.asarray(matches.length, dtype=np.int32),
+            "entity": np.asarray(matches.entity, dtype=np.int32),
+            "score": np.asarray(matches.score, dtype=np.float32),
+            "count": np.asarray(matches.count, dtype=np.int32),
+        },
+    )
+
+
+def matches_from_wire(data: bytes):
+    """Decode a matches payload -> (meta, Matches of numpy arrays)."""
+    from repro.extraction.results import Matches
+    from repro.updates.delta import unpack_arrays
+
+    meta, arrays = unpack_arrays(data)
+    if meta.get("kind") != "matches":
+        raise FrameError(
+            f"matches_from_wire: payload kind {meta.get('kind')!r}"
+        )
+    return meta, Matches(
+        doc=arrays["doc"],
+        pos=arrays["pos"],
+        length=arrays["length"],
+        entity=arrays["entity"],
+        score=arrays["score"],
+        count=arrays["count"],
+    )

@@ -125,6 +125,12 @@ class ServingMetrics:
     replans: int = 0
     replan_swaps: int = 0
     replan_events: list = dataclasses.field(default_factory=list)
+    # multi-host fabric (fabric.cluster): per-replica transport and
+    # routing counters — lane bytes on the wire, frames retried,
+    # replication lag in epochs, routed/shed — folded in by
+    # ClusterCoordinator.poll_stats and surfaced in the serve_cluster
+    # report
+    replicas: dict = dataclasses.field(default_factory=dict)
     first_arrival_s: float = float("nan")
     last_done_s: float = float("nan")
 
@@ -208,6 +214,11 @@ class ServingMetrics:
             self.replan_swaps += 1
         self.replan_events.append(dict(event))
 
+    def record_replica(self, name: str, row: dict) -> None:
+        """Latest per-replica fabric counters (overwrites the old row —
+        these are cumulative gauges, not samples)."""
+        self.replicas[name] = dict(row)
+
     def record_done(self, latency_s: float, done_s: float) -> None:
         self.completed += 1
         self.latencies_s.append(latency_s)
@@ -255,6 +266,22 @@ class ServingMetrics:
             "replans": self.replans,
             "replan_swaps": self.replan_swaps,
             "replan_events": [dict(e) for e in self.replan_events],
+            "replicas": {
+                name: {
+                    "alive": row.get("alive", True),
+                    "routed": row.get("routed", 0),
+                    "shed": row.get("shed", 0),
+                    "failures": row.get("failures", 0),
+                    "frames_retried": row.get("frames_retried", 0),
+                    "lane_bytes": row.get("lane_bytes", 0),
+                    "bytes_sent": row.get("bytes_sent", 0),
+                    "bytes_received": row.get("bytes_received", 0),
+                    "replication_lag_epochs": row.get(
+                        "replication_lag_epochs", 0
+                    ),
+                }
+                for name, row in self.replicas.items()
+            },
         }
 
 

@@ -117,6 +117,7 @@ class ExtractionService:
         clock: Callable[[], float] = time.monotonic,
         session_quota: int | None = None,
         replan=None,
+        remote_verify=None,
     ):
         self.sessions = sessions
         self.pools = pools or make_pools()
@@ -151,6 +152,13 @@ class ExtractionService:
             self.replanner = Replanner(
                 sessions, replan, metrics=self.metrics, clock=clock
             )
+        # multi-host fabric: when set, the verify pool sits behind a
+        # transport channel — probed lanes are framed and shipped to an
+        # epoch-agreed replica instead of joined on the local verify
+        # device (``fabric.cluster.ClusterCoordinator.verify_lanes`` or
+        # anything duck-typed like it). The probe stage, batching,
+        # epoch pinning and result fan-out are unchanged.
+        self.remote_verify = remote_verify
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -376,6 +384,9 @@ class ExtractionService:
 
         batch = handoff.batch
         sess = self.sessions.get(batch.session_key)
+        if self.remote_verify is not None:
+            self._verify_batch_remote(handoff, sess)
+            return
         state = sess.state_for(batch.epoch)
         dev = self.pools.verify_device(batch.batch_id)
         t0 = time.perf_counter()
@@ -413,6 +424,32 @@ class ExtractionService:
             jax.block_until_ready(out)
         verify_s = time.perf_counter() - t0
         self._complete(batch, out, handoff.probe_s, verify_s, overflow,
+                       windows=handoff.windows, survivors=handoff.survivors)
+
+    def _verify_batch_remote(self, handoff: _Handoff, sess) -> None:
+        """Remote verify: frame the lanes, ship, complete on the reply.
+
+        The lanes come back to host memory once (they are a few KB —
+        the whole point of the compaction), get framed by
+        ``sharded.lanes_to_wire`` and routed to a replica that has
+        acked the batch's epoch; the replica runs the identical verify
+        sequence over its replicated epoch state
+        (``fabric.replica.verify_lanes_on_state``), so the reply is
+        bit-identical to the local join.
+        """
+        batch = handoff.batch
+        t0 = time.perf_counter()
+        with stage_trace("eejoin.serve.verify_remote"):
+            lanes = [
+                (np.asarray(count), np.asarray(lane),
+                 None if keys is None else np.asarray(keys))
+                for count, lane, keys in handoff.lanes
+            ]
+            matches, overflow = self.remote_verify.verify_lanes(
+                batch.session_key, batch.epoch, batch.docs, lanes
+            )
+        verify_s = time.perf_counter() - t0
+        self._complete(batch, matches, handoff.probe_s, verify_s, overflow,
                        windows=handoff.windows, survivors=handoff.survivors)
 
     def _complete(self, batch: MicroBatch, matches: Matches,

@@ -110,6 +110,17 @@ class DictionarySession:
     epochs: dict = dataclasses.field(default_factory=dict)
     epoch: int = 0
     maintenance_log: list = dataclasses.field(default_factory=list)
+    # replication source of truth (fabric.cluster): every applied
+    # change in order, carrying exactly what a replica needs to replay
+    # it deterministically — the delta + the maintenance action
+    # actually taken (compaction renumbers ids, so replicas must never
+    # re-decide), the sample docs when the action was a rebuild, and
+    # the (plan, cost_params) pair for replans.
+    delta_log: list = dataclasses.field(default_factory=list)
+    # the (possibly telemetry-refitted) constants the last
+    # plan_maintenance call actually costed with — inspection hook for
+    # tests and the serve report
+    last_maintenance_params: CostParams | None = None
     # steady-state lane sizing hints: (side_idx, bucket) -> (epoch,
     # measured per-tile survivor max of the last batch). A hint from
     # another epoch is stale (density may have shifted with the delta)
@@ -222,6 +233,13 @@ class DictionarySession:
                 "reason": reason,
                 "open_segments": state.open_segments,
             })
+            self.delta_log.append({
+                "parent_epoch": cur.epoch,
+                "epoch": state.epoch,
+                "action": "replan",
+                "plan": plan,
+                "cost_params": cost_params,
+            })
             return state
 
     def plan_maintenance(
@@ -244,6 +262,22 @@ class DictionarySession:
         """
         cur = self.current_state
         cp = self.cost_params or CostParams(num_devices=1)
+        if self.observed is not None:
+            # continuous calibration reaches the maintenance planner
+            # too: the absorb/compact/rebuild comparison runs over the
+            # same measurement-rescaled constants the extraction replan
+            # uses, so both planners see one consistent cost world. The
+            # refit is pure and idempotent (core.calibrate.refit_params)
+            # — a cold ObservedStats refits to the identity.
+            from repro.core.calibrate import refit_params
+            from repro.serving.replan import plan_schemes
+
+            cp = refit_params(
+                cp, self.observed,
+                schemes=plan_schemes(self.plan,
+                                     self.dictionary.num_entities),
+            )
+        self.last_maintenance_params = cp
         return maintenance_plan(
             cp,
             live_entities=cur.version.num_live + delta.num_added
@@ -381,6 +415,20 @@ class DictionarySession:
             "compact_s": decision.compact_s,
             "overhead_per_batch_s": decision.overhead_per_batch_s,
             "stat_drift": decision.stat_drift,
+        })
+        self.delta_log.append({
+            "parent_epoch": cur.epoch,
+            "epoch": state.epoch,
+            "action": action,
+            "delta": delta,
+            # replicas replaying a rebuild need the exact statistics
+            # sample the plan search ran over; other actions replay
+            # sample-free (forced action skips the drift question)
+            "sample_docs": (
+                np.asarray(sample_docs)
+                if action == MAINT_REBUILD and sample_docs is not None
+                else None
+            ),
         })
         return state
 

@@ -15,8 +15,13 @@ under, new admissions see the new epoch.
 from repro.updates.delta import (
     DictionaryDelta,
     DictionaryVersion,
+    arrays_fingerprint,
+    dictionary_from_arrays,
+    dictionary_to_arrays,
+    pack_arrays,
     random_delta,
     segment_dictionary,
+    unpack_arrays,
 )
 from repro.updates.builders import (
     EpochSide,
@@ -40,16 +45,21 @@ __all__ = [
     "EpochSide",
     "EpochState",
     "absorb_delta",
+    "arrays_fingerprint",
     "build_segment_side",
+    "dictionary_from_arrays",
+    "dictionary_to_arrays",
     "compact_epoch",
     "epoch_matches",
     "epoch_side_matches",
     "execute_epoch",
     "initial_epoch",
     "oracle_matches",
+    "pack_arrays",
     "random_delta",
     "rebuild_epoch",
     "rebuild_oracle",
     "segment_dictionary",
     "union_filter_words",
+    "unpack_arrays",
 ]

@@ -35,10 +35,121 @@ decide when accumulated segments + tombstones are worth folding away.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import io
+import json
 
 import numpy as np
 
 from repro.core.dictionary import PAD, Dictionary
+
+# --------------------------------------------------------------------------
+# Wire container: npz body + JSON header, sha256-fingerprinted.
+#
+# The persistence / replication format of the updates subsystem (and the
+# payload container of ``repro.fabric.wire``): a dict of named numpy
+# arrays saved through ``np.savez`` (lossless for every dtype we ship)
+# with a JSON metadata header riding along as a uint8 array. The header
+# carries a sha256 over the arrays' (name, dtype, shape, bytes) — the
+# same content-hash discipline as ``sharded.job_manifest`` /
+# ``serving.dictionary_fingerprint`` — so a decoder detects truncation
+# or mixing of payloads from different objects instead of silently
+# deserializing garbage.
+# --------------------------------------------------------------------------
+
+_META_KEY = "__meta__"
+
+
+def arrays_fingerprint(arrays: dict[str, np.ndarray]) -> str:
+    """sha256 over the arrays' names, dtypes, shapes and raw bytes."""
+    h = hashlib.sha256()
+    for name in sorted(arrays):
+        a = np.ascontiguousarray(arrays[name])
+        h.update(name.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def pack_arrays(meta: dict, arrays: dict[str, np.ndarray]) -> bytes:
+    """Serialize ``(meta, arrays)`` into one self-describing byte blob.
+
+    ``meta`` must be JSON-serializable; array names must not collide
+    with the reserved ``__meta__`` key. The stored header always gains
+    a ``fingerprint`` entry over the arrays (see
+    ``arrays_fingerprint``); ``unpack_arrays`` re-hashes and compares.
+    """
+    if _META_KEY in arrays:
+        raise ValueError(f"pack_arrays: array name {_META_KEY!r} is reserved")
+    meta = dict(meta)
+    meta["fingerprint"] = arrays_fingerprint(arrays)
+    header = np.frombuffer(json.dumps(meta, sort_keys=True).encode(),
+                           dtype=np.uint8)
+    buf = io.BytesIO()
+    np.savez(buf, **{_META_KEY: header}, **arrays)
+    return buf.getvalue()
+
+
+def unpack_arrays(data: bytes) -> tuple[dict, dict[str, np.ndarray]]:
+    """Inverse of ``pack_arrays``; raises ValueError on any corruption.
+
+    Bad zip structure, a missing header, or a fingerprint mismatch all
+    raise — a truncated or cross-wired payload never deserializes
+    quietly into a plausible-but-wrong object.
+    """
+    try:
+        with np.load(io.BytesIO(data), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as exc:
+        raise ValueError(f"unpack_arrays: undecodable payload ({exc})") from exc
+    header = arrays.pop(_META_KEY, None)
+    if header is None:
+        raise ValueError("unpack_arrays: payload has no __meta__ header")
+    meta = json.loads(bytes(header.tobytes()).decode())
+    want = meta.get("fingerprint")
+    got = arrays_fingerprint(arrays)
+    if want != got:
+        raise ValueError(
+            f"unpack_arrays: content fingerprint mismatch (header "
+            f"{str(want)[:12]}..., arrays {got[:12]}...): payload is "
+            "truncated or belongs to a different object"
+        )
+    return meta, arrays
+
+
+def dictionary_to_arrays(d: Dictionary, prefix: str = "",
+                         token_weight: bool = True) -> dict[str, np.ndarray]:
+    """Flatten a ``Dictionary`` into named arrays (``prefix`` namespaces
+    several dictionaries — base + segments — inside one payload)."""
+    out = {
+        f"{prefix}tokens": np.asarray(d.tokens, dtype=np.int32),
+        f"{prefix}lengths": np.asarray(d.lengths, dtype=np.int32),
+        f"{prefix}freq": np.asarray(d.freq, dtype=np.float32),
+        f"{prefix}entity_weight": np.asarray(d.entity_weight,
+                                             dtype=np.float32),
+    }
+    if token_weight:
+        out[f"{prefix}token_weight"] = np.asarray(d.token_weight,
+                                                  dtype=np.float32)
+    return out
+
+
+def dictionary_from_arrays(arrays: dict, prefix: str = "",
+                           token_weight: np.ndarray | None = None
+                           ) -> Dictionary:
+    """Inverse of ``dictionary_to_arrays`` (``token_weight`` may be
+    shared externally, e.g. segments reuse the base's table)."""
+    tw = (arrays[f"{prefix}token_weight"]
+          if token_weight is None else token_weight)
+    return Dictionary(
+        tokens=np.asarray(arrays[f"{prefix}tokens"], dtype=np.int32),
+        lengths=np.asarray(arrays[f"{prefix}lengths"], dtype=np.int32),
+        freq=np.asarray(arrays[f"{prefix}freq"], dtype=np.float32),
+        token_weight=np.asarray(tw, dtype=np.float32),
+        entity_weight=np.asarray(arrays[f"{prefix}entity_weight"],
+                                 dtype=np.float32),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +186,49 @@ class DictionaryDelta:
     @property
     def empty(self) -> bool:
         return not self.added and not self.tombstones
+
+    def to_bytes(self) -> bytes:
+        """Stable wire encoding (npz + JSON header, sha256-guarded).
+
+        The ragged ``added`` token lists flatten to one int32 array plus
+        per-entity lengths; ``from_bytes`` round-trips bit-exactly, so a
+        replica replaying shipped deltas builds byte-identical segments.
+        """
+        flat = [t for ent in self.added for t in ent]
+        arrays = {
+            "added_flat": np.asarray(flat, dtype=np.int32),
+            "added_lengths": np.asarray(
+                [len(ent) for ent in self.added], dtype=np.int32
+            ),
+            "tombstones": np.asarray(self.tombstones, dtype=np.int64),
+        }
+        if self.added_freq is not None:
+            arrays["added_freq"] = np.asarray(self.added_freq,
+                                              dtype=np.float32)
+        return pack_arrays({"kind": "dictionary_delta", "v": 1}, arrays)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "DictionaryDelta":
+        meta, arrays = unpack_arrays(data)
+        if meta.get("kind") != "dictionary_delta":
+            raise ValueError(
+                f"DictionaryDelta.from_bytes: payload kind "
+                f"{meta.get('kind')!r} is not a dictionary_delta"
+            )
+        flat = arrays["added_flat"]
+        added = []
+        off = 0
+        for n in arrays["added_lengths"]:
+            n = int(n)
+            added.append(tuple(int(t) for t in flat[off:off + n]))
+            off += n
+        freq = arrays.get("added_freq")
+        return cls(
+            added=tuple(added),
+            tombstones=tuple(int(t) for t in arrays["tombstones"]),
+            added_freq=(tuple(float(f) for f in freq)
+                        if freq is not None else None),
+        )
 
 
 def segment_dictionary(
@@ -278,6 +432,56 @@ class DictionaryVersion:
             return self.num_live
         s = max(int(base_split), 0)
         return s - int(self.tombstones[:s].sum())
+
+    def to_bytes(self) -> bytes:
+        """Snapshot encoding: base + segments + offsets + tombstones.
+
+        Segments share the base's token-weight table, so only the base
+        ships one; ``from_bytes`` re-threads it. This is the replica
+        bootstrap payload — a replica loading the snapshot and then
+        replaying the same delta stream holds a version byte-identical
+        to the coordinator's.
+        """
+        arrays = dictionary_to_arrays(self.base, prefix="base_")
+        for i, seg in enumerate(self.segments):
+            arrays.update(
+                dictionary_to_arrays(seg, prefix=f"seg{i}_",
+                                     token_weight=False)
+            )
+        arrays["segment_offsets"] = np.asarray(self.segment_offsets,
+                                               dtype=np.int64)
+        arrays["tombstones"] = np.asarray(self.tombstones, dtype=bool)
+        meta = {
+            "kind": "dictionary_version",
+            "v": 1,
+            "epoch": int(self.epoch),
+            "num_segments": len(self.segments),
+        }
+        return pack_arrays(meta, arrays)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "DictionaryVersion":
+        meta, arrays = unpack_arrays(data)
+        if meta.get("kind") != "dictionary_version":
+            raise ValueError(
+                f"DictionaryVersion.from_bytes: payload kind "
+                f"{meta.get('kind')!r} is not a dictionary_version"
+            )
+        base = dictionary_from_arrays(arrays, prefix="base_")
+        segments = tuple(
+            dictionary_from_arrays(arrays, prefix=f"seg{i}_",
+                                   token_weight=base.token_weight)
+            for i in range(int(meta["num_segments"]))
+        )
+        return cls(
+            epoch=int(meta["epoch"]),
+            base=base,
+            segments=segments,
+            segment_offsets=tuple(
+                int(o) for o in arrays["segment_offsets"]
+            ),
+            tombstones=np.asarray(arrays["tombstones"], dtype=bool),
+        )
 
     def compact(self) -> tuple["DictionaryVersion", np.ndarray]:
         """Fold segments + tombstones into a fresh single-base version.

@@ -215,6 +215,54 @@ def test_pinned_plan_is_never_replanned(corpus):
     assert event["reason"] == "lane_density"
 
 
+# ------------------------------------------------------ maintenance refit
+def test_maintenance_plan_costs_with_refitted_constants(corpus):
+    """The absorb/compact/rebuild planner runs over the same
+    measurement-rescaled constants the extraction replan uses: with a
+    warm ``ObservedStats`` attached, ``plan_maintenance`` refits the
+    probe/verify families first (inspectable via
+    ``last_maintenance_params``); a cold observer is the identity."""
+    from repro.core.calibrate import refit_params
+    from repro.serving.replan import ObservedStats, plan_schemes
+    from repro.updates.delta import random_delta
+
+    cache, sess = build_session(corpus.dictionary)
+    rng = np.random.default_rng(77)
+    delta = random_delta(rng, sess.current_state.version, 2048)
+    base_cp = sess.cost_params
+
+    # cold: NaN EWMAs leave every family untouched (the refit only
+    # materializes the sig-cost dict; all scalars are the identity)
+    sess.observed = ObservedStats()
+    sess.plan_maintenance(delta)
+    cold = sess.last_maintenance_params
+    assert cold.c_verify_pair == base_cp.c_verify_pair
+    assert cold.c_probe == base_cp.c_probe
+    assert cold.c_enum_per_window == base_cp.c_enum_per_window
+    assert cold.sig_cost("prefix") == base_cp.sig_cost("prefix")
+
+    # warm: feed telemetry that is 100x the model's canonical verify
+    # time — the verify family must rescale, and the maintenance
+    # planner must see exactly the pure refit of the session params
+    sess.observed.record_batch(
+        rows=8, windows=4096, survivors=512,
+        probe_s=1e-3, verify_s=(base_cp.c_probe + base_cp.c_verify_pair)
+        * 100.0 * 512,
+    )
+    decision = sess.plan_maintenance(delta)
+    got = sess.last_maintenance_params
+    want = refit_params(
+        base_cp, sess.observed,
+        schemes=plan_schemes(sess.plan, sess.dictionary.num_entities),
+    )
+    assert got == want != base_cp
+    assert got.c_verify_pair == pytest.approx(
+        base_cp.c_verify_pair * 100.0, rel=1e-6
+    )
+    # the decision itself is still a valid maintenance action
+    assert decision.action in ("absorb", "compact", "rebuild")
+
+
 # ----------------------------------------------------------- small pieces
 def test_batch_windows_matches_definition():
     docs = np.array([[5, 6, 7, 0, 0],
